@@ -1,0 +1,68 @@
+"""Paper Table IV / RQ5: NestPipe + 2D-SP integration.
+
+Subprocess dry-run on a (4 data x 4 model) mesh comparing sparse All2All
+bytes when embedding tables shard over ALL 16 workers (pure NestPipe) vs
+restricted to the 4-worker model groups (NestPipe+2D-SP). Reports total
+vs FWP-exposed (1/N) communication — the paper's Table IV columns.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import emit
+
+_SCRIPT = r"""
+import os, json, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+sys.path.insert(0, r"{src}")
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.configs.base import NestPipeConfig, ShapeConfig
+from repro.launch.dryrun import dryrun_cell
+
+mesh = Mesh(np.asarray(jax.devices()[:16]).reshape(4, 4), ("data", "model"))
+out = {{}}
+for mode in ("nestpipe", "nestpipe+2dsp"):
+    rec = dryrun_cell("hstu-industrial", "train_rec", mesh=mesh, n_micro=4,
+                      mode=mode, reduced=True, verbose=False)
+    rl = rec["roofline"]
+    out[mode] = {{
+        "a2a_bytes": rl["collective_bytes_by_op"].get("all-to-all", 0.0),
+        "coll_s": rl["collective_s"],
+        "compute_s": rl["compute_s"],
+    }}
+print("RESULT" + json.dumps(out))
+"""
+
+
+def main():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT.format(src=src)],
+        capture_output=True, text=True, timeout=560, env=env,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"2dsp subprocess failed: {proc.stderr[-2000:]}")
+    data = None
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT"):
+            data = json.loads(line[len("RESULT"):])
+    assert data is not None
+    n_micro = 4
+    for mode, d in data.items():
+        exposed = d["coll_s"] / n_micro
+        emit(
+            f"table4_{mode.replace('+', '_')}",
+            d["coll_s"] * 1e6,
+            f"a2a_bytes={d['a2a_bytes']:.3e};exposed_comm_us={exposed*1e6:.1f};"
+            f"compute_us={d['compute_s']*1e6:.1f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

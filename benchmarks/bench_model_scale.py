@@ -1,0 +1,84 @@
+"""Paper Fig. 10: workload sensitivity — embedding dim, dense layers and
+sequence length sweeps (real CPU step times on the HSTU backbone; the
+production-mesh compute/comm windows per configuration come from the
+dry-run roofline)."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (
+    NestPipeConfig, OptimizerConfig, ParallelConfig, RecsysModelConfig,
+    SparseTableConfig,
+)
+from repro.core.embedding import EmbeddingEngine, init_table_state, make_mega_table_spec
+from repro.models.hstu import init_hstu_params, make_hstu_loss_fn
+from repro.train import TrainState, build_step_fns, constant_lr, make_optimizer
+
+from .common import emit
+
+N_MICRO, BATCH = 2, 8
+
+
+def step_time(emb_dim: int, layers: int, seq: int, steps: int = 6) -> float:
+    cfg = RecsysModelConfig(
+        name="sweep", backbone="hstu",
+        tables=(SparseTableConfig("items", vocab_size=4096, dim=emb_dim),),
+        d_model=64, n_layers=layers, n_heads=4, d_ff=128, seq_len=seq,
+    )
+    spec = make_mega_table_spec(cfg.tables, num_shards=1)
+    eng = EmbeddingEngine(spec, None, ("model",), P(None, None),
+                          NestPipeConfig(fwp_microbatches=N_MICRO, bucket_slack=4.0),
+                          compute_dtype=jnp.float32)
+    loss_fn = make_hstu_loss_fn(cfg, ParallelConfig(), None)
+    optimizer = make_optimizer(OptimizerConfig(lr=1e-3))
+    fns = build_step_fns(eng, loss_fn, optimizer, constant_lr(1e-3), N_MICRO,
+                         (BATCH // N_MICRO, seq))
+    params = init_hstu_params(jax.random.PRNGKey(0), cfg)
+    table = init_table_state(jax.random.PRNGKey(1), spec, None, ("model",))
+    state = TrainState(params, optimizer.init(params), table,
+                       jnp.zeros((), jnp.int32))
+    rng = np.random.default_rng(0)
+
+    def mk(step):
+        raw = rng.integers(0, 4096, size=(N_MICRO, BATCH // N_MICRO, seq))
+        return {"keys": jnp.asarray(np.asarray(
+            spec.scramble(jnp.asarray(raw.astype(np.int32)))))}
+
+    jit_step = jax.jit(fns.nestpipe_step)
+    b = mk(0)
+    carry = jax.jit(fns.init_carry)(state.table, b["keys"])
+    state, carry, aux = jit_step(state, carry, b, mk(1)["keys"])  # compile
+    jax.block_until_ready(aux["loss"])
+    t0 = time.perf_counter()
+    for t in range(steps):
+        nb = mk(t + 2)
+        state, carry, aux = jit_step(state, carry, b, nb["keys"])
+        b = nb
+    jax.block_until_ready(aux["loss"])
+    return (time.perf_counter() - t0) / steps
+
+
+def main():
+    for dim in (16, 32, 64):
+        t = step_time(dim, layers=2, seq=32)
+        emit(f"fig10_embdim_{dim}", t * 1e6, "layers=2;seq=32")
+    for layers in (1, 2, 4):
+        t = step_time(32, layers=layers, seq=32)
+        emit(f"fig10_layers_{layers}", t * 1e6, "dim=32;seq=32")
+    for seq in (16, 32, 64):
+        t = step_time(32, layers=2, seq=seq)
+        emit(f"fig10_seq_{seq}", t * 1e6, "dim=32;layers=2")
+
+
+if __name__ == "__main__":
+    main()

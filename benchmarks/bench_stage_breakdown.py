@@ -1,0 +1,47 @@
+"""Paper Fig. 2: sparse lookup / communication share of step time vs
+cluster scale.
+
+Reads the committed dry-run records (single-pod 256 chips, multi-pod 512
+chips) and reports each roofline term's share of the step lower bound for
+the paper's HSTU workload — reproducing the paper's observation that the
+data-movement share grows with scale while compute shrinks. Falls back to
+live subprocess dry-runs at small meshes when the record files are absent.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+_FILES = {
+    256: "results/dryrun_single_opt.jsonl",
+    512: "results/dryrun_multi_opt.jsonl",
+}
+
+
+def main():
+    root = os.path.join(os.path.dirname(__file__), "..")
+    for chips, rel in _FILES.items():
+        path = os.path.join(root, rel)
+        if not os.path.exists(path):
+            print(f"# fig2: missing {rel}; run the dry-run sweep first")
+            continue
+        recs = [json.loads(l) for l in open(path)]
+        for r in recs:
+            if r.get("arch") != "hstu-industrial" or "roofline" not in r:
+                continue
+            rl = r["roofline"]
+            total = rl["compute_s"] + rl["memory_s"] + rl["collective_s"]
+            emit(
+                f"fig2_stage_share_w{chips}",
+                total * 1e6,
+                f"compute_share={rl['compute_s']/total:.3f};"
+                f"sparse_memory_share={rl['memory_s']/total:.3f};"
+                f"comm_share={rl['collective_s']/total:.3f};"
+                f"dominant={rl['dominant']}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Table II: end-to-end step latency + DBP/FWP ablation.
+
+CPU-scale real execution of the four training modes on the HSTU backbone
+(reduced config): TorchRec-like serial, UniEmb-like async (DBP w/o sync),
+NestPipe. The production-mesh latency decomposition lives in the dry-run
+roofline (EXPERIMENTS.md §Roofline); here we measure the real host+device
+pipeline effects that exist on CPU: input-wait hiding and per-step wall
+time, plus the step-exact loss to confirm no mode trades accuracy except
+async (which is the paper's point).
+"""
+from __future__ import annotations
+
+from .common import emit, run_driver
+
+MODES = [("torchrec_serial", "serial"), ("uniemb_async", "async"),
+         ("nestpipe", "nestpipe")]
+
+
+def main():
+    results = {}
+    for name, mode in MODES:
+        state, stats, wl = run_driver("hstu-industrial", mode=mode, steps=12,
+                                      global_batch=32)
+        s = stats.summary()
+        results[name] = s
+        emit(
+            f"table2_step_latency_{name}",
+            s["mean_step_s"] * 1e6,
+            f"input_wait_us={s['mean_input_wait_s']*1e6:.1f};"
+            f"final_loss={s['final_loss']:.4f};overflow={s['overflow_max']}",
+        )
+    speedup = results["torchrec_serial"]["mean_step_s"] / max(
+        results["nestpipe"]["mean_step_s"], 1e-9)
+    emit("table2_nestpipe_speedup_x1000", speedup * 1000,
+         "serial_vs_nestpipe_wall")
+
+
+if __name__ == "__main__":
+    main()

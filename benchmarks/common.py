@@ -1,0 +1,45 @@
+"""Shared benchmark harness utilities (CPU-scale reproductions of the
+paper's tables; production-mesh numbers come from the dry-run JSONLs)."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import NestPipeConfig, OptimizerConfig, ShapeConfig
+from repro.core.dbp import DBPDriver
+from repro.launch.build import resolve
+from repro.launch.train import make_stream
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def run_driver(arch: str, *, mode: str, steps: int = 10, n_micro: int = 4,
+               global_batch: int = 32, seq_len: int = 32,
+               clustering: str = "keycentric", seed: int = 0,
+               unroll: bool = True):
+    """Run the real host pipeline on a reduced config; return (stats, wl)."""
+    wl = resolve(
+        arch, "train_4k", mesh=None, mode=mode,
+        npcfg=NestPipeConfig(fwp_microbatches=n_micro, bucket_slack=4.0,
+                             clustering=clustering, fwp_unroll=unroll),
+        reduced=True, t_chunk=32,
+        shape_override=ShapeConfig("bench", kind="train", seq_len=seq_len,
+                                   global_batch=global_batch),
+    )
+    fns, optimizer = wl.step_fns(OptimizerConfig(lr=1e-3))
+    state = wl.init_state(jax.random.PRNGKey(seed), optimizer)
+    driver = DBPDriver(
+        fns, make_stream(wl, seed), wl.n_micro, mode=mode,
+        clustering=clustering, device_fields=[k for k in wl.batch_shapes],
+    )
+    state, stats = driver.run(state, steps)
+    return state, stats, wl

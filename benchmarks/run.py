@@ -1,0 +1,59 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. CPU-scale real measurements for
+the host-pipeline effects; production-mesh numbers derive from dry-run
+artifacts (subprocessed where a different device count is needed).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,table2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    bench_2dsp,
+    bench_consistency,
+    bench_microbatch,
+    bench_model_scale,
+    bench_scaling,
+    bench_stage_breakdown,
+    bench_step_latency,
+)
+
+BENCHES = {
+    "table2": bench_step_latency.main,  # step latency + DBP/FWP ablation
+    "fig6": bench_consistency.main,  # consistency curves
+    "table3": bench_scaling.main,  # scaling 8->256 workers
+    "fig9": bench_microbatch.main,  # micro-batch sensitivity
+    "fig10": bench_model_scale.main,  # model-scale sensitivity
+    "table4": bench_2dsp.main,  # NestPipe+2D-SP integration
+    "fig2": bench_stage_breakdown.main,  # lookup/comm share vs scale
+}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="",
+                   help="comma-separated subset of: " + ",".join(BENCHES))
+    args = p.parse_args()
+    wanted = [w for w in args.only.split(",") if w] or list(BENCHES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in wanted:
+        t0 = time.time()
+        try:
+            BENCHES[name]()
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:
+            failures += 1
+            print(f"# {name} FAILED: {e}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

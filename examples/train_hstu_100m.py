@@ -1,0 +1,119 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter HSTU
+generative recommender for a few hundred steps on CPU.
+
+Parameter budget (the paper's regime — sparse-dominated):
+    items table 180,224 x 512           = 92.3M  (sparse, engine-managed)
+    HSTU dense backbone (2L, d=256)     ~  3.5M
+    total                               ~ 96M
+
+Runs the full NestPipe stack: key-centric clustering, five-stage DBP
+pipeline with dual-buffer sync, FWP frozen windows, rowwise-adagrad sparse
+updates, AdamW dense updates, periodic checkpoints + preemption guard.
+
+    PYTHONPATH=src python examples/train_hstu_100m.py [--steps 300]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.base import (
+    NestPipeConfig, OptimizerConfig, RecsysModelConfig, ShapeConfig,
+    SparseTableConfig,
+)
+from repro.configs.registry import ArchSpec
+from repro.core.dbp import DBPDriver
+from repro.dist.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.dist.fault import PreemptionGuard, StepWatchdog
+from repro.launch import build as B
+from repro.launch.train import make_stream
+from repro.utils import human_count, tree_size
+
+
+HSTU_100M = RecsysModelConfig(
+    name="hstu-100m", backbone="hstu",
+    tables=(SparseTableConfig("items", vocab_size=180_224, dim=512),),
+    d_model=256, n_layers=2, n_heads=4, d_ff=1024, seq_len=64,
+)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--batch", type=int, default=32)
+    p.add_argument("--ckpt-dir", default="/tmp/hstu100m_ckpt")
+    p.add_argument("--resume", action="store_true")
+    args = p.parse_args()
+
+    arch = ArchSpec("hstu-100m", "recsys", HSTU_100M, HSTU_100M)
+
+    # Assemble the workload directly (custom config, not in the registry).
+    from repro.configs.base import ParallelConfig
+    from repro.launch.build import Workload
+    from repro.core.embedding import EmbeddingEngine, make_mega_table_spec
+    from repro.models import build_model, train_batch_shapes
+    from jax.sharding import PartitionSpec as P
+
+    parallel = ParallelConfig(batch_axes=("data",), sparse_axes=("model",))
+    npcfg = NestPipeConfig(fwp_microbatches=4, bucket_slack=4.0)
+    bundle = build_model(arch, parallel, None)
+    spec = make_mega_table_spec(HSTU_100M.tables, num_shards=1)
+    shape = ShapeConfig("e2e", kind="train", seq_len=HSTU_100M.seq_len,
+                        global_batch=args.batch)
+    batch_shapes = train_batch_shapes(bundle, args.batch, HSTU_100M.seq_len, 4)
+    engine = EmbeddingEngine(spec, None, ("model",), P(None, None), npcfg,
+                             compute_dtype=jax.numpy.float32)
+    wl = Workload(arch=arch, shape=shape, mode="nestpipe", mesh=None,
+                  parallel=parallel, npcfg=npcfg, bundle=bundle, spec=spec,
+                  engine=engine, n_micro=4, batch_shapes=batch_shapes,
+                  keys_pspec=P(None, None))
+
+    fns, optimizer = wl.step_fns(OptimizerConfig(lr=1e-3, sparse_lr=0.05))
+    state = wl.init_state(jax.random.PRNGKey(0), optimizer)
+    sparse_n = spec.padded_rows * spec.dim
+    dense_n = tree_size(state.dense)
+    print(f"params: sparse={human_count(sparse_n)} dense={human_count(dense_n)} "
+          f"total={human_count(sparse_n + dense_n)}")
+
+    start = 0
+    if args.resume and latest_step(args.ckpt_dir) is not None:
+        state = restore_checkpoint(args.ckpt_dir, state)
+        start = int(state.step)
+        print(f"resumed from step {start}")
+
+    guard = PreemptionGuard()
+    watchdog = StepWatchdog()
+
+    def on_ckpt(st, _):
+        save_checkpoint(args.ckpt_dir, st, int(st.step))
+
+    driver = DBPDriver(fns, make_stream(wl, seed=0), 4, mode="nestpipe",
+                       device_fields=list(wl.batch_shapes),
+                       on_checkpoint=on_ckpt, ckpt_every=100)
+    t0 = time.time()
+    state, stats = driver.run(state, args.steps - start)
+    dt = time.time() - t0
+    for i, s in enumerate(stats.step_times):
+        watchdog.observe(i, s)
+    if guard.should_checkpoint:
+        on_ckpt(state, int(state.step))
+    save_checkpoint(args.ckpt_dir, state, int(state.step))
+
+    n = len(stats.losses)
+    head = float(np.mean(stats.losses[: max(n // 10, 1)]))
+    tail = float(np.mean(stats.losses[-max(n // 10, 1):]))
+    print(f"steps={n} wall={dt:.1f}s mean_step={np.mean(stats.step_times)*1e3:.1f}ms "
+          f"QPS={args.batch * n / dt:.1f}")
+    print(f"loss {head:.4f} -> {tail:.4f} | stragglers={len(watchdog.events)} "
+          f"overflow={stats.overflow_max}")
+    assert tail < head, "training should reduce the loss"
+    print("OK — 100M HSTU trained end to end.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Config registry — populated lazily by repro.configs.registry."""
+from .base import (
+    AttentionConfig,
+    EncoderConfig,
+    FrontendConfig,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    NestPipeConfig,
+    OptimizerConfig,
+    ParallelConfig,
+    RecsysModelConfig,
+    RunConfig,
+    ShapeConfig,
+    SparseTableConfig,
+)

@@ -1,0 +1,290 @@
+"""Config dataclasses for models, shapes, parallelism and runs.
+
+Everything is a frozen dataclass so configs are hashable and usable as jit
+static arguments. Architecture files under ``repro/configs/`` instantiate
+these with the exact published hyperparameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model-side configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    causal: bool = True
+    # "chunked" = flash-style running-softmax scan (default, memory-safe),
+    # "naive" = materialized scores (small shapes / tests),
+    # "pallas" = TPU Pallas kernel (interpret-validated on CPU).
+    impl: str = "chunked"
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    qk_norm: bool = False
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    # Per-expert buffer capacity = tokens_per_device * top_k / num_experts * factor
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # Load-balancing auxiliary loss coefficient (Switch-style).
+    aux_loss_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk_size: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder stack for enc-dec models (whisper)."""
+
+    n_layers: int
+    n_frames: int  # stub conv frontend output length
+    d_model: int = 0  # 0 => same as decoder d_model
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Stub modality frontend: input_specs() provides precomputed embeddings."""
+
+    kind: str  # "audio" | "vision"
+    n_positions: int  # frames or patches
+    feature_dim: int = 0  # 0 => d_model
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # "dense" | "moe" | "hybrid" | "ssm" | "audio" | "vlm" | "recsys"
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    attention: Optional[AttentionConfig] = None
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    frontend: Optional[FrontendConfig] = None
+    # Per-layer pattern tiled over depth: tuple of (mixer, ffn) pairs where
+    # mixer in {"attn", "mamba"} and ffn in {"mlp", "moe", "none"}.
+    # None => homogeneous ("attn", "mlp"/"moe") stack.
+    layer_pattern: Optional[Tuple[Tuple[str, str], ...]] = None
+    mlp_type: str = "swiglu"  # "swiglu" | "mlp"
+    activation: str = "silu"  # "silu" | "gelu" | "relu2"
+    norm_type: str = "rmsnorm"  # "rmsnorm" | "layernorm"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # Sub-quadratic sequence mixing available (SSM / hybrid) — gates long_500k.
+    subquadratic: bool = False
+
+    @property
+    def layer_plan(self) -> Tuple[Tuple[str, str], ...]:
+        """Fully expanded per-layer (mixer, ffn) plan of length n_layers."""
+        if self.layer_pattern is not None:
+            period = len(self.layer_pattern)
+            assert self.n_layers % period == 0, (self.name, self.n_layers, period)
+            return tuple(self.layer_pattern[i % period] for i in range(self.n_layers))
+        ffn = "moe" if self.moe is not None else "mlp"
+        mixer = "mamba" if (self.mamba is not None and self.attention is None) else "attn"
+        return tuple((mixer, ffn) for _ in range(self.n_layers))
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + dense stack + head)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d  # lm head
+        for mixer, ffn in self.layer_plan:
+            if mixer == "attn" and self.attention is not None:
+                a = self.attention
+                qo = d * a.n_heads * a.head_dim * 2
+                kv = d * a.n_kv_heads * a.head_dim * 2
+                total += qo + kv
+            elif mixer == "mamba" and self.mamba is not None:
+                m = self.mamba
+                d_in = m.expand * d
+                nheads = d_in // m.headdim
+                conv_dim = d_in + 2 * m.n_groups * m.d_state
+                total += d * (2 * d_in + 2 * m.n_groups * m.d_state + nheads)  # in_proj
+                total += conv_dim * m.d_conv  # conv
+                total += 2 * nheads  # A_log, D
+                total += d_in * d  # out_proj
+            if ffn == "mlp":
+                total += d * f * (3 if self.mlp_type == "swiglu" else 2)
+            elif ffn == "moe" and self.moe is not None:
+                e = self.moe.num_experts
+                total += d * e  # router
+                total += e * d * f * (3 if self.mlp_type == "swiglu" else 2)
+            total += 2 * d  # norms
+        if self.encoder is not None:
+            enc_d = self.encoder.d_model or d
+            a = self.attention
+            per_layer = enc_d * (a.n_heads + a.n_kv_heads) * a.head_dim * 2 + enc_d * f * (
+                3 if self.mlp_type == "swiglu" else 2
+            ) + 2 * enc_d
+            total += self.encoder.n_layers * per_layer
+            # decoder cross-attention blocks
+            total += self.n_layers * (d * (a.n_heads + a.n_kv_heads) * a.head_dim * 2 + d)
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of num_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        dense = dataclasses.replace(self, moe=None, layer_pattern=tuple(
+            (m, "mlp" if f == "moe" else f) for (m, f) in self.layer_plan
+        ))
+        moe_layers = sum(1 for _, f in self.layer_plan if f == "moe")
+        per_expert = self.d_model * self.d_ff * (3 if self.mlp_type == "swiglu" else 2)
+        return dense.param_count() + moe_layers * (
+            self.moe.top_k - 1) * per_expert  # dense already counts 1 expert-equivalent
+
+
+# ---------------------------------------------------------------------------
+# Recsys-side configs (the paper's own setting)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SparseTableConfig:
+    name: str
+    vocab_size: int
+    dim: int
+    # multi-hot bag size per sample (1 => one-hot feature)
+    bag_size: int = 1
+    combiner: str = "sum"  # "sum" | "mean"
+
+
+@dataclass(frozen=True)
+class RecsysModelConfig:
+    name: str
+    backbone: str  # "hstu" | "fuxi" | "dlrm"
+    tables: Tuple[SparseTableConfig, ...]
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int  # behaviour-sequence length
+    num_dense_features: int = 16
+    norm_eps: float = 1e-5
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    @property
+    def total_sparse_rows(self) -> int:
+        return sum(t.vocab_size for t in self.tables)
+
+    @property
+    def max_table_dim(self) -> int:
+        return max(t.dim for t in self.tables)
+
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned input-shape sets)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+# ---------------------------------------------------------------------------
+# Parallelism / NestPipe execution configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NestPipeConfig:
+    """NestPipe feature switches (the paper's contribution)."""
+
+    dbp: bool = True  # dual-buffer pipelining (inter-batch)
+    fwp_microbatches: int = 4  # N; 1 disables FWP
+    fwp_unroll: bool = True  # unrolled window (overlap-friendly HLO) vs scan
+    clustering: str = "keycentric"  # "keycentric" | "none"
+    # Fixed-capacity routing knobs (static shapes under SPMD).
+    unique_capacity_factor: float = 1.0  # U_max = ceil(L * factor)
+    bucket_slack: float = 1.5  # C = ceil(U_max / S * slack)
+    dedup_remote: bool = False  # owner-side second dedup (paper's retrieval stage)
+    grad_mode: str = "compact"  # "compact" | "dense_shard"
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    batch_axes: Tuple[str, ...] = ("data",)
+    tensor_axes: Tuple[str, ...] = ("model",)
+    sparse_axes: Tuple[str, ...] = ("model",)  # embedding-table sharding axes
+    fsdp_axes: Tuple[str, ...] = ()  # weight sharding (ZeRO-3) axes
+    # ZeRO-1: shard only the optimizer moments over fsdp_axes, keep params
+    # whole per model shard — one param all-gather per STEP instead of
+    # per-layer weight gathers per MICRO-BATCH (big collective win when the
+    # FWP window is unrolled; see EXPERIMENTS.md §Perf yi-34b iteration 1).
+    zero1: bool = True
+    expert_axes: Tuple[str, ...] = ("model",)
+    scan_layers: bool = True
+    remat: str = "none"  # "none" | "full"
+    # Megatron-style sequence parallelism: residual stream (and the scanned
+    # layer carry) sharded over tensor_axes on the seq dim — bounds per-device
+    # activation memory to T/S rows per layer. Applied when T % S == 0.
+    sequence_parallel: bool = True
+    # decode-time KV cache layout: "heads" shards kv heads on tensor axes,
+    # "seq" shards cache length (flash-decoding combine) — used for long ctx.
+    kv_shard: str = "heads"
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"  # dense optimizer
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    # Sparse (embedding) optimizer — rowwise to bound state size.
+    sparse_name: str = "rowwise_adagrad"
+    sparse_lr: float = 0.05
+    sparse_eps: float = 1e-8
+    # Moment dtype policy: "f32" always; params bf16 + no master copy for huge archs.
+    master_copy: bool = True
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    arch: str
+    shape: str = "train_4k"
+    steps: int = 100
+    seed: int = 0
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    nestpipe: NestPipeConfig = field(default_factory=NestPipeConfig)
+    mode: str = "nestpipe"  # "nestpipe" | "serial" | "async" | "2dsp" | "nestpipe+2dsp"

@@ -1,0 +1,69 @@
+"""The paper's own recsys workloads: HSTU / FUXI backbones at industrial
+sparse scale + a DLRM CTR configuration.
+
+Full configs target the production mesh (embedding tables sharded over all
+256/512 workers, paper §II-A); REDUCED variants run CPU smoke tests and the
+end-to-end examples.
+"""
+from .base import RecsysModelConfig, SparseTableConfig
+
+# HSTU on the Industrial-like dataset: one dominant item table at
+# production cardinality plus context tables (paper Table II setting;
+# emb_dim=512 per paper Fig. 10 sweep midpoint).
+HSTU_INDUSTRIAL = RecsysModelConfig(
+    name="hstu-industrial", backbone="hstu",
+    tables=(
+        SparseTableConfig("items", vocab_size=100_000_000, dim=512),
+        SparseTableConfig("users", vocab_size=50_000_000, dim=512),
+        SparseTableConfig("context", vocab_size=1_000_000, dim=512),
+    ),
+    d_model=1024, n_layers=4, n_heads=8, d_ff=4096, seq_len=1024,
+    compute_dtype="bfloat16",  # halves the embedding All2All payload (§Perf)
+)
+
+HSTU_REDUCED = RecsysModelConfig(
+    name="hstu-reduced", backbone="hstu",
+    tables=(SparseTableConfig("items", vocab_size=4096, dim=32),),
+    d_model=64, n_layers=2, n_heads=4, d_ff=128, seq_len=32,
+)
+
+# FUXI on KuaiRand-27K-like scale (paper Table II GPU-cluster setting).
+FUXI_KUAIRAND = RecsysModelConfig(
+    name="fuxi-kuairand", backbone="fuxi",
+    tables=(
+        SparseTableConfig("videos", vocab_size=32_000_000, dim=256),
+        SparseTableConfig("users", vocab_size=27_000, dim=256),
+    ),
+    d_model=512, n_layers=4, n_heads=8, d_ff=2048, seq_len=512,
+    compute_dtype="bfloat16",
+)
+
+FUXI_REDUCED = RecsysModelConfig(
+    name="fuxi-reduced", backbone="fuxi",
+    tables=(SparseTableConfig("videos", vocab_size=4096, dim=32),),
+    d_model=64, n_layers=2, n_heads=4, d_ff=128, seq_len=32,
+)
+
+# DLRM-style CTR: criteo-like multi-table one-hot + bagged features.
+DLRM_CTR = RecsysModelConfig(
+    name="dlrm-ctr", backbone="dlrm",
+    tables=tuple(
+        SparseTableConfig(f"cat_{i}", vocab_size=v, dim=128)
+        for i, v in enumerate(
+            [40_000_000, 10_000_000, 5_000_000, 1_000_000] + [100_000] * 10 + [1000] * 12
+        )
+    ),
+    d_model=128, n_layers=0, n_heads=1, d_ff=512, seq_len=1,
+    num_dense_features=13,
+)
+
+DLRM_REDUCED = RecsysModelConfig(
+    name="dlrm-reduced", backbone="dlrm",
+    tables=(
+        SparseTableConfig("cat_a", vocab_size=2048, dim=16),
+        SparseTableConfig("cat_b", vocab_size=512, dim=16),
+        SparseTableConfig("cat_c", vocab_size=128, dim=16, bag_size=3),
+    ),
+    d_model=16, n_layers=0, n_heads=1, d_ff=64, seq_len=1,
+    num_dense_features=8,
+)

@@ -1,0 +1,29 @@
+"""Assigned input-shape sets (LM family: seq_len x global_batch).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV
+cache of seq_len), not ``train_step``. ``long_500k`` requires sub-quadratic
+sequence mixing and only runs for SSM/hybrid archs (DESIGN.md
+§Arch-applicability); the dry-run records explicit skips elsewhere.
+"""
+from __future__ import annotations
+
+from .base import ModelConfig, ShapeConfig
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": ShapeConfig("prefill_32k", kind="prefill", seq_len=32768,
+                               global_batch=32),
+    "decode_32k": ShapeConfig("decode_32k", kind="decode", seq_len=32768,
+                              global_batch=128),
+    "long_500k": ShapeConfig("long_500k", kind="decode", seq_len=524288,
+                             global_batch=1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch, shape) cell."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 500k-token cache/attention is "
+                       "super-quadratic in prefill and memory-infeasible; run only "
+                       "for SSM/hybrid archs per assignment")
+    return True, ""

@@ -1,0 +1,1 @@
+"""NestPipe core: the paper's contribution (embedding engine, DBP, FWP)."""

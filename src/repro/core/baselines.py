@@ -1,0 +1,48 @@
+"""Baseline configurations reproduced from the paper (§VII setup).
+
+The baselines are realized as *configurations* of the same substrate so the
+comparison isolates the paper's contribution:
+
+* **TorchRec-like** — ``mode="serial"``: batch-level synchronous lookup from
+  the master table, no inter-batch pipelining, no intra-batch overlap
+  (StepFns.serial_step).
+* **UniEmb-like** — ``mode="async"``: DBP's prefetch pipeline WITHOUT
+  dual-buffer synchronization, i.e. hidden lookup latency at the cost of
+  one-step embedding staleness (StepFns.async_step).
+* **2D-SP** — sparse parallelism restricted to a mesh sub-axis: tables
+  sharded *within* a group (``sparse_axes=("model",)``) and replicated
+  across groups with a second-stage gradient AllReduce over the remaining
+  axes — built by pointing the engine at the restricted axes.
+* **NestPipe+2D-SP** — NestPipe mode on a 2D-SP-restricted engine (§RQ5).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+from ..configs.base import NestPipeConfig
+
+
+def sparse_axes_for_mode(mode: str, all_axes: Tuple[str, ...],
+                         group_axes: Tuple[str, ...] = ("model",)) -> Tuple[str, ...]:
+    """Sparse-sharding axes per training mode.
+
+    Full decentralized NestPipe/serial/async shard tables over all workers;
+    any "+2dsp" (or plain 2dsp) mode restricts the All2All domain to
+    ``group_axes`` — the paper's intra-group model parallelism.
+    """
+    if "2dsp" in mode:
+        return tuple(a for a in group_axes if a in all_axes)
+    return all_axes
+
+
+def nestpipe_config_for_mode(mode: str, base: NestPipeConfig) -> NestPipeConfig:
+    """Feature switches per mode (DBP/FWP enabled only for NestPipe modes)."""
+    import dataclasses
+
+    if mode.startswith("nestpipe"):
+        return base
+    if mode == "async":
+        return dataclasses.replace(base, dbp=True)  # pipeline yes, sync no
+    if mode in ("serial", "2dsp"):
+        return dataclasses.replace(base, dbp=False, clustering="none")
+    raise ValueError(f"unknown mode {mode}")

@@ -1,0 +1,69 @@
+"""Reference synchronous trainer — the gold standard for Definition 1.
+
+A deliberately naive, obviously-correct implementation of Eq. (1): dense
+table gather (no routing, no buffers, no All2All), full-batch gradients via
+scatter-add, one rowwise-adagrad update per step. The consistency tests
+(paper §VI / RQ2) assert that NestPipe's DBP+FWP pipeline and the serial
+baseline reproduce THIS trajectory exactly, and that the async
+(UniEmb-like) mode diverges from it.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..train.optim import OptimizerPair
+from ..train.state import TrainState
+from ..utils import tree_add, tree_scale
+from .embedding.table import EmbeddingTableState
+
+
+def build_reference_step(
+    loss_fn: Callable,  # (dense_params, emb, mb_batch) -> (loss, metrics)
+    optimizer: OptimizerPair,
+    lr_sched: Callable,
+    n_micro: int,
+    *,
+    sparse_lr: float = 0.05,
+    sparse_eps: float = 1e-8,
+):
+    """Returns ``step(state, batch)`` where batch has stacked (N, ...) fields
+    and ``keys`` holds scrambled mega-table ids. Single device / pjit-global;
+    no engine machinery whatsoever."""
+    grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)
+
+    def step(state: TrainState, batch):
+        rows = state.table.rows
+        vp, d = rows.shape
+        table_grad = jnp.zeros((vp, d), jnp.float32)
+        gsum = None
+        losses = []
+        for i in range(n_micro):
+            mb = jax.tree.map(lambda x: x[i], batch)
+            keys = mb["keys"]
+            emb = jnp.take(rows, keys, axis=0).astype(jnp.float32)
+            (loss, _), (dg, demb) = grad_fn(state.dense, emb, mb)
+            table_grad = table_grad.at[keys.reshape(-1)].add(
+                demb.reshape(-1, d).astype(jnp.float32) / n_micro
+            )
+            gsum = dg if gsum is None else tree_add(gsum, dg)
+            losses.append(loss)
+        gmean = tree_scale(gsum, 1.0 / n_micro)
+        lr = lr_sched(state.step)
+        new_dense, new_opt, gnorm = optimizer.update(state.dense, state.opt, gmean, lr)
+
+        touched = jnp.any(table_grad != 0.0, axis=-1)
+        accum = state.table.accum + jnp.where(
+            touched, jnp.mean(table_grad * table_grad, -1), 0.0
+        )
+        scale = sparse_lr / (jnp.sqrt(jnp.maximum(accum, 0.0)) + sparse_eps)
+        new_rows = rows - (jnp.where(touched, scale, 0.0)[:, None] * table_grad).astype(
+            rows.dtype
+        )
+        aux = {"loss": jnp.mean(jnp.stack(losses)), "grad_norm": gnorm, "lr": lr}
+        new_table = EmbeddingTableState(new_rows, accum)
+        return TrainState(new_dense, new_opt, new_table, state.step + 1), aux
+
+    return step

@@ -1,0 +1,2 @@
+"""Dual-Buffer Pipelining (inter-batch five-stage pipeline)."""
+from .pipeline import DBPDriver, PipelineStats

@@ -1,0 +1,147 @@
+"""DBP five-stage host driver (paper §IV).
+
+Orchestrates the inter-batch pipeline over a batch stream:
+
+    stage 1  data prefetch   — background thread (data/pipeline.PrefetchQueue)
+    stage 2  data H2D        — async device_put with target shardings
+    stage 3  key routing     — fused key All2All (inside the jitted step)
+    stage 4  retrieval+sync  — owner gather + dual-buffer intersection sync
+    stage 5  fwd/bwd (FWP)   — frozen-window micro-batch execution
+
+Stages 3-5 for step t+1 / t live inside ONE jitted steady-state function
+(train/step.py) whose dataflow lets XLA overlap them; this driver supplies
+the host-side halves (1-2), the buffer hand-over between steps, watchdog
+timing, and checkpoint hooks.
+
+It also runs the baselines: ``serial`` (no pipelining), ``async``
+(prefetch without dual-buffer sync — the staleness baseline).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from ...data.pipeline import PrefetchQueue, make_cluster_transform, stage_to_device
+from ...train.state import PipelineCarry, TrainState
+
+
+@dataclass
+class PipelineStats:
+    step_times: List[float] = field(default_factory=list)
+    losses: List[float] = field(default_factory=list)
+    h2d_times: List[float] = field(default_factory=list)
+    input_wait_times: List[float] = field(default_factory=list)
+    straggler_steps: List[int] = field(default_factory=list)
+    overflow_max: int = 0
+
+    def summary(self) -> Dict[str, float]:
+        st = np.asarray(self.step_times[1:] or self.step_times)
+        return {
+            "steps": len(self.step_times),
+            "mean_step_s": float(st.mean()) if len(st) else 0.0,
+            "p50_step_s": float(np.percentile(st, 50)) if len(st) else 0.0,
+            "p99_step_s": float(np.percentile(st, 99)) if len(st) else 0.0,
+            "mean_input_wait_s": float(np.mean(self.input_wait_times or [0.0])),
+            "stragglers": len(self.straggler_steps),
+            "final_loss": self.losses[-1] if self.losses else float("nan"),
+            "overflow_max": self.overflow_max,
+        }
+
+
+class DBPDriver:
+    """Runs NestPipe training (or a baseline mode) over a host batch stream."""
+
+    def __init__(
+        self,
+        step_fns,  # train.step.StepFns
+        source: Iterator,  # yields dict batches with a "keys" field (numpy)
+        n_micro: int,
+        *,
+        mode: str = "nestpipe",  # "nestpipe" | "async" | "serial"
+        clustering: str = "keycentric",
+        batch_shardings=None,  # pytree/dict of NamedSharding for staged batches
+        prefetch_depth: int = 2,
+        device_fields: Optional[List[str]] = None,  # batch fields shipped to device
+        straggler_factor: float = 3.0,
+        on_checkpoint: Optional[Callable[[TrainState, int], None]] = None,
+        ckpt_every: int = 0,
+    ):
+        self.fns = step_fns
+        self.n_micro = n_micro
+        self.mode = mode
+        self.batch_shardings = batch_shardings
+        self.device_fields = device_fields
+        self.straggler_factor = straggler_factor
+        self.on_checkpoint = on_checkpoint
+        self.ckpt_every = ckpt_every
+        transform = make_cluster_transform(
+            n_micro, clustering if mode != "serial" else clustering
+        )
+        self.queue = PrefetchQueue(source, depth=prefetch_depth, transform=transform)
+        self._jit_nestpipe = jax.jit(step_fns.nestpipe_step)
+        self._jit_async = jax.jit(step_fns.async_step)
+        self._jit_serial = jax.jit(step_fns.serial_step)
+        self._jit_init = jax.jit(step_fns.init_carry)
+
+    # -- stages 1-2 -----------------------------------------------------
+
+    def _next_device_batch(self, stats: PipelineStats):
+        t0 = time.perf_counter()
+        host_batch = self.queue.get()
+        stats.input_wait_times.append(time.perf_counter() - t0)
+        if self.device_fields is not None:
+            host_batch = {k: host_batch[k] for k in self.device_fields}
+        t1 = time.perf_counter()
+        dev = stage_to_device(host_batch, self.batch_shardings or {})
+        stats.h2d_times.append(time.perf_counter() - t1)
+        return dev
+
+    # -- main loop --------------------------------------------------------
+
+    def run(self, state: TrainState, num_steps: int) -> (TrainState, PipelineStats):
+        stats = PipelineStats()
+        ema = None
+        try:
+            if self.mode == "serial":
+                for t in range(num_steps):
+                    batch = self._next_device_batch(stats)
+                    t0 = time.perf_counter()
+                    state, aux = self._jit_serial(state, batch)
+                    loss = float(aux["loss"])  # blocks: end-of-step barrier
+                    dt = time.perf_counter() - t0
+                    self._record(stats, t, dt, loss, aux, ema)
+                    ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+                    self._maybe_ckpt(state, t)
+                return state, stats
+
+            step_fn = self._jit_nestpipe if self.mode == "nestpipe" else self._jit_async
+            batch = self._next_device_batch(stats)
+            carry = self._jit_init(state.table, batch["keys"])
+            for t in range(num_steps):
+                nxt = self._next_device_batch(stats)
+                t0 = time.perf_counter()
+                state, carry, aux = step_fn(state, carry, batch, nxt["keys"])
+                loss = float(aux["loss"])
+                dt = time.perf_counter() - t0
+                self._record(stats, t, dt, loss, aux, ema)
+                ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+                batch = nxt
+                self._maybe_ckpt(state, t)
+            return state, stats
+        finally:
+            self.queue.close()
+
+    def _record(self, stats, t, dt, loss, aux, ema):
+        stats.step_times.append(dt)
+        stats.losses.append(loss)
+        stats.overflow_max = max(stats.overflow_max, int(aux.get("routing_overflow", 0)))
+        if ema is not None and dt > self.straggler_factor * ema:
+            stats.straggler_steps.append(t)
+
+    def _maybe_ckpt(self, state, t):
+        if self.on_checkpoint is not None and self.ckpt_every and (t + 1) % self.ckpt_every == 0:
+            self.on_checkpoint(state, t + 1)

@@ -1,0 +1,17 @@
+"""NestPipe sharded embedding engine (routing, tables, dual buffers)."""
+from .engine import (
+    DualBuffer,
+    EmbeddingEngine,
+    EngineDims,
+    GradPacket,
+    LookupPlan,
+    WindowPlan,
+)
+from .routing import SENTINEL
+from .table import (
+    EmbeddingTableState,
+    MegaTableSpec,
+    init_table_state,
+    make_mega_table_spec,
+    table_pspecs,
+)

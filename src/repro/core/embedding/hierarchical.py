@@ -1,0 +1,120 @@
+"""Hierarchical embedding storage (paper §II-A): host-DRAM master tier +
+device-HBM working tier.
+
+Production recommendation models hold embedding tables that exceed HBM:
+the master table lives in host DRAM (here: a numpy array per shard) and
+only the rows needed by in-flight batches are staged into device buffers —
+exactly DBP's retrieval stage ("The retrieved embeddings are transferred
+from host memory (DRAM) to device memory (HBM)").
+
+``HostTierTable`` implements the same retrieve/writeback contract as the
+device-resident ``EmbeddingTableState`` path, but:
+
+  * retrieval gathers rows on the HOST (pinned-memory analogue: a
+    preallocated staging buffer) and ships ONLY the compact buffer via
+    ``device_put`` (async H2D — overlaps device compute),
+  * writeback pulls the updated compact buffer back (D2H) and scatters
+    into the numpy master.
+
+Because the paper's consistency argument lives entirely in the buffer
+domain (sync happens between HBM buffers), swapping the master tier is
+invisible to DBP/FWP semantics — asserted by
+``tests/test_hierarchical.py`` which replays a training run against the
+device-tier engine bit-for-bit.
+
+On a real multi-host cluster each process owns the shard slice of its
+devices; the single-process container keeps the same per-shard layout.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import DualBuffer
+from .routing import SENTINEL
+from .table import MegaTableSpec
+
+
+class HostTierTable:
+    """Host-DRAM master tier for one mega-table (all shards, this process)."""
+
+    def __init__(self, spec: MegaTableSpec, *, rng: Optional[np.random.Generator] = None,
+                 scale: float = 0.01, dtype=np.float32):
+        self.spec = spec
+        rng = rng or np.random.default_rng(0)
+        # rows in scrambled-id space — identical init law to the device tier
+        self.rows = (rng.standard_normal((spec.padded_rows, spec.dim)) * scale
+                     ).astype(dtype)
+        self.accum = np.zeros((spec.padded_rows,), np.float32)
+        # "pinned" staging buffer reused across steps (no per-step alloc)
+        self._stage_rows: Optional[np.ndarray] = None
+        self._stage_accum: Optional[np.ndarray] = None
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
+
+    @classmethod
+    def from_device_table(cls, spec: MegaTableSpec, table) -> "HostTierTable":
+        t = cls.__new__(cls)
+        t.spec = spec
+        # device_get may hand back read-only views of device buffers
+        t.rows = np.array(jax.device_get(table.rows), copy=True)
+        t.accum = np.array(jax.device_get(table.accum), copy=True)
+        t._stage_rows = None
+        t._stage_accum = None
+        t.h2d_bytes = 0
+        t.d2h_bytes = 0
+        return t
+
+    # -- DBP stage 4a: host-side gather + async H2D ----------------------
+
+    def retrieve(self, buffer_keys: np.ndarray, *, device_sharding=None
+                 ) -> DualBuffer:
+        """Gather master rows for (sorted, sentinel-padded) ``buffer_keys``
+        and stage them to the device as a fresh prefetch buffer."""
+        k = buffer_keys.shape[0]
+        if self._stage_rows is None or self._stage_rows.shape[0] != k:
+            self._stage_rows = np.zeros((k, self.spec.dim), self.rows.dtype)
+            self._stage_accum = np.zeros((k,), np.float32)
+        valid = buffer_keys != SENTINEL
+        idx = np.where(valid, buffer_keys, 0)
+        np.take(self.rows, idx, axis=0, out=self._stage_rows)
+        np.take(self.accum, idx, axis=0, out=self._stage_accum)
+        self._stage_rows[~valid] = 0
+        self._stage_accum[~valid] = 0
+        self.h2d_bytes += self._stage_rows.nbytes + self._stage_accum.nbytes
+        put = (lambda x: jax.device_put(x, device_sharding)) if device_sharding \
+            else jax.device_put
+        return DualBuffer(
+            keys=put(buffer_keys.astype(np.int32)),
+            rows=put(self._stage_rows),
+            accum=put(self._stage_accum),
+        )
+
+    # -- DBP epilogue: D2H + host scatter ---------------------------------
+
+    def writeback(self, buffer: DualBuffer) -> None:
+        keys = np.asarray(jax.device_get(buffer.keys))
+        rows = np.asarray(jax.device_get(buffer.rows))
+        accum = np.asarray(jax.device_get(buffer.accum))
+        self.d2h_bytes += rows.nbytes + accum.nbytes
+        valid = keys != SENTINEL
+        self.rows[keys[valid]] = rows[valid]
+        self.accum[keys[valid]] = accum[valid]
+
+    # -- direct access (tests / checkpointing) ----------------------------
+
+    def as_device_state(self):
+        from .table import EmbeddingTableState
+
+        return EmbeddingTableState(jnp.asarray(self.rows), jnp.asarray(self.accum))
+
+    def memory_bytes(self) -> int:
+        return self.rows.nbytes + self.accum.nbytes
+
+
+def union_keys_host(window_plan, cap: int) -> np.ndarray:
+    """Host copy of the owner-side union key list for a window plan."""
+    return np.asarray(jax.device_get(window_plan.buffer_keys))[:cap]

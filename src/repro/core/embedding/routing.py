@@ -1,0 +1,145 @@
+"""Device-local sparse-key routing primitives (static shapes, SPMD-safe).
+
+All functions here operate on per-device local arrays and contain NO
+collectives — the All2All exchange lives in ``engine.py``. Everything uses
+fixed capacities with sentinel padding so the whole pipeline stays
+shape-static under jit/shard_map, per DESIGN.md §7.
+
+Key conventions
+---------------
+* ``SENTINEL`` marks an empty slot. Sentinel keys sort last (int32 max).
+* Keys entering the engine are already *scrambled* (bijective affine mix,
+  see ``table.py``) so contiguous row-range sharding is load-balanced.
+* ``owner(k) = k // rows_per_shard``; ``local_row(k) = k - owner * rows_per_shard``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+class UniqueResult(NamedTuple):
+    """Fixed-capacity deduplication of a local key multiset."""
+
+    unique_keys: jax.Array  # (U_max,) int32, sorted ascending, SENTINEL-padded
+    inverse: jax.Array  # (L,) int32: position -> unique slot (U_max for invalid)
+    n_unique: jax.Array  # () int32
+    overflow: jax.Array  # () int32: uniques dropped because U_max too small
+
+
+class BucketResult(NamedTuple):
+    """Owner-bucketed send layout for a unique key set."""
+
+    send_keys: jax.Array  # (S, C) int32, SENTINEL-padded
+    slot_of_unique: jax.Array  # (U_max,) int32: unique slot -> flat send slot (S*C for invalid)
+    overflow: jax.Array  # () int32: keys dropped because C too small
+
+
+def fixed_unique(keys: jax.Array, u_max: int) -> UniqueResult:
+    """Sort-based dedup into a fixed-size buffer.
+
+    ``keys``: (L,) int32, may contain SENTINEL padding. Returns sorted unique
+    keys padded to ``u_max`` and the inverse map for gathers. Uniques beyond
+    ``u_max`` are dropped (counted in ``overflow``) — configure capacity so
+    this never happens in production; tests assert overflow == 0.
+    """
+    L = keys.shape[0]
+    order = jnp.argsort(keys)
+    sk = keys[order]
+    valid = sk != SENTINEL
+    is_new = jnp.concatenate([valid[:1], (sk[1:] != sk[:-1]) & valid[1:]])
+    uid_sorted = jnp.cumsum(is_new) - 1  # unique id per sorted position
+    n_unique = jnp.sum(is_new).astype(jnp.int32)
+
+    # Compact unique keys into the fixed buffer (drop overflowing scatter).
+    dst = jnp.where(is_new & (uid_sorted < u_max), uid_sorted, u_max)
+    unique_keys = jnp.full((u_max,), SENTINEL, jnp.int32).at[dst].set(sk, mode="drop")
+
+    # Inverse map back to original positions; invalid/overflowed -> u_max.
+    inv_sorted = jnp.where(valid & (uid_sorted < u_max), uid_sorted, u_max)
+    inverse = jnp.zeros((L,), jnp.int32).at[order].set(inv_sorted.astype(jnp.int32))
+    overflow = jnp.maximum(n_unique - u_max, 0).astype(jnp.int32)
+    return UniqueResult(unique_keys, inverse, n_unique, overflow)
+
+
+def bucket_by_owner(
+    unique_keys: jax.Array, num_shards: int, capacity: int, rows_per_shard: int
+) -> BucketResult:
+    """Bucket sorted-unique keys by destination shard into (S, C) send buffers.
+
+    Because ``unique_keys`` is sorted and owners are contiguous ranges, keys
+    are already grouped by owner; the rank within each owner group is
+    ``arange - group_start``.
+    """
+    u_max = unique_keys.shape[0]
+    valid = unique_keys != SENTINEL
+    owner = jnp.minimum(unique_keys // rows_per_shard, num_shards - 1)
+    owner = jnp.where(valid, owner, num_shards)  # sentinels -> virtual shard S
+
+    # group start of each owner within the sorted array
+    starts = jnp.searchsorted(owner, jnp.arange(num_shards + 1), side="left")
+    pos_in_group = jnp.arange(u_max) - starts[jnp.minimum(owner, num_shards)]
+    in_cap = pos_in_group < capacity
+    dest = jnp.where(valid & in_cap, owner * capacity + pos_in_group, num_shards * capacity)
+
+    send_keys = (
+        jnp.full((num_shards * capacity,), SENTINEL, jnp.int32)
+        .at[dest]
+        .set(unique_keys, mode="drop")
+        .reshape(num_shards, capacity)
+    )
+    overflow = jnp.sum(valid & ~in_cap).astype(jnp.int32)
+    return BucketResult(send_keys, dest.astype(jnp.int32), overflow)
+
+
+def gather_rows(rows: jax.Array, idx: jax.Array) -> jax.Array:
+    """rows[idx] with out-of-range -> 0 (sentinel-safe gather)."""
+    return jnp.take(rows, idx, axis=0, mode="fill", fill_value=0)
+
+
+def segment_rowsum(values: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    """Sum rows of ``values`` into ``num_segments`` buckets (drop out-of-range).
+
+    ``values``: (L, D); ``segment_ids``: (L,) with id == num_segments meaning
+    "drop". Accumulates in f32 regardless of input dtype.
+    """
+    acc = jnp.zeros((num_segments, values.shape[-1]), jnp.float32)
+    return acc.at[segment_ids].add(values.astype(jnp.float32), mode="drop")
+
+
+def sorted_lookup(sorted_keys: jax.Array, queries: jax.Array) -> jax.Array:
+    """Index of each query in a sorted sentinel-padded key buffer.
+
+    Returns len(sorted_keys) (== miss) for queries not present. Used for
+    buffer-resident lookups (DBP) and intersection sync.
+    """
+    n = sorted_keys.shape[0]
+    idx = jnp.searchsorted(sorted_keys, queries, side="left")
+    idx_c = jnp.minimum(idx, n - 1)
+    hit = (sorted_keys[idx_c] == queries) & (queries != SENTINEL)
+    return jnp.where(hit, idx_c, n).astype(jnp.int32)
+
+
+def merge_sorted_unique(key_sets: jax.Array, out_cap: int) -> jax.Array:
+    """Union of several sentinel-padded key sets -> sorted unique (out_cap,).
+
+    ``key_sets``: any shape, flattened. Used to build the owner-side buffer
+    key list from per-micro-batch received key sets.
+    """
+    flat = key_sets.reshape(-1)
+    res = fixed_unique(flat, out_cap)
+    return res.unique_keys
+
+
+def intersect_sorted(keys_a: jax.Array, keys_b: jax.Array):
+    """For each slot of ``keys_b``, the matching slot in ``keys_a`` (or len(a)).
+
+    Both inputs sorted + sentinel padded. This is the DBP dual-buffer
+    intersection: rows of the active buffer (a) that must overwrite rows of
+    the prefetch buffer (b).
+    """
+    return sorted_lookup(keys_a, keys_b)

@@ -1,0 +1,142 @@
+"""Sharded embedding-table state: mega-table layout, scrambling, init.
+
+Multiple logical tables (recsys categorical features, or a single LM vocab)
+are packed into one *mega-table* with per-table row offsets so a single
+routing pass serves all tables. Rows are sharded over the configured sparse
+mesh axes as contiguous ranges of the *scrambled* key space:
+
+    scrambled(k) = (k * P + A) mod Vp      (P coprime to Vp => bijective)
+
+which load-balances zipf-skewed keys across shards while keeping the master
+table a plain ``NamedSharding``-partitioned global array — elastic restores
+(different device count) are a pure re-``device_put``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ...configs.base import SparseTableConfig
+from ...utils import coprime_mixer, round_up
+
+
+@dataclass(frozen=True)
+class MegaTableSpec:
+    """Static layout of the packed embedding table (hashable; jit-static)."""
+
+    table_names: Tuple[str, ...]
+    table_offsets: Tuple[int, ...]  # starting global row per table
+    table_vocabs: Tuple[int, ...]
+    dim: int
+    padded_rows: int  # Vp: total rows rounded up to num_shards
+    num_shards: int
+    mix_mult: int  # P
+    mix_add: int  # A
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.padded_rows // self.num_shards
+
+    def scramble(self, keys: jax.Array) -> jax.Array:
+        """Bijective affine mix on [0, Vp) — int64-free via uint32 wrap."""
+        k = keys.astype(jnp.uint32)
+        mixed = (k * jnp.uint32(self.mix_mult) + jnp.uint32(self.mix_add)) % jnp.uint32(
+            self.padded_rows
+        )
+        return mixed.astype(jnp.int32)
+
+    def global_keys(self, table_idx: int, keys: jax.Array) -> jax.Array:
+        """Map per-table keys to scrambled mega-table row ids."""
+        return self.scramble(keys + self.table_offsets[table_idx])
+
+
+def make_mega_table_spec(
+    tables: Sequence[SparseTableConfig] | None,
+    *,
+    vocab_size: int | None = None,
+    dim: int | None = None,
+    num_shards: int,
+    scramble: bool = True,
+) -> MegaTableSpec:
+    """Build the packed spec either from recsys table configs or a single
+    LM vocab (``vocab_size``/``dim``)."""
+    if tables is None:
+        assert vocab_size is not None and dim is not None
+        tables = [SparseTableConfig(name="vocab", vocab_size=vocab_size, dim=dim)]
+    names, offsets, vocabs = [], [], []
+    off = 0
+    max_dim = max(t.dim for t in tables)
+    for t in tables:
+        names.append(t.name)
+        offsets.append(off)
+        vocabs.append(t.vocab_size)
+        off += t.vocab_size
+    padded = round_up(max(off, num_shards), num_shards)
+    mult = coprime_mixer(padded) if scramble else 1
+    add = (padded // 7) if scramble else 0
+    return MegaTableSpec(
+        table_names=tuple(names),
+        table_offsets=tuple(offsets),
+        table_vocabs=tuple(vocabs),
+        dim=max_dim,
+        padded_rows=padded,
+        num_shards=num_shards,
+        mix_mult=mult,
+        mix_add=add,
+    )
+
+
+class EmbeddingTableState(NamedTuple):
+    """Sharded master table + rowwise optimizer state.
+
+    ``rows``: (Vp, D) — P(sparse_axes, None)
+    ``accum``: (Vp,) rowwise-adagrad second-moment — same row sharding
+    """
+
+    rows: jax.Array
+    accum: jax.Array
+
+
+def table_pspecs(sparse_axes: Tuple[str, ...]) -> EmbeddingTableState:
+    axes = sparse_axes if len(sparse_axes) > 1 else sparse_axes[0]
+    return EmbeddingTableState(rows=P(axes, None), accum=P(axes))
+
+
+def init_table_state(
+    rng: jax.Array,
+    spec: MegaTableSpec,
+    mesh: Mesh | None,
+    sparse_axes: Tuple[str, ...],
+    *,
+    scale: float = 0.01,
+    dtype=jnp.float32,
+) -> EmbeddingTableState:
+    """Initialize the sharded master table (normal init, zero adagrad)."""
+    pspecs = table_pspecs(sparse_axes)
+
+    def _init(key):
+        rows = jax.random.normal(key, (spec.padded_rows, spec.dim), dtype) * scale
+        accum = jnp.zeros((spec.padded_rows,), jnp.float32)
+        return EmbeddingTableState(rows, accum)
+
+    if mesh is None:
+        return _init(rng)
+    shardings = EmbeddingTableState(
+        rows=NamedSharding(mesh, pspecs.rows), accum=NamedSharding(mesh, pspecs.accum)
+    )
+    return jax.jit(_init, out_shardings=shardings)(rng)
+
+
+def table_memory_bytes(spec: MegaTableSpec, dtype=jnp.float32) -> int:
+    item = jnp.dtype(dtype).itemsize
+    return spec.padded_rows * spec.dim * item + spec.padded_rows * 4
+
+
+def host_shard_bounds(spec: MegaTableSpec, shard: int) -> Tuple[int, int]:
+    r = spec.rows_per_shard
+    return shard * r, (shard + 1) * r

@@ -1,0 +1,3 @@
+"""Frozen-Window Pipelining (intra-batch communication overlap)."""
+from .clustering import cluster_batch, clustering_stats
+from .executor import FwpStepOutputs, build_fwp_window

@@ -1,0 +1,3 @@
+"""Data substrate: synthetic streams + DBP host pipeline stages."""
+from .pipeline import PrefetchQueue, make_cluster_transform, stage_to_device
+from .synthetic import RecsysBatch, SyntheticLMStream, SyntheticRecsysStream

@@ -1,0 +1,109 @@
+"""Host-side input pipeline: DBP stages 1-2 (data prefetch + H2D staging).
+
+Stage 1 (data prefetch): a background thread pulls batches from the source
+iterator, applies key-centric clustering (FWP §V-C, part of preprocessing
+per the paper so its cost hides behind the pipeline), and places staged
+numpy batches in a bounded queue — the TPU-world analogue of pinned-memory
+staging.
+
+Stage 2 (H2D): ``stage_to_device`` performs the async ``device_put`` with
+the target ``NamedSharding``; JAX's async dispatch overlaps the transfer
+with device compute exactly like a DMA engine would.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from ..core.fwp.clustering import apply_permutation, cluster_batch
+
+
+class PrefetchQueue:
+    """Bounded background prefetcher (DBP stage 1)."""
+
+    def __init__(self, source: Iterator, depth: int = 2,
+                 transform: Optional[Callable] = None):
+        self._source = source
+        self._queue: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._transform = transform
+        self._stop = threading.Event()
+        self._exc: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self.produced = 0
+        self.stall_time = 0.0  # time the producer sat on a full queue
+        self._thread.start()
+
+    def _run(self):
+        try:
+            for item in self._source:
+                if self._stop.is_set():
+                    return
+                if self._transform is not None:
+                    item = self._transform(item)
+                t0 = time.perf_counter()
+                while not self._stop.is_set():
+                    try:
+                        self._queue.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                self.stall_time += time.perf_counter() - t0
+                self.produced += 1
+        except BaseException as e:  # surfaced on next get()
+            self._exc = e
+
+    def get(self, timeout: float = 60.0):
+        if self._exc is not None:
+            raise self._exc
+        item = self._queue.get(timeout=timeout)
+        if self._exc is not None:
+            raise self._exc
+        return item
+
+    def depth(self) -> int:
+        return self._queue.qsize()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._queue.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def make_cluster_transform(n_micro: int, clustering: str,
+                           keys_field: str = "keys",
+                           raw_field: str = "raw_keys"):
+    """Batch transform: permute samples by key-centric clustering and split
+    into (N, B/N, ...) stacked micro-batches (host-side, numpy)."""
+
+    def transform(batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        ref = batch.get(raw_field, batch[keys_field])
+        b = ref.shape[0]
+        if clustering == "keycentric":
+            perm = cluster_batch(ref.reshape(b, -1), n_micro)
+        else:
+            perm = np.arange(b, dtype=np.int32)
+        out = {}
+        for k, v in batch.items():
+            pv = v[perm]
+            out[k] = pv.reshape((n_micro, b // n_micro) + pv.shape[1:])
+        return out
+
+    return transform
+
+
+def stage_to_device(batch: Dict[str, np.ndarray], shardings) -> Dict[str, jax.Array]:
+    """DBP stage 2: async H2D with target shardings (pytree or single)."""
+    if not isinstance(shardings, dict):
+        shardings = {k: shardings for k in batch}
+    return {
+        k: jax.device_put(v, shardings[k]) if k in shardings else jax.device_put(v)
+        for k, v in batch.items()
+    }

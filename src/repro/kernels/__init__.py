@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+embedding_gather — scalar-prefetch row gather (DBP retrieval)
+segment_rowsum  — sorted segment row-sum (owner-side grad aggregation)
+buffer_sync     — dual-buffer intersection row copy (DBP stage 4b)
+flash_attention — causal GQA flash attention (LM backbones)
+hstu_attention  — fused silu pointwise attention (paper's HSTU backbone)
+
+ops.py: jit wrappers (interpret on CPU); ref.py: pure-jnp oracles.
+"""

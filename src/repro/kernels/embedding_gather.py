@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: embedding row gather with scalar-prefetched indices.
+
+The hot loop of DBP's retrieval stage and the owner-side serve path: fetch
+``idx``-indexed rows of a (rows, D) HBM-resident table into a compact
+output. Indices are scalar-prefetched (``PrefetchScalarGridSpec``) so the
+index-dependent HBM->VMEM DMA for block i+1 can be issued while block i is
+being written — the TPU-native analogue of the paper's pipelined lookup.
+
+Blocking: grid over groups of ``block_rows`` output rows; each step DMAs
+``block_rows`` table rows (gathered via the index map) and one output tile.
+D is tiled to the lane width (128) by the wrapper; the row-block index map
+reads the prefetched indices so only requested rows move.
+
+Out-of-range indices (sentinel slots) are clamped to row 0 by the wrapper
+and masked to zero afterwards — the kernel itself stays branch-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..utils import cdiv, round_up
+
+
+def _gather_kernel(idx_ref, table_ref, out_ref):
+    # table_ref block: (1, Dblk) — the row selected by the index map.
+    out_ref[...] = table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def embedding_gather(
+    table: jax.Array,  # (rows, D)
+    idx: jax.Array,  # (n,) int32, values in [0, rows) — pre-clamped
+    *,
+    block_d: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Gathered rows (n, D). interpret=True validates on CPU; on TPU set
+    interpret=False."""
+    rows, d = table.shape
+    n = idx.shape[0]
+    d_pad = round_up(d, 128)
+    bd = min(block_d, d_pad)
+    table_p = jnp.pad(table, ((0, 0), (0, d_pad - d))) if d_pad != d else table
+
+    grid = (n, cdiv(d_pad, bd))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda i, j, idx_ref: (idx_ref[i], j)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda i, j, idx_ref: (i, j)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d_pad), table.dtype),
+        interpret=interpret,
+    )(idx, table_p)
+    return out[:, :d]

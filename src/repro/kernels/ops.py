@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (this container) and False on
+real TPU backends — detected once at import. Every op is shape/dtype-swept
+against ref.py in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from .buffer_sync import buffer_sync_rows as _buffer_sync
+from .embedding_gather import embedding_gather as _gather
+from .flash_attention import flash_attention as _flash
+from .hstu_attention import hstu_attention as _hstu
+from .segment_rowsum import segment_rowsum_sorted as _segsum
+
+
+def _default_interpret() -> bool:
+    try:
+        return jax.default_backend() != "tpu"
+    except Exception:
+        return True
+
+
+INTERPRET = _default_interpret()
+
+
+def embedding_gather(table, idx, *, block_d: int = 512, interpret=None):
+    return _gather(table, idx, block_d=block_d,
+                   interpret=INTERPRET if interpret is None else interpret)
+
+
+def segment_rowsum(grads, ids, num_segments, *, block_l: int = 256,
+                   s_tile: int = 256, interpret=None):
+    return _segsum(grads, ids, num_segments, block_l=block_l, s_tile=s_tile,
+                   interpret=INTERPRET if interpret is None else interpret)
+
+
+def buffer_sync(active_rows, prefetch_rows, src, *, interpret=None):
+    return _buffer_sync(active_rows, prefetch_rows, src,
+                        interpret=INTERPRET if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret=None):
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=INTERPRET if interpret is None else interpret)
+
+
+def hstu_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                   block_k: int = 256, interpret=None):
+    return _hstu(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                 interpret=INTERPRET if interpret is None else interpret)

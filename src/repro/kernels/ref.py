@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+for the interpret-mode sweeps in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_gather_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
+    return jnp.take(table, idx, axis=0)
+
+
+def segment_rowsum_ref(grads: jax.Array, ids: jax.Array,
+                       num_segments: int) -> jax.Array:
+    acc = jnp.zeros((num_segments, grads.shape[-1]), jnp.float32)
+    return acc.at[ids].add(grads.astype(jnp.float32), mode="drop")
+
+
+def buffer_sync_ref(active_rows: jax.Array, prefetch_rows: jax.Array,
+                    src: jax.Array) -> jax.Array:
+    ka = active_rows.shape[0]
+    hit = src < ka
+    safe = jnp.minimum(src, ka - 1)
+    return jnp.where(hit[:, None], active_rows[safe], prefetch_rows)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    b, tq, h, hd = q.shape
+    tk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / (hd ** 0.5)
+    if causal:
+        mask = jnp.arange(tq)[:, None] >= jnp.arange(tk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def hstu_attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    b, t, h, dqk = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / (dqk ** 0.5)
+    a = jax.nn.silu(s) / t
+    if causal:
+        mask = jnp.arange(t)[:, None] >= jnp.arange(t)[None, :]
+        a = jnp.where(mask, a, 0.0)
+    return jnp.einsum("bhqk,bkhd->bqhd", a, v.astype(jnp.float32)).astype(q.dtype)

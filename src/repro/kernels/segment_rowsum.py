@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: sorted-segment row-sum (sparse gradient aggregation).
+
+Owner-side frozen-window update hotspot: sum (L, D) gradient rows into
+(S, D) per-key accumulators given SORTED segment ids (the engine sorts keys
+during routing, so ids arrive sorted; sentinel rows carry id == S and are
+dropped).
+
+Blocking: grid over L in blocks of ``block_l``; a VMEM accumulator tile of
+(S_block? no —) the full (S, D) output stays resident per D-tile while the
+L blocks stream through (revisiting output block j for every i — Pallas
+keeps the output tile in VMEM across the inner grid dimension). Since ids
+are sorted, each output row is only touched by a contiguous range of L
+blocks; the final tile is written back once.
+
+The scatter-add inside the block is expressed as a one-hot matmul
+(block_l x S_tile) @ (block_l x D) — MXU-friendly, no serial loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..utils import cdiv, round_up
+
+
+def _segsum_kernel(ids_ref, grads_ref, out_ref, *, block_l: int, s_tile: int):
+    i = pl.program_id(1)  # L-block index (inner-most so out tile persists)
+    j = pl.program_id(0)  # S-tile index
+
+    @pl.when(i == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]  # (block_l,) int32 (already offset into this S tile?)
+    # one-hot over the S tile: (block_l, s_tile)
+    local = ids - j * s_tile
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, s_tile), 1))
+    onehot = onehot.astype(grads_ref.dtype)
+    out_ref[...] += jax.lax.dot_general(
+        onehot, grads_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block_l", "s_tile",
+                                             "interpret"))
+def segment_rowsum_sorted(
+    grads: jax.Array,  # (L, D) f32
+    ids: jax.Array,  # (L,) int32 sorted; id == num_segments => dropped
+    num_segments: int,
+    *,
+    block_l: int = 256,
+    s_tile: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    l, d = grads.shape
+    s_pad = round_up(num_segments, s_tile)
+    l_pad = round_up(l, block_l)
+    d_pad = round_up(d, 128)
+    grads_p = jnp.pad(grads, ((0, l_pad - l), (0, d_pad - d)))
+    # out-of-tile ids produce all-zero one-hots automatically; pad with S_pad
+    ids_p = jnp.pad(ids, (0, l_pad - l), constant_values=s_pad)
+
+    grid = (s_pad // s_tile, l_pad // block_l)
+    out = pl.pallas_call(
+        functools.partial(_segsum_kernel, block_l=block_l, s_tile=s_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_l,), lambda j, i: (i,)),
+            pl.BlockSpec((block_l, d_pad), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((s_tile, d_pad), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_pad, d_pad), jnp.float32),
+        interpret=interpret,
+    )(ids_p, grads_p)
+    return out[:num_segments, :d]

@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape x mesh) cell on the production mesh with
+ShapeDtypeStruct inputs (no allocation), print memory/cost analysis, and
+derive the roofline terms (deliverable g).
+
+The two lines above MUST precede any jax import: jax locks the device count
+at first backend initialization, and the production meshes need 512
+placeholder host devices. Smoke tests and benches do NOT import this module.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+    python -m repro.launch.dryrun --arch jamba-v0.1-52b --shape long_500k --multi-pod
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, NestPipeConfig
+from ..configs.registry import ALL_ARCHS, ASSIGNED_LM_ARCHS, RECSYS_ARCHS, get_arch
+from ..configs.shapes import SHAPES, shape_applicable
+from ..core.embedding.engine import WindowPlan
+from ..roofline import roofline, model_flops_for
+from ..train.state import PipelineCarry
+from ..utils import human_bytes, human_count, tree_size
+from .build import resolve
+from .mesh import make_production_mesh
+
+
+def _ns(mesh, tree_of_pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def carry_shardings(wl):
+    e = wl.engine
+    buf = e._buffer_pspecs()
+    plan = WindowPlan(plans=e._stack(e._plan_pspecs()), buffer_keys=buf.keys)
+    return _ns(wl.mesh, PipelineCarry(buffer=buf, plan=plan))
+
+
+def dryrun_cell(
+    arch_name: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    mode: str = "nestpipe",
+    n_micro: int = 4,
+    unroll: bool = True,
+    reduced: bool = False,
+    mesh=None,
+    verbose: bool = True,
+    scan_layers: Optional[bool] = None,
+    remat: Optional[str] = None,
+    parallel=None,
+) -> dict:
+    """Lower+compile one cell; return the record for EXPERIMENTS.md.
+
+    Layers stay SCANNED (compile hygiene on one CPU core); the roofline uses
+    the trip-count-aware HLO parser (roofline/hlo_cost.py) so scanned bodies
+    are costed x trip count — XLA's own cost_analysis would count them once.
+    """
+    t0 = time.time()
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    npcfg = NestPipeConfig(fwp_microbatches=n_micro, fwp_unroll=unroll)
+    if parallel is None:
+        from ..configs.registry import default_parallel
+        arch_spec = get_arch(arch_name)
+        parallel = default_parallel(arch_spec, multi_pod=multi_pod)
+        if scan_layers is not None:
+            parallel = dataclasses.replace(parallel, scan_layers=scan_layers)
+        if remat is not None:
+            parallel = dataclasses.replace(parallel, remat=remat)
+    wl = resolve(arch_name, shape_name, mesh=mesh, multi_pod=multi_pod,
+                 mode=mode, npcfg=npcfg, reduced=reduced, parallel=parallel)
+    shape = wl.shape
+    cfg = wl.bundle.cfg
+
+    fns, optimizer = wl.step_fns()
+    state_sds = wl.state_shapes(optimizer)
+    state_sh = wl.state_shardings(optimizer)
+    params_n = tree_size(state_sds.dense)
+    table_n = wl.spec.padded_rows * wl.spec.dim
+
+    if shape.kind == "train":
+        batch_sds = wl.batch_sds()
+        batch_sh = wl.batch_shardings()
+        keys_sds = batch_sds["keys"]
+        keys_sh = batch_sh["keys"]
+        if mode == "serial":
+            step = fns.serial_step
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh), donate_argnums=(0,)
+            ).lower(state_sds, batch_sds)
+        else:
+            carry_sds = jax.eval_shape(fns.init_carry, state_sds.table, keys_sds)
+            carry_sh = carry_shardings(wl)
+            step = fns.nestpipe_step if mode.startswith("nestpipe") else fns.async_step
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_sh, carry_sh, batch_sh, keys_sh),
+                donate_argnums=(0, 1),
+            ).lower(state_sds, carry_sds, batch_sds, keys_sds)
+        tokens = shape.global_batch * shape.seq_len
+        kind = "train"
+    elif shape.kind == "prefill":
+        step = wl.build_prefill_step()
+        batch_sds, batch_specs = wl.prefill_input_sds()
+        batch_sh = {k: NamedSharding(mesh, s) for k, s in batch_specs.items()}
+        t_sh = state_sh.table
+        lowered = jax.jit(
+            step, in_shardings=(state_sh.dense, t_sh, batch_sh)
+        ).lower(state_sds.dense, state_sds.table, batch_sds)
+        tokens = shape.global_batch * shape.seq_len
+        kind = "prefill"
+    else:  # decode
+        step = wl.build_serve_step()
+        cache_sds, cache_specs, keys_sds = wl.serve_input_sds()
+        cache_sh = _ns(mesh, cache_specs)
+        ba = wl.parallel.batch_axes if shape.global_batch > 1 else ()
+        keys_sh = NamedSharding(
+            mesh, P(ba if len(ba) > 1 else (ba[0] if ba else None), None))
+        lowered = jax.jit(
+            step,
+            in_shardings=(state_sh.dense, state_sh.table, cache_sh, keys_sh),
+            donate_argnums=(2,),
+        ).lower(state_sds.dense, state_sds.table, cache_sds, keys_sds)
+        tokens = shape.global_batch
+        kind = "decode"
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    if isinstance(cfg, ModelConfig):
+        active = cfg.active_param_count()
+    else:
+        active = params_n + 0  # recsys: dense params dominate compute
+    mf = model_flops_for(kind, active, tokens)
+    rep = roofline(compiled, chips=chips, model_flops=mf)
+
+    record = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mode": mode,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": kind,
+        "n_micro": wl.n_micro,
+        "unroll": unroll,
+        "params": params_n,
+        "embedding_rows": table_n,
+        "tokens_per_step": tokens,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": ma.argument_size_in_bytes + ma.temp_size_in_bytes,
+        },
+        "roofline": rep.to_dict(),
+    }
+    if verbose:
+        m = record["memory"]
+        r = record["roofline"]
+        print(f"[dryrun] {arch_name} x {shape_name} ({mode}, {record['mesh']}) "
+              f"kind={kind}")
+        print(f"  params={human_count(params_n)} emb_rows={human_count(table_n)} "
+              f"tokens/step={human_count(tokens)}")
+        print(f"  memory/device: args={human_bytes(m['argument_bytes'])} "
+              f"temp={human_bytes(m['temp_bytes'])} "
+              f"peak~{human_bytes(m['peak_estimate_bytes'])}")
+        print(f"  roofline/device: compute={r['compute_s']*1e3:.2f}ms "
+              f"memory={r['memory_s']*1e3:.2f}ms "
+              f"collective={r['collective_s']*1e3:.2f}ms "
+              f"dominant={r['dominant']} useful_flops_ratio="
+              f"{(r['useful_flops_ratio'] or 0):.3f}")
+        print(f"  collectives: { {k: v for k, v in r['collective_counts'].items()} }")
+        print(f"  lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        sys.stdout.flush()
+    return record
+
+
+def iter_all_cells(include_recsys: bool = True):
+    for arch_name in ASSIGNED_LM_ARCHS:
+        arch = get_arch(arch_name)
+        for shape_name, shape in SHAPES.items():
+            ok, reason = shape_applicable(arch.config, shape)
+            yield arch_name, shape_name, ok, reason
+    if include_recsys:
+        for arch_name in RECSYS_ARCHS:
+            yield arch_name, "train_rec", True, ""
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default="train_4k")
+    p.add_argument("--mode", default="nestpipe",
+                   choices=["nestpipe", "serial", "async", "2dsp", "nestpipe+2dsp"])
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--all", action="store_true", help="run every assigned cell")
+    p.add_argument("--n-micro", type=int, default=4)
+    p.add_argument("--no-unroll", action="store_true")
+    p.add_argument("--reduced", action="store_true",
+                   help="reduced configs (fast sanity pass)")
+    p.add_argument("--out", default=None, help="append JSONL records here")
+    args = p.parse_args(argv)
+
+    def emit(rec):
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+    failures = 0
+    if args.all:
+        for arch_name, shape_name, ok, reason in iter_all_cells():
+            if not ok:
+                rec = {"arch": arch_name, "shape": shape_name,
+                       "mode": args.mode,
+                       "mesh": "2x16x16" if args.multi_pod else "16x16",
+                       "skipped": reason}
+                print(f"[dryrun] SKIP {arch_name} x {shape_name}: {reason}")
+                emit(rec)
+                continue
+            try:
+                rec = dryrun_cell(
+                    arch_name, shape_name, multi_pod=args.multi_pod,
+                    mode=args.mode, n_micro=args.n_micro,
+                    unroll=not args.no_unroll, reduced=args.reduced,
+                )
+                emit(rec)
+            except Exception as e:
+                failures += 1
+                print(f"[dryrun] FAIL {arch_name} x {shape_name}: {e}")
+                traceback.print_exc()
+                emit({"arch": arch_name, "shape": shape_name, "error": str(e)})
+        sys.exit(1 if failures else 0)
+
+    rec = dryrun_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod, mode=args.mode,
+        n_micro=args.n_micro, unroll=not args.no_unroll, reduced=args.reduced,
+    )
+    emit(rec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: assigned LM architectures + the paper's recsys backbones."""
+from .zoo import ModelBundle, batch_pspecs, build_model, train_batch_shapes

@@ -1,0 +1,226 @@
+"""Encoder-decoder backbone (whisper-base): bidirectional encoder over stub
+audio-frame embeddings + causal decoder with cross-attention.
+
+Per the assignment spec the conv frontend is a STUB — ``input_specs()``
+provides precomputed frame embeddings (B, n_frames, D); only the
+transformer backbone is real. The decoder's token embeddings come from the
+NestPipe engine like every other LM.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ParallelConfig
+from . import layers as L
+from .transformer import _cast_tree, vocab_parallel_xent
+
+
+def init_encdec_params(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    assert cfg.encoder is not None
+    dtype = jnp.dtype(cfg.param_dtype)
+    enc_d = cfg.encoder.d_model or cfg.d_model
+    n_enc, n_dec = cfg.encoder.n_layers, cfg.n_layers
+    keys = jax.random.split(rng, 4)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": L.init_norm(enc_d, cfg.norm_type),
+            "attn": L.init_attention(k1, enc_d, cfg.attention, dtype),
+            "norm2": L.init_norm(enc_d, cfg.norm_type),
+            "mlp": L.init_mlp(k2, enc_d, cfg.d_ff, cfg.mlp_type, dtype),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "norm1": L.init_norm(cfg.d_model, cfg.norm_type),
+            "attn": L.init_attention(k1, cfg.d_model, cfg.attention, dtype),
+            "normx": L.init_norm(cfg.d_model, cfg.norm_type),
+            "xattn": L.init_attention(k2, cfg.d_model, cfg.attention, dtype),
+            "norm2": L.init_norm(cfg.d_model, cfg.norm_type),
+            "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype),
+        }
+
+    enc_keys = jax.random.split(keys[0], n_enc)
+    dec_keys = jax.random.split(keys[1], n_dec)
+    return {
+        "encoder": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[enc_layer(k) for k in enc_keys]),
+        "decoder": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[dec_layer(k) for k in dec_keys]),
+        "enc_norm": L.init_norm(enc_d, cfg.norm_type),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm_type),
+        "head_w": jax.random.normal(keys[2], (cfg.d_model, cfg.vocab_size), dtype)
+        * (1.0 / cfg.d_model ** 0.5),
+    }
+
+
+def encdec_pspecs(cfg: ModelConfig, parallel: ParallelConfig,
+                  mesh: Optional[Mesh] = None):
+    fsdp = None
+    if parallel.fsdp_axes:
+        fsdp = parallel.fsdp_axes if len(parallel.fsdp_axes) > 1 else parallel.fsdp_axes[0]
+    norm = {"scale": P(None, None)} if cfg.norm_type == "rmsnorm" else {
+        "scale": P(None, None), "bias": P(None, None)}
+    att = jax.tree.map(lambda s: P(*(None,) + tuple(s)), L.attention_pspecs(fsdp),
+                       is_leaf=lambda x: isinstance(x, P))
+    mlp = jax.tree.map(lambda s: P(*(None,) + tuple(s)),
+                       L.mlp_pspecs(cfg.mlp_type, fsdp),
+                       is_leaf=lambda x: isinstance(x, P))
+    enc = {"norm1": norm, "attn": att, "norm2": norm, "mlp": mlp}
+    dec = {"norm1": norm, "attn": att, "normx": norm, "xattn": att,
+           "norm2": norm, "mlp": mlp}
+    fn = {"scale": P(None)} if cfg.norm_type == "rmsnorm" else {
+        "scale": P(None), "bias": P(None)}
+    return {"encoder": enc, "decoder": dec, "enc_norm": fn, "final_norm": fn,
+            "head_w": P(None, "model")}
+
+
+def _cross_attention(p, x, mem_k, mem_v, acfg):
+    """x: (B, Tq, D) queries; mem_k/v: (B, Tm, H, hd) precomputed from memory."""
+    b, t, d = x.shape
+    q = (x @ p["wq"]).reshape(b, t, acfg.n_heads, acfg.head_dim)
+    o = L.naive_attention(q, mem_k, mem_v, causal=False)
+    return o.reshape(b, t, -1) @ p["wo"]
+
+
+def _memory_kv(p, mem, acfg):
+    b, tm, d = mem.shape
+    k = (mem @ p["wk"]).reshape(b, tm, acfg.n_kv_heads, acfg.head_dim)
+    v = (mem @ p["wv"]).reshape(b, tm, acfg.n_kv_heads, acfg.head_dim)
+    g = acfg.n_heads // acfg.n_kv_heads
+    return L._repeat_kv(k, g), L._repeat_kv(v, g)
+
+
+def run_encoder(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, n_frames, enc_d) stub frontend output -> encoder memory."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cdt)
+    params = _cast_tree(params, cdt)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    def body(x, lp):
+        h = L.apply_norm(lp["norm1"], x, cfg.norm_eps)
+        import dataclasses
+        acfg = dataclasses.replace(cfg.attention, causal=False)
+        x = x + L.gqa_attention(lp["attn"], h, acfg, positions=positions)
+        h = L.apply_norm(lp["norm2"], x, cfg.norm_eps)
+        x = x + L.apply_mlp(lp["mlp"], h, cfg.mlp_type, cfg.activation)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.apply_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def run_decoder(params, cfg: ModelConfig, emb: jax.Array, memory: jax.Array):
+    """emb: (B, T, D) decoder token embeddings; memory: encoder output."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = emb.astype(cdt)
+    mem = memory.astype(cdt)
+    params = _cast_tree(params, cdt)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    def body(x, lp):
+        h = L.apply_norm(lp["norm1"], x, cfg.norm_eps)
+        x = x + L.gqa_attention(lp["attn"], h, cfg.attention, positions=positions)
+        h = L.apply_norm(lp["normx"], x, cfg.norm_eps)
+        mk, mv = _memory_kv(lp["xattn"], mem, cfg.attention)
+        x = x + _cross_attention(lp["xattn"], h, mk, mv, cfg.attention)
+        h = L.apply_norm(lp["norm2"], x, cfg.norm_eps)
+        x = x + L.apply_mlp(lp["mlp"], h, cfg.mlp_type, cfg.activation)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    return L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+
+
+def make_encdec_loss_fn(cfg: ModelConfig, parallel: ParallelConfig,
+                        mesh: Optional[Mesh] = None, *, t_chunk: int = 512):
+    """loss_fn(dense_params, emb, mb) with mb = {"frames", "labels"}."""
+
+    def loss_fn(dense_params, emb, mb):
+        memory = run_encoder(dense_params, cfg, mb["frames"])
+        hidden = run_decoder(dense_params, cfg, emb, memory)
+        head_w = dense_params["head_w"].astype(jnp.dtype(cfg.compute_dtype))
+        loss = vocab_parallel_xent(
+            hidden, head_w, mb["labels"], mesh,
+            batch_axes=parallel.batch_axes, model_axes=parallel.tensor_axes,
+            t_chunk=t_chunk,
+        )
+        return loss, {"xent": loss}
+
+    return loss_fn
+
+
+class EncDecCache(NamedTuple):
+    self_k: jax.Array  # (L, B, S, KV, hd)
+    self_v: jax.Array
+    mem_k: jax.Array  # (L, B, Tm, H, hd) precomputed cross K
+    mem_v: jax.Array
+    length: jax.Array
+
+
+def encdec_prefill(params, cfg: ModelConfig, emb, frames, *, cache_len: int):
+    """Run encoder + decoder prompt; build self/cross caches for decode."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    memory = run_encoder(params, cfg, frames)
+    params_c = _cast_tree(params, cdt)
+    x = emb.astype(cdt)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    a = cfg.attention
+
+    def body(x, lp):
+        h = L.apply_norm(lp["norm1"], x, cfg.norm_eps)
+        k = (h @ lp["attn"]["wk"]).reshape(b, t, a.n_kv_heads, a.head_dim)
+        v = (h @ lp["attn"]["wv"]).reshape(b, t, a.n_kv_heads, a.head_dim)
+        k = L.apply_rope(k, positions, a.rope_theta)
+        pad = cache_len - t
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        x = x + L.gqa_attention(lp["attn"], h, a, positions=positions)
+        h = L.apply_norm(lp["normx"], x, cfg.norm_eps)
+        mk, mv = _memory_kv(lp["xattn"], memory.astype(cdt), a)
+        x = x + _cross_attention(lp["xattn"], h, mk, mv, a)
+        h = L.apply_norm(lp["norm2"], x, cfg.norm_eps)
+        x = x + L.apply_mlp(lp["mlp"], h, cfg.mlp_type, cfg.activation)
+        return x, (ck, cv, mk, mv)
+
+    x, (cks, cvs, mks, mvs) = jax.lax.scan(body, x, params_c["decoder"])
+    x = L.apply_norm(params_c["final_norm"], x, cfg.norm_eps)
+    logits = (x[:, -1] @ params_c["head_w"].astype(cdt)).astype(jnp.float32)
+    return logits, EncDecCache(cks, cvs, mks, mvs, jnp.full((), t, jnp.int32))
+
+
+def encdec_decode_step(params, cfg: ModelConfig, emb, cache: EncDecCache):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    params_c = _cast_tree(params, cdt)
+    x = emb.astype(cdt)
+    pos = cache.length
+    a = cfg.attention
+
+    def body(x, xs):
+        lp, ck, cv, mk, mv = xs
+        h = L.apply_norm(lp["norm1"], x, cfg.norm_eps)
+        o, ck, cv = L.gqa_decode(lp["attn"], h, ck, cv, pos, a)
+        x = x + o
+        h = L.apply_norm(lp["normx"], x, cfg.norm_eps)
+        x = x + _cross_attention(lp["xattn"], h, mk.astype(cdt), mv.astype(cdt), a)
+        h = L.apply_norm(lp["norm2"], x, cfg.norm_eps)
+        x = x + L.apply_mlp(lp["mlp"], h, cfg.mlp_type, cfg.activation)
+        return x, (ck, cv)
+
+    x, (cks, cvs) = jax.lax.scan(
+        body, x, (params_c["decoder"], cache.self_k, cache.self_v,
+                  cache.mem_k, cache.mem_v)
+    )
+    x = L.apply_norm(params_c["final_norm"], x, cfg.norm_eps)
+    logits = (x[:, 0] @ params_c["head_w"].astype(cdt)).astype(jnp.float32)
+    return logits, EncDecCache(cks, cvs, cache.mem_k, cache.mem_v, pos + 1)

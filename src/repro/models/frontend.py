@@ -1,0 +1,31 @@
+"""Stub modality frontends (per assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer BACKBONE only; the frontend supplies precomputed
+frame/patch embeddings via input_specs).
+
+For smoke tests we generate deterministic pseudo-embeddings; for the
+dry-run, ShapeDtypeStructs of the same shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import FrontendConfig, ModelConfig
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int):
+    f = cfg.frontend
+    dim = f.feature_dim or (cfg.encoder.d_model or cfg.d_model if cfg.encoder else cfg.d_model)
+    return (batch, f.n_positions, dim)
+
+
+def stub_frontend_embeddings(cfg: ModelConfig, batch: int, seed: int = 0) -> jax.Array:
+    """Deterministic pseudo frame/patch embeddings for tests/examples."""
+    shape = frontend_embed_shape(cfg, batch)
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * 0.02)
+
+
+def stub_frontend_spec(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(frontend_embed_shape(cfg, batch), dtype)

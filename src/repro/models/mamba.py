@@ -1,0 +1,255 @@
+"""Mamba2 (SSD — state-space duality) block, chunked matmul form.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060 in MXU-friendly
+einsum form: intra-chunk quadratic attention-like term + inter-chunk state
+recurrence via ``lax.scan``. Used directly by ``mamba2-370m`` and as the
+"mamba" mixer inside Jamba's 1:7 hybrid pattern.
+
+Projections are kept as separate matrices (wz/wx/wb/wc/wdt) instead of one
+fused in_proj so each can carry its own TP sharding (heads over "model",
+small B/C/group projections replicated) — DESIGN.md §7.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import MambaConfig
+from ..utils import cdiv
+
+
+class MambaDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    headdim: int
+    n_groups: int
+    d_state: int
+    d_conv: int
+
+
+def mamba_dims(d_model: int, cfg: MambaConfig) -> MambaDims:
+    d_inner = cfg.expand * d_model
+    assert d_inner % cfg.headdim == 0
+    return MambaDims(
+        d_model, d_inner, d_inner // cfg.headdim, cfg.headdim, cfg.n_groups,
+        cfg.d_state, cfg.d_conv,
+    )
+
+
+def init_mamba(rng, d_model: int, cfg: MambaConfig, dtype=jnp.float32):
+    dims = mamba_dims(d_model, cfg)
+    ks = jax.random.split(rng, 8)
+    s = 1.0 / (d_model ** 0.5)
+    gn = dims.n_groups * dims.d_state
+    dt = jnp.exp(
+        jax.random.uniform(ks[6], (dims.n_heads,))
+        * (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min))
+        + jnp.log(cfg.dt_min)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "wz": jax.random.normal(ks[0], (d_model, dims.d_inner), dtype) * s,
+        "wx": jax.random.normal(ks[1], (d_model, dims.d_inner), dtype) * s,
+        "wb": jax.random.normal(ks[2], (d_model, gn), dtype) * s,
+        "wc": jax.random.normal(ks[3], (d_model, gn), dtype) * s,
+        "wdt": jax.random.normal(ks[4], (d_model, dims.n_heads), dtype) * s,
+        "conv_w": jax.random.normal(ks[5], (cfg.d_conv, dims.d_inner + 2 * gn), dtype)
+        * 0.1,
+        "conv_b": jnp.zeros((dims.d_inner + 2 * gn,), dtype),
+        "A_log": jnp.log(jnp.arange(1, dims.n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((dims.n_heads,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_scale": jnp.ones((dims.d_inner,), jnp.float32),
+        "wo": jax.random.normal(ks[7], (dims.d_inner, d_model), dtype)
+        * (1.0 / (dims.d_inner ** 0.5)),
+    }
+
+
+def mamba_pspecs(fsdp: Optional[str] = None):
+    return {
+        "wz": P(fsdp, "model"), "wx": P(fsdp, "model"),
+        "wb": P(fsdp, None), "wc": P(fsdp, None),
+        "wdt": P(fsdp, "model"),
+        "conv_w": P(None, None), "conv_b": P(None),
+        "A_log": P("model"), "D": P("model"), "dt_bias": P("model"),
+        "norm_scale": P("model"),
+        "wo": P("model", fsdp),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv along time. x: (B, L, C); w: (K, C).
+
+    Returns (y, new_state) where state carries the last K-1 inputs for
+    decode continuation."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1) :] if k > 1 else jnp.zeros_like(x[:, :0])
+    return y, new_state
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, L, H, Pd)
+    dt: jax.Array,  # (B, L, H) — post-softplus
+    A: jax.Array,  # (H,) negative
+    Bm: jax.Array,  # (B, L, G, N)
+    Cm: jax.Array,  # (B, L, G, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, Pd, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,L,H,Pd), final_state (B,H,Pd,N))."""
+    b, l, h, pd = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hg = h // g  # heads per group
+    q = min(chunk, l)
+    nc = cdiv(l, q)
+    pad = nc * q - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    # reshape to chunks: (NC, B, Q, ...)
+    def chunked(t):
+        return t.reshape(b, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc = chunked(x), chunked(dt)
+    Bc, Cc = chunked(Bm), chunked(Cm)
+
+    a = (dtc.astype(jnp.float32) * A)  # (NC, B, Q, H)
+    a_cum = jnp.cumsum(a, axis=2)  # within-chunk cumulative
+    a_tot = a_cum[:, :, -1]  # (NC, B, H)
+
+    # broadcast group B/C to heads
+    def to_heads(t):  # (NC,B,Q,G,N) -> (NC,B,Q,H,N)
+        return jnp.repeat(t, hg, axis=3)
+
+    Bh, Ch = to_heads(Bc), to_heads(Cc)
+    xdt = xc.astype(jnp.float32) * dtc[..., None].astype(jnp.float32)
+
+    # ---- intra-chunk (quadratic within chunk, causal) --------------------
+    # scores[i,j] = C_i·B_j * exp(a_cum[i]-a_cum[j]) for i>=j
+    cb = jnp.einsum("cbqhn,cbkhn->cbhqk", Ch.astype(jnp.float32),
+                    Bh.astype(jnp.float32))
+    # a_cum: (NC,B,Q,H) -> L[i,j] = exp(a_cum[:,:,i,h] - a_cum[:,:,j,h]), i>=j
+    ai = a_cum.transpose(0, 1, 3, 2)  # (NC,B,H,Q)
+    seg = ai[..., :, None] - ai[..., None, :]  # (NC,B,H,Q,Q)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    Lmat = jnp.where(mask, jnp.exp(seg), 0.0)
+    y_intra = jnp.einsum("cbhqk,cbhqk,cbkhp->cbqhp", cb, Lmat,
+                         xdt)
+
+    # ---- chunk states ----------------------------------------------------
+    # S_c = sum_j exp(a_tot - a_cum[j]) * B_j ⊗ (x_j dt_j)  -> (NC,B,H,Pd,N)
+    decay_to_end = jnp.exp(a_tot[:, :, None] - a_cum)  # (NC,B,Q,H)
+    S = jnp.einsum("cbqh,cbqhn,cbqhp->cbhpn", decay_to_end, Bh.astype(jnp.float32), xdt)
+
+    # ---- inter-chunk recurrence ------------------------------------------
+    h0 = (jnp.zeros((b, h, pd, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(carry, xs):
+        s_c, atot_c = xs
+        new = carry * jnp.exp(atot_c)[:, :, None, None] + s_c
+        return new, carry  # emit state ENTERING the chunk
+
+    final_state, h_prev = jax.lax.scan(body, h0, (S, a_tot))
+
+    # y_inter[i] = C_i · (exp(a_cum[i]) * h_prev)
+    decay_in = jnp.exp(a_cum)  # (NC,B,Q,H)
+    y_inter = jnp.einsum("cbqhn,cbhpn,cbqh->cbqhp", Ch.astype(jnp.float32), h_prev,
+                         decay_in)
+
+    y = (y_intra + y_inter).swapaxes(0, 1).reshape(b, nc * q, h, pd)
+    if pad:
+        y = y[:, :l]
+    return y, final_state
+
+
+def ssd_reference(x, dt, A, Bm, Cm, init_state=None):
+    """O(L) sequential reference for tests: step-by-step recurrence."""
+    b, l, h, pd = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hg = h // g
+    state = (jnp.zeros((b, h, pd, n), jnp.float32) if init_state is None
+             else init_state.astype(jnp.float32))
+    ys = []
+    for t in range(l):
+        a_t = jnp.exp(dt[:, t].astype(jnp.float32) * A)  # (B,H)
+        Bt = jnp.repeat(Bm[:, t], hg, axis=1).astype(jnp.float32)  # (B,H,N)
+        Ct = jnp.repeat(Cm[:, t], hg, axis=1).astype(jnp.float32)
+        xt = x[:, t].astype(jnp.float32) * dt[:, t, :, None].astype(jnp.float32)
+        state = state * a_t[:, :, None, None] + jnp.einsum("bhn,bhp->bhpn", Bt, xt)
+        ys.append(jnp.einsum("bhpn,bhn->bhp", state, Ct))
+    return jnp.stack(ys, axis=1), state
+
+
+def mamba_mixer(
+    params,
+    x: jax.Array,  # (B, L, D)
+    cfg: MambaConfig,
+    *,
+    conv_state: Optional[jax.Array] = None,
+    ssm_state: Optional[jax.Array] = None,
+    return_state: bool = False,
+):
+    """Full Mamba2 mixer: proj -> conv -> SSD -> gated norm -> out proj."""
+    dims = mamba_dims(x.shape[-1], cfg)
+    b, l, d = x.shape
+    gn = dims.n_groups * dims.d_state
+    z = x @ params["wz"]
+    xr = x @ params["wx"]
+    br = x @ params["wb"]
+    cr = x @ params["wc"]
+    dt_raw = x @ params["wdt"]
+
+    xbc = jnp.concatenate([xr, br, cr], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xr = xbc[..., : dims.d_inner]
+    br = xbc[..., dims.d_inner : dims.d_inner + gn]
+    cr = xbc[..., dims.d_inner + gn :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xr.reshape(b, l, dims.n_heads, dims.headdim)
+    Bm = br.reshape(b, l, dims.n_groups, dims.d_state)
+    Cm = cr.reshape(b, l, dims.n_groups, dims.d_state)
+    y, final_state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.chunk_size, ssm_state)
+    y = y + params["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, l, dims.d_inner)
+    # gated RMSNorm
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), -1, keepdims=True)
+    y = y * jax.lax.rsqrt(ms + 1e-5) * params["norm_scale"]
+    out = y.astype(x.dtype) @ params["wo"]
+    if return_state:
+        return out, (new_conv, final_state)
+    return out
+
+
+def mamba_decode_step(params, x, cfg: MambaConfig, conv_state, ssm_state):
+    """Single-token decode: O(1) state update. x: (B, 1, D)."""
+    out, (new_conv, new_ssm) = mamba_mixer(
+        params, x, cfg, conv_state=conv_state, ssm_state=ssm_state,
+        return_state=True,
+    )
+    return out, new_conv, new_ssm
+
+
+def init_mamba_cache(batch: int, d_model: int, cfg: MambaConfig, dtype=jnp.float32):
+    dims = mamba_dims(d_model, cfg)
+    gn = dims.n_groups * dims.d_state
+    conv = jnp.zeros((batch, cfg.d_conv - 1, dims.d_inner + 2 * gn), dtype)
+    ssm = jnp.zeros((batch, dims.n_heads, dims.headdim, dims.d_state), jnp.float32)
+    return conv, ssm

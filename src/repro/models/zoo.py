@@ -1,0 +1,186 @@
+"""Model zoo adapter: one interface over all architecture families.
+
+``build_model(arch, parallel, mesh, reduced)`` returns a ``ModelBundle``
+exposing init/pspecs/loss for training and prefill/decode for serving —
+the launcher, dry-run, tests and examples all go through this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ParallelConfig, RecsysModelConfig
+from ..configs.registry import ArchSpec
+from . import dlrm as DL
+from . import encdec as ED
+from . import fuxi as FX
+from . import hstu as HS
+from . import transformer as TF
+
+
+@dataclass
+class ModelBundle:
+    arch: ArchSpec
+    cfg: Any  # ModelConfig | RecsysModelConfig
+    kind: str
+    init_params: Callable  # (rng) -> params
+    param_pspecs: Callable  # () -> pytree of P
+    loss_fn: Callable  # (dense_params, emb, mb) -> (loss, metrics)
+    emb_dim: int
+    # serving (None for recsys)
+    prefill: Optional[Callable] = None
+    decode_step: Optional[Callable] = None
+    init_cache: Optional[Callable] = None  # (batch, max_len) -> cache
+    cache_pspecs: Optional[Callable] = None
+    # optimizer-moment pspecs (ZeRO-1: moments carry the fsdp axis)
+    opt_pspecs: Optional[Callable] = None
+
+
+def build_model(
+    arch: ArchSpec,
+    parallel: ParallelConfig,
+    mesh: Optional[Mesh] = None,
+    *,
+    reduced: bool = False,
+    t_chunk: int = 512,
+) -> ModelBundle:
+    cfg = arch.reduced if reduced else arch.config
+
+    if arch.kind == "lm":
+        base_loss = TF.make_lm_loss_fn(cfg, parallel, mesh, t_chunk=t_chunk)
+        if cfg.frontend is not None:  # VLM: patch prefix + text tokens
+            def loss_fn(dense_params, emb, mb):
+                patches = mb["patches"].astype(emb.dtype)
+                full = jnp.concatenate([patches, emb], axis=1)
+                return base_loss(dense_params, full, {"labels": mb["labels"]})
+        else:
+            def loss_fn(dense_params, emb, mb):
+                return base_loss(dense_params, emb, mb)
+
+        def prefill(params, emb, **kw):
+            return TF.lm_prefill(params, cfg, emb, parallel=parallel, mesh=mesh, **kw)
+
+        def decode(params, emb, cache):
+            return TF.lm_decode_step(params, cfg, emb, cache,
+                                     parallel=parallel, mesh=mesh)
+
+        return ModelBundle(
+            arch=arch, cfg=cfg, kind="lm",
+            init_params=lambda rng: TF.init_lm_params(rng, cfg),
+            param_pspecs=lambda: TF.lm_pspecs(cfg, parallel, mesh),
+            opt_pspecs=lambda: TF.lm_pspecs(cfg, parallel, mesh,
+                                            for_optimizer=True),
+            loss_fn=loss_fn, emb_dim=cfg.d_model,
+            prefill=prefill, decode_step=decode,
+            init_cache=lambda b, ml, dtype=jnp.bfloat16: TF.init_lm_cache(
+                cfg, b, ml, dtype),
+            cache_pspecs=lambda: TF.lm_cache_pspecs(cfg, parallel),
+        )
+
+    if arch.kind == "encdec":
+        loss = ED.make_encdec_loss_fn(cfg, parallel, mesh, t_chunk=t_chunk)
+
+        def prefill(params, emb, frames=None, cache_len=None, **kw):
+            return ED.encdec_prefill(params, cfg, emb, frames, cache_len=cache_len)
+
+        def decode(params, emb, cache):
+            return ED.encdec_decode_step(params, cfg, emb, cache)
+
+        return ModelBundle(
+            arch=arch, cfg=cfg, kind="encdec",
+            init_params=lambda rng: ED.init_encdec_params(rng, cfg),
+            param_pspecs=lambda: ED.encdec_pspecs(cfg, parallel, mesh),
+            loss_fn=loss, emb_dim=cfg.d_model,
+            prefill=prefill, decode_step=decode,
+        )
+
+    if arch.kind == "recsys":
+        if cfg.backbone == "hstu":
+            init = lambda rng: HS.init_hstu_params(rng, cfg)
+            pspecs = lambda: HS.hstu_pspecs(cfg)
+            loss = HS.make_hstu_loss_fn(cfg, parallel, mesh)
+        elif cfg.backbone == "fuxi":
+            init = lambda rng: FX.init_fuxi_params(rng, cfg)
+            pspecs = lambda: FX.fuxi_pspecs(cfg)
+            loss = FX.make_fuxi_loss_fn(cfg, parallel, mesh)
+        elif cfg.backbone == "dlrm":
+            init = lambda rng: DL.init_dlrm_params(rng, cfg)
+            pspecs = lambda: DL.dlrm_pspecs(cfg)
+            loss = DL.make_dlrm_loss_fn(cfg, parallel, mesh)
+        else:
+            raise ValueError(cfg.backbone)
+        return ModelBundle(
+            arch=arch, cfg=cfg, kind="recsys",
+            init_params=init, param_pspecs=pspecs, loss_fn=loss,
+            emb_dim=cfg.max_table_dim,
+        )
+
+    raise ValueError(arch.kind)
+
+
+# ---------------------------------------------------------------------------
+# Batch shapes per (arch, shape) — used by smoke tests, dry-run specs and
+# the data plumbing. Keys are *scrambled mega-table ids*.
+# ---------------------------------------------------------------------------
+
+
+def train_batch_shapes(bundle: ModelBundle, global_batch: int, seq_len: int,
+                       n_micro: int) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """{field: ((N, mb, ...), dtype)} for one training window."""
+    cfg = bundle.cfg
+    mb = global_batch // n_micro
+    if bundle.kind == "recsys":
+        if cfg.backbone == "dlrm":
+            f_total = DL.num_feature_slots(cfg)
+            return {
+                "keys": ((n_micro, mb, f_total), jnp.int32),
+                "dense": ((n_micro, mb, cfg.num_dense_features), jnp.float32),
+                "labels": ((n_micro, mb), jnp.float32),
+            }
+        # sequential recsys: item-id sequences
+        return {"keys": ((n_micro, mb, cfg.seq_len), jnp.int32)}
+    if bundle.kind == "encdec":
+        enc_d = cfg.encoder.d_model or cfg.d_model
+        return {
+            "keys": ((n_micro, mb, seq_len), jnp.int32),
+            "frames": ((n_micro, mb, cfg.encoder.n_frames, enc_d), jnp.float32),
+            "labels": ((n_micro, mb, seq_len), jnp.int32),
+        }
+    if cfg.frontend is not None:  # vlm
+        n_p = cfg.frontend.n_positions
+        t_text = seq_len - n_p
+        return {
+            "keys": ((n_micro, mb, t_text), jnp.int32),
+            "patches": ((n_micro, mb, n_p, cfg.d_model), jnp.float32),
+            "labels": ((n_micro, mb, seq_len), jnp.int32),
+        }
+    return {
+        "keys": ((n_micro, mb, seq_len), jnp.int32),
+        "labels": ((n_micro, mb, seq_len), jnp.int32),
+    }
+
+
+def batch_pspecs(bundle: ModelBundle, parallel: ParallelConfig,
+                 engine_keys_pspec: P) -> Dict[str, P]:
+    """Partition specs for staged training batches (leading N axis)."""
+    ba = parallel.batch_axes if len(parallel.batch_axes) > 1 else parallel.batch_axes[0]
+    cfg = bundle.cfg
+    specs: Dict[str, P] = {"keys": P(*(None,) + tuple(engine_keys_pspec))}
+    if bundle.kind == "recsys":
+        if cfg.backbone == "dlrm":
+            specs["dense"] = P(None, ba, None)
+            specs["labels"] = P(None, ba)
+        return specs
+    if bundle.kind == "encdec":
+        specs["frames"] = P(None, ba, None, None)
+        specs["labels"] = P(None, ba, None)
+        return specs
+    if cfg.frontend is not None:
+        specs["patches"] = P(None, ba, None, None)
+    specs["labels"] = P(None, ba, None)
+    return specs

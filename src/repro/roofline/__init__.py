@@ -1,0 +1,11 @@
+"""Roofline derivation from compiled dry-run artifacts."""
+from .analysis import (
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    CollectiveStats,
+    RooflineReport,
+    model_flops_for,
+    parse_collectives,
+    roofline,
+)

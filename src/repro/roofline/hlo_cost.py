@@ -1,0 +1,249 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any cost
+inside ``lax.scan`` (layer stacks, xent chunks, attention kv-chunks) is
+under-reported by the trip count. This module parses the optimized HLO
+text into computations, builds the call graph (while bodies with
+``known_trip_count``, fusions, calls), and accumulates
+
+  * dot/convolution FLOPs  (2 x prod(result dims) x prod(contraction dims))
+  * collective wire bytes  (ring model, see analysis.py)
+  * HBM traffic estimate   (sum of operand+result bytes of non-fused ops)
+
+each scaled by the product of enclosing trip counts. Shapes are resolved
+from each instruction's printed result type and operand defs.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],\{\}]+?))\s+"
+    r"([\w\-]+)\((.*)$"
+)
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP = re.compile(r'known_trip_count[":{\s]+n["\s:]+(\d+)')
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_GROUPS = re.compile(r"replica_groups=\{?\{([0-9, ]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "all-to-all", "reduce-scatter",
+                  "collective-permute")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """(elements, bytes) across all array components in the type string."""
+    elems = 0
+    nbytes = 0
+    for dtype, dims in _SHAPE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    tail: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    defs: Dict[str, str] = field(default_factory=dict)  # instr name -> type str
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR.match(line.strip())
+        if hdr and ("->" in line):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            if line.strip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.instrs.append(ins)
+            cur.defs[ins.name] = ins.type_str
+        else:
+            # parameter lines: "%param_0.1 = f32[..] parameter(0)" match above;
+            # anything else (multiline attrs) appends to previous tail
+            if cur.instrs and line.strip():
+                cur.instrs[-1].tail += " " + line.strip()
+    return comps, entry
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_wire_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_raw_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_collective_wire(self) -> float:
+        return sum(self.collective_wire_bytes.values())
+
+
+def _dot_flops(ins: Instr, defs: Dict[str, str]) -> float:
+    out_dims = _shape_dims(ins.type_str)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    mc = _CONTRACT.search(ins.tail)
+    contract = 1
+    ops = _OPERANDS.findall(ins.tail)
+    if mc and ops:
+        lhs_type = defs.get(ops[0])
+        if lhs_type:
+            ldims = _shape_dims(lhs_type)
+            for idx in mc.group(1).split(","):
+                if idx and int(idx) < len(ldims):
+                    contract *= ldims[int(idx)]
+    return 2.0 * out_n * contract
+
+
+def _collective_wire(op: str, nbytes: int, tail: str) -> float:
+    g = 1
+    mg = _GROUPS.search(tail)
+    if mg:
+        g = len([x for x in mg.group(1).split(",") if x.strip()])
+    else:
+        mi = _GROUPS_IOTA.search(tail)
+        if mi:
+            g = int(mi.group(2))
+    if g <= 1 and op != "collective-permute":
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g * nbytes
+    if op == "all-gather":
+        return (g - 1) / g * nbytes
+    if op == "reduce-scatter":
+        return float(g - 1) * nbytes
+    if op == "all-to-all":
+        return (g - 1) / g * nbytes
+    return float(nbytes)  # collective-permute
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps, entry = parse_computations(hlo)
+    cost = HloCost()
+    if entry is None:
+        return cost
+
+    # Pre-compute: which computations are fusion bodies (their ops' bytes are
+    # internal — don't count HBM traffic for them, but DO count dot flops).
+    fusion_bodies = set()
+    called_with_mult: List[Tuple[str, float]] = []
+    visited_guard = set()
+
+    def walk(comp_name: str, mult: float, in_fusion: bool):
+        key = (comp_name, round(mult, 6), in_fusion)
+        # a computation can be visited multiple times with different mults
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "while":
+                mt = _TRIP.search(ins.tail)
+                trip = float(mt.group(1)) if mt else 1.0
+                mb = _BODY.search(ins.tail)
+                if mb:
+                    walk(mb.group(1), mult * trip, in_fusion)
+                continue
+            if op in ("fusion",):
+                mcall = _CALLS.search(ins.tail)
+                if mcall:
+                    walk(mcall.group(1), mult, True)
+                # fused op's result+operand bytes = HBM traffic of the fusion
+                _, nbytes = _shape_elems_bytes(ins.type_str)
+                opbytes = 0
+                for oname in _OPERANDS.findall(ins.tail.split(", calls=")[0]):
+                    t = comp.defs.get(oname)
+                    if t:
+                        opbytes += _shape_elems_bytes(t)[1]
+                cost.hbm_bytes += mult * (nbytes + opbytes)
+                continue
+            if op in ("call", "conditional", "custom-call", "async-start"):
+                for cname in _CALLS.findall(ins.tail):
+                    walk(cname, mult, in_fusion)
+                # fallthrough: count op itself too
+            base = op.split("-start")[0]
+            if base in COLLECTIVE_OPS:
+                _, nbytes = _shape_elems_bytes(ins.type_str)
+                if base == "all-reduce" and "(" in ins.type_str:
+                    pass  # tuple all-reduce: bytes already summed
+                wire = _collective_wire(base, nbytes, ins.tail)
+                cost.collective_counts[base] = (
+                    cost.collective_counts.get(base, 0.0) + mult)
+                cost.collective_raw_bytes[base] = (
+                    cost.collective_raw_bytes.get(base, 0.0) + mult * nbytes)
+                cost.collective_wire_bytes[base] = (
+                    cost.collective_wire_bytes.get(base, 0.0) + mult * wire)
+                continue
+            if op == "dot":
+                cost.flops += mult * _dot_flops(ins, comp.defs)
+                if not in_fusion:
+                    _, nbytes = _shape_elems_bytes(ins.type_str)
+                    cost.hbm_bytes += mult * nbytes
+                continue
+            if op == "convolution":
+                # approximate: 2 * out_elems * (prod kernel spatial * in_ch)
+                out_n, nbytes = _shape_elems_bytes(ins.type_str)
+                ops = _OPERANDS.findall(ins.tail)
+                kn = 1
+                if len(ops) >= 2 and ops[1] in comp.defs:
+                    kd = _shape_dims(comp.defs[ops[1]])
+                    for d in kd[:-1]:
+                        kn *= d
+                cost.flops += mult * 2.0 * out_n * kn
+                if not in_fusion:
+                    cost.hbm_bytes += mult * nbytes
+                continue
+            if not in_fusion and op not in ("parameter", "constant", "tuple",
+                                            "get-tuple-element", "bitcast"):
+                _, nbytes = _shape_elems_bytes(ins.type_str)
+                cost.hbm_bytes += mult * nbytes
+
+    walk(entry, 1.0, False)
+    return cost

@@ -1,0 +1,85 @@
+"""Render dry-run JSONL records into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.roofline.report results/dryrun_single.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+from ..utils import human_bytes, human_count
+
+
+def load(path: str) -> List[dict]:
+    return [json.loads(l) for l in open(path)]
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.1f}"
+
+
+def roofline_table(recs: List[dict]) -> str:
+    head = ("| arch | shape | kind | mesh | compute (ms) | memory (ms) | "
+            "collective (ms) | dominant | model GFLOPs | useful ratio | "
+            "peak mem/dev |\n"
+            "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | {r.get('mesh','')} "
+                        f"| SKIP: {r['skipped'][:58]}… | | | | | | |")
+            continue
+        if "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        m = r["memory"]
+        ratio = rl.get("useful_flops_ratio")
+        ratio_s = f"{ratio:.3f}" if ratio else "—"
+        gflops = (rl.get("model_flops") or 0) / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | {r['mesh']} | "
+            f"{fmt_ms(rl['compute_s'])} | {fmt_ms(rl['memory_s'])} | "
+            f"{fmt_ms(rl['collective_s'])} | **{rl['dominant']}** | "
+            f"{gflops:.0f} | {ratio_s} | "
+            f"{human_bytes(m['peak_estimate_bytes'])} |")
+    return head + "\n".join(rows) + "\n"
+
+
+def dryrun_table(recs: List[dict]) -> str:
+    head = ("| arch | shape | mesh | status | params | tokens/step | "
+            "args/dev | temp/dev | collectives | compile (s) |\n"
+            "|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','')} | "
+                        f"SKIP ({r['skipped'][:70]}…) | | | | | | |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','')} | "
+                        f"FAIL ({r['error'][:60]}) | | | | | | |")
+            continue
+        m = r["memory"]
+        colls = r["roofline"]["collective_counts"]
+        cstr = " ".join(f"{k.split('-')[-1] if False else k}:{v}"
+                        for k, v in sorted(colls.items()))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+            f"{human_count(r['params'])} | {human_count(r['tokens_per_step'])} | "
+            f"{human_bytes(m['argument_bytes'])} | {human_bytes(m['temp_bytes'])} | "
+            f"{cstr} | {r['compile_s']} |")
+    return head + "\n".join(rows) + "\n"
+
+
+def main():
+    for path in sys.argv[1:]:
+        recs = load(path)
+        print(f"\n### {path}\n")
+        print(dryrun_table(recs))
+        print()
+        print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Dense-parameter optimizers (AdamW, SGD-momentum, Adafactor-lite) and LR
+schedules — self-contained pytree implementations (no optax dependency).
+
+The sparse (embedding) optimizer is rowwise Adagrad and lives inside the
+embedding engine so it can be applied owner-side per frozen window; dense
+parameters use the optimizers here under data-parallel semantics (grads are
+already batch-mean; GSPMD inserts the AllReduce from shardings).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import OptimizerConfig
+from ..utils import tree_scale
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jax.Array  # () int32
+    mu: PyTree  # first moment (f32)
+    nu: PyTree  # second moment (f32)
+
+
+class OptimizerPair(NamedTuple):
+    """init/update closure pair for a dense optimizer."""
+
+    init: Callable[[PyTree], Any]
+    update: Callable[[PyTree, Any, PyTree, Optional[jax.Array]], Tuple[PyTree, Any]]
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return tree_scale(grads, scale), norm
+
+
+def make_adamw(cfg: OptimizerConfig) -> OptimizerPair:
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+
+    def init(params):
+        f32z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32), jax.tree.map(f32z, params),
+                         jax.tree.map(f32z, params))
+
+    def update(params, state: AdamState, grads, lr):
+        if cfg.grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        new_mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        new_nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads,
+        )
+
+        def upd(p, m, v):
+            delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, new_mu, new_nu)
+        return new_params, AdamState(step, new_mu, new_nu), gnorm
+
+    return OptimizerPair(init, update)
+
+
+class SgdState(NamedTuple):
+    step: jax.Array
+    mom: PyTree
+
+
+def make_sgd(cfg: OptimizerConfig, momentum: float = 0.9) -> OptimizerPair:
+    def init(params):
+        return SgdState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(params, state: SgdState, grads, lr):
+        if cfg.grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        else:
+            gnorm = global_norm(grads)
+
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state.mom, grads
+        )
+        new_p = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, new_m
+        )
+        return new_p, SgdState(state.step + 1, new_m), gnorm
+
+    return OptimizerPair(init, update)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> OptimizerPair:
+    if cfg.name == "adamw":
+        return make_adamw(cfg)
+    if cfg.name == "sgd":
+        return make_sgd(cfg)
+    raise ValueError(f"unknown optimizer {cfg.name}")
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * jnp.where(s < warmup, warm, cos)
+
+    return sched
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)

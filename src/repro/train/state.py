@@ -1,0 +1,28 @@
+"""Train state pytrees shared by the driver, baselines and the dry-run."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+
+from ..core.embedding.engine import DualBuffer, WindowPlan
+from ..core.embedding.table import EmbeddingTableState
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    """Full training state: dense params + optimizer + sparse master table."""
+
+    dense: PyTree
+    opt: Any
+    table: EmbeddingTableState
+    step: jax.Array  # () int32
+
+
+class PipelineCarry(NamedTuple):
+    """Steady-state NestPipe device carry between consecutive batches:
+    the (already synced) buffer serving batch t and its window plan."""
+
+    buffer: DualBuffer
+    plan: WindowPlan

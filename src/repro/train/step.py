@@ -1,0 +1,129 @@
+"""Step builders: the fused NestPipe steady-state step, the serial
+(TorchRec-like) baseline step, and the async (UniEmb-like) staleness step.
+
+The fused NestPipe step contains the device-side work of ALL five DBP
+stages for one steady-state iteration (paper Fig. 3):
+
+    stage 5  FWP window over batch t   (emb A2A / dense fwd-bwd / grad A2A xN)
+    stage 5' frozen-window updates     (dense AdamW + buffer rowwise-adagrad)
+    stage 5'' master writeback of t
+    stage 3  key routing for t+1       (fused key All2All)
+    stage 4a retrieval for t+1         (from the PRE-writeback master — the
+                                        overlap the paper exploits)
+    stage 4b dual-buffer sync          (intersection copy: Prop. 1 exactness)
+
+Retrieval deliberately reads the stale master: keys in K(t) ∩ K(t+1) are
+repaired by the sync, keys outside K(t) were never touched — so the step is
+*exactly* synchronous while retrieval needs no dependency on the writeback,
+which is what lets XLA overlap it with the window compute.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.embedding.engine import EmbeddingEngine, GradPacket
+from ..core.fwp.executor import build_fwp_window
+from ..utils import tree_scale
+from .optim import OptimizerPair
+from .state import PipelineCarry, TrainState
+
+
+class StepFns(NamedTuple):
+    init_carry: Callable  # (table, keys0) -> PipelineCarry
+    nestpipe_step: Callable  # (state, carry, batch, keys_next) -> (state, carry, aux)
+    async_step: Callable  # same, but no dual-buffer sync (staleness baseline)
+    serial_step: Callable  # (state, batch) -> (state, aux)
+
+
+def build_step_fns(
+    engine: EmbeddingEngine,
+    loss_fn: Callable,  # (dense_params, emb, mb_batch) -> (loss, metrics)
+    optimizer: OptimizerPair,
+    lr_sched: Callable,
+    n_micro: int,
+    mb_keys_shape: Tuple[int, ...],
+    *,
+    unroll: bool = True,
+) -> StepFns:
+    window_fn = build_fwp_window(
+        engine, loss_fn, n_micro, mb_keys_shape, unroll=unroll
+    )
+
+    def init_carry(table, keys0) -> PipelineCarry:
+        """Pipeline warm-up: route + retrieve batch 0 (no sync partner yet)."""
+        plan = engine.route_window(keys0, n_micro)
+        buf = engine.retrieve(table, plan)
+        return PipelineCarry(buf, plan)
+
+    def _step(state: TrainState, carry: PipelineCarry, batch, keys_next, *,
+              sync: bool):
+        # ---- stage 5: frozen window over batch t --------------------------
+        out = window_fn(state.dense, carry.buffer, carry.plan, batch)
+        lr = lr_sched(state.step)
+        new_dense, new_opt, gnorm = optimizer.update(
+            state.dense, state.opt, out.dense_grads, lr
+        )
+        buf_updated = engine.apply_window_to_buffer(carry.buffer, out.packets)
+
+        # ---- stage 5'': writeback of t ------------------------------------
+        new_table = engine.writeback(state.table, buf_updated)
+
+        # ---- stages 3+4: routing, retrieval and sync for t+1 --------------
+        plan_next = engine.route_window(keys_next, n_micro)
+        pre_buf = engine.retrieve(state.table, plan_next)  # stale master: OK
+        if sync:
+            pre_buf = engine.sync_buffers(buf_updated, pre_buf)
+
+        aux = {
+            "loss": out.loss,
+            "grad_norm": gnorm,
+            "lr": lr,
+            "routing_overflow": engine.overflow_metric(carry.plan),
+            **out.metrics,
+        }
+        new_state = TrainState(new_dense, new_opt, new_table, state.step + 1)
+        return new_state, PipelineCarry(pre_buf, plan_next), aux
+
+    def nestpipe_step(state, carry, batch, keys_next):
+        return _step(state, carry, batch, keys_next, sync=True)
+
+    def async_step(state, carry, batch, keys_next):
+        """UniEmb-like pipeline WITHOUT dual-buffer sync: embeddings read by
+        batch t+1 miss batch t's updates for intersecting keys (one-step
+        staleness) — reproduces the paper's consistency comparison."""
+        return _step(state, carry, batch, keys_next, sync=False)
+
+    # ---------------- serial (TorchRec-like) baseline ----------------------
+    grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)
+
+    def serial_step(state: TrainState, batch):
+        """Fully synchronous flat step: batch-level lookup from master,
+        single fwd/bwd over the whole batch, direct master update. The
+        same math as NestPipe (test-asserted), none of the pipelining."""
+        # batch keys arrive stacked (N, ...) for uniformity; flatten window.
+        packets = []
+        losses = []
+        gsum = None
+        for i in range(n_micro):
+            mb = jax.tree.map(lambda x: x[i], batch)
+            emb, plan = engine.lookup_from_master(state.table, mb["keys"])
+            (loss, metrics), (dg, demb) = grad_fn(state.dense, emb, mb)
+            packets.append(
+                engine.grads_to_owner(
+                    plan, demb * (1.0 / n_micro), mb_keys_shape, n_micro
+                )
+            )
+            losses.append(loss)
+            gsum = dg if gsum is None else jax.tree.map(jnp.add, gsum, dg)
+        pkts = jax.tree.map(lambda *xs: jnp.stack(xs), *packets)
+        gmean = tree_scale(gsum, 1.0 / n_micro)
+        lr = lr_sched(state.step)
+        new_dense, new_opt, gnorm = optimizer.update(state.dense, state.opt, gmean, lr)
+        new_table = engine.apply_packets_to_master(state.table, pkts)
+        aux = {"loss": jnp.mean(jnp.stack(losses)), "grad_norm": gnorm, "lr": lr}
+        return TrainState(new_dense, new_opt, new_table, state.step + 1), aux
+
+    return StepFns(init_carry, nestpipe_step, async_step, serial_step)

@@ -1,0 +1,105 @@
+"""Small shared utilities: pytree helpers, rng splitting, numerics."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Iterable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def tree_zeros_like(tree: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_allclose(a: PyTree, b: PyTree, atol=1e-6, rtol=1e-6) -> bool:
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    if len(leaves_a) != len(leaves_b):
+        return False
+    return all(
+        np.allclose(np.asarray(x, np.float64), np.asarray(y, np.float64), atol=atol, rtol=rtol)
+        for x, y in zip(leaves_a, leaves_b)
+    )
+
+
+def tree_max_abs_diff(a: PyTree, b: PyTree) -> float:
+    diffs = jax.tree.map(
+        lambda x, y: float(np.max(np.abs(np.asarray(x, np.float64) - np.asarray(y, np.float64))))
+        if np.prod(x.shape) else 0.0,
+        a,
+        b,
+    )
+    leaves = jax.tree_util.tree_leaves(diffs)
+    return max(leaves) if leaves else 0.0
+
+
+def split_rngs(rng: jax.Array, names: Iterable[str]) -> Mapping[str, jax.Array]:
+    names = list(names)
+    keys = jax.random.split(rng, len(names))
+    return dict(zip(names, keys))
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def coprime_mixer(modulus: int) -> int:
+    """Pick a multiplier coprime with `modulus` for the bijective key
+    scrambler (Knuth multiplicative constant, adjusted until coprime)."""
+    p = 2654435761 % modulus
+    if p in (0, 1):
+        p = max(3, modulus // 2 + 1)
+    while math.gcd(p, modulus) != 1:
+        p += 1
+        if p >= modulus:
+            p = 3
+    return p
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024:
+            return f"{n:.2f}{unit}"
+        n /= 1024
+    return f"{n:.2f}PiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "B", "T"):
+        if abs(n) < 1000:
+            return f"{n:.2f}{unit}"
+        n /= 1000
+    return f"{n:.2f}Q"
+
+
+def checked_vjp(f: Callable, *primals):
+    """value_and_grad that also returns aux outputs; convenience."""
+    return jax.value_and_grad(f, has_aux=True)(*primals)

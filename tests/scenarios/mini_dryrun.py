@@ -1,0 +1,74 @@
+"""8-device scenario: mini dry-run — reduced configs lower+compile on a
+(2,4) mesh for one arch per family, nestpipe + serial modes, plus a
+multi-step REAL execution proving the compiled step runs and stays finite.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import NestPipeConfig, ShapeConfig
+from repro.launch.build import resolve
+from repro.launch.dryrun import carry_shardings
+
+mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4), ("data", "model"))
+
+for arch in ["stablelm-3b", "jamba-v0.1-52b", "olmoe-1b-7b", "hstu-industrial"]:
+    shape = ShapeConfig("mini", kind="train", seq_len=32, global_batch=16)
+    wl = resolve(arch, "train_4k", mesh=mesh, mode="nestpipe",
+                 npcfg=NestPipeConfig(fwp_microbatches=2, bucket_slack=4.0),
+                 reduced=True, t_chunk=16, shape_override=shape)
+    fns, opt = wl.step_fns()
+    state_sds = wl.state_shapes(opt)
+    state_sh = wl.state_shardings(opt)
+    batch_sds = wl.batch_sds()
+    batch_sh = wl.batch_shardings()
+    carry_sds = jax.eval_shape(fns.init_carry, state_sds.table, batch_sds["keys"])
+    carry_sh = carry_shardings(wl)
+    lowered = jax.jit(
+        fns.nestpipe_step,
+        in_shardings=(state_sh, carry_sh, batch_sh, batch_sh["keys"]),
+    ).lower(state_sds, carry_sds, batch_sds, batch_sds["keys"])
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    assert ma.temp_size_in_bytes >= 0
+    print(f"[mini-dryrun] {arch}: compiled, temp={ma.temp_size_in_bytes>>20}MiB")
+
+    # REAL multi-device execution of a few steps
+    state = wl.init_state(jax.random.PRNGKey(0), opt)
+    rng = np.random.default_rng(0)
+    def mk_batch(step):
+        out = {}
+        for name, (shp, dt) in wl.batch_shapes.items():
+            if name == "keys":
+                raw = rng.integers(0, 64, size=shp).astype(np.int32)
+                arr = np.asarray(wl.spec.scramble(jnp.asarray(raw)))
+            elif dt == jnp.int32:
+                arr = rng.integers(0, 64, size=shp).astype(np.int32)
+            else:
+                arr = rng.normal(size=shp).astype(np.float32) * 0.05
+            out[name] = jax.device_put(arr, batch_sh[name])
+        return out
+
+    # out_shardings pinned so the carried state round-trips exactly
+    step_fn = jax.jit(fns.nestpipe_step,
+                      in_shardings=(state_sh, carry_sh, batch_sh, batch_sh["keys"]),
+                      out_shardings=(state_sh, carry_sh, None))
+    state = jax.device_put(state, state_sh)  # normalize onto declared layout
+    b0 = mk_batch(0)
+    carry = jax.jit(fns.init_carry, out_shardings=carry_sh)(state.table, b0["keys"])
+    for t in range(3):
+        nxt = mk_batch(t + 1)
+        state, carry, aux = step_fn(state, carry, b0, nxt["keys"])
+        assert np.isfinite(float(aux["loss"])), (arch, t)
+        assert int(aux["routing_overflow"]) == 0
+        b0 = nxt
+    print(f"[mini-dryrun] {arch}: 3 real steps ok, loss={float(aux['loss']):.4f}")
+
+print("MINI DRYRUN OK")
