@@ -1,21 +1,14 @@
 """Shared benchmark harness utilities (CPU-scale reproductions of the
-paper's tables; production-mesh numbers come from the dry-run JSONLs)."""
+paper's tables; production-mesh numbers come from the dry-run JSONLs).
+Thin shim over ``repro.api.Session.bench``."""
 from __future__ import annotations
 
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import NestPipeConfig, OptimizerConfig, ShapeConfig
-from repro.core.dbp import DBPDriver
-from repro.launch.build import resolve
-from repro.launch.train import make_stream
+from repro.api import Session
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
@@ -26,20 +19,11 @@ def run_driver(arch: str, *, mode: str, steps: int = 10, n_micro: int = 4,
                global_batch: int = 32, seq_len: int = 32,
                clustering: str = "keycentric", seed: int = 0,
                unroll: bool = True):
-    """Run the real host pipeline on a reduced config; return (stats, wl)."""
-    wl = resolve(
-        arch, "train_4k", mesh=None, mode=mode,
-        npcfg=NestPipeConfig(fwp_microbatches=n_micro, bucket_slack=4.0,
-                             clustering=clustering, fwp_unroll=unroll),
-        reduced=True, t_chunk=32,
-        shape_override=ShapeConfig("bench", kind="train", seq_len=seq_len,
-                                   global_batch=global_batch),
+    """Run the real host pipeline on a reduced config; return (state, stats, wl)."""
+    sess = Session.from_arch(
+        arch, mode=mode, reduced=True, global_batch=global_batch,
+        seq_len=seq_len, n_micro=n_micro, clustering=clustering,
+        unroll=unroll, t_chunk=32, lr=1e-3, seed=seed,
     )
-    fns, optimizer = wl.step_fns(OptimizerConfig(lr=1e-3))
-    state = wl.init_state(jax.random.PRNGKey(seed), optimizer)
-    driver = DBPDriver(
-        fns, make_stream(wl, seed), wl.n_micro, mode=mode,
-        clustering=clustering, device_fields=[k for k in wl.batch_shapes],
-    )
-    state, stats = driver.run(state, steps)
-    return state, stats, wl
+    report = sess.bench(steps)
+    return report.state, report.stats, sess.workload

@@ -1,6 +1,7 @@
 """Fault-tolerance demo: train, checkpoint, 'crash', restore into a FRESH
 process-state and continue — final params bit-match an uninterrupted run
-(restart correctness), using the atomic manifest checkpointer.
+(restart correctness), using the Session facade's checkpoint/restore path
+(atomic manifest checkpointer + exact stream fast-forward).
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
@@ -10,59 +11,38 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import numpy as np
 
-from repro.configs.base import NestPipeConfig, OptimizerConfig, ShapeConfig
-from repro.core.dbp import DBPDriver
-from repro.dist.checkpoint import restore_checkpoint, save_checkpoint
-from repro.launch.build import resolve
-from repro.launch.train import make_stream
+from repro.api import Session
 
 
-def make(seed=0):
-    wl = resolve(
-        "fuxi-kuairand", "train_4k", mesh=None,
-        npcfg=NestPipeConfig(fwp_microbatches=2, bucket_slack=4.0),
-        reduced=True,
-        shape_override=ShapeConfig("er", kind="train", seq_len=32,
-                                   global_batch=16),
-    )
-    fns, optimizer = wl.step_fns(OptimizerConfig(lr=1e-3))
-    state = wl.init_state(jax.random.PRNGKey(seed), optimizer)
-    return wl, fns, state
-
-
-def run(wl, fns, state, steps):
+def make(seed=0, ckpt_dir=""):
     # serial mode => each step depends only on (state, batch_t): restart at a
     # step boundary is exact. (The pipelined mode restarts one step back —
     # the driver re-primes the carry from the checkpointed master table.)
-    driver = DBPDriver(fns, make_stream(wl, 0), wl.n_micro, mode="serial",
-                       device_fields=list(wl.batch_shapes))
-    state, stats = driver.run(state, steps)
-    return state
+    return Session.from_arch(
+        "fuxi-kuairand", mode="serial", reduced=True,
+        global_batch=16, seq_len=32, n_micro=2, lr=1e-3,
+        seed=seed, data_seed=0, ckpt_dir=ckpt_dir,
+    )
 
 
 def main():
     with tempfile.TemporaryDirectory() as d:
         # uninterrupted reference: 8 steps
-        wl, fns, state = make()
-        ref = run(wl, fns, state, 8)
+        ref = make().train(8).state
 
         # interrupted: 4 steps -> checkpoint -> "crash" -> restore -> 4 more
-        wl2, fns2, state2 = make()
-        mid = run(wl2, fns2, state2, 4)
-        save_checkpoint(d, mid, 4)
-        del mid, state2
+        sess = make(ckpt_dir=d)
+        sess.train(4)
+        sess.save()
+        del sess
 
-        wl3, fns3, fresh = make(seed=123)  # different init: must be overwritten
-        restored = restore_checkpoint(d, fresh)
-        # stream must resume at batch 4: rebuild driver from step offset
-        driver = DBPDriver(fns3, make_stream(wl3, 0), wl3.n_micro, mode="serial",
-                           device_fields=list(wl3.batch_shapes))
-        for _ in range(4):  # consume the first 4 batches (already trained on)
-            driver.queue.get()
-        final, _ = driver.run(restored, 4)
+        # fresh process-state with a DIFFERENT init: must be overwritten by
+        # the restore; Session.train resumes the stream at batch state.step.
+        sess2 = make(seed=123, ckpt_dir=d)
+        sess2.restore()
+        final = sess2.train(4).state
 
         diff = np.max(np.abs(np.asarray(final.table.rows)
                              - np.asarray(ref.table.rows)))

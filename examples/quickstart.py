@@ -1,4 +1,4 @@
-"""Quickstart: NestPipe in ~60 lines.
+"""Quickstart: NestPipe through the Session facade in ~20 lines.
 
 Builds a tiny DLRM CTR workload, runs 20 NestPipe training steps through
 the real five-stage pipeline (prefetch thread -> H2D -> key routing ->
@@ -12,41 +12,24 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-
-from repro.configs.base import NestPipeConfig, OptimizerConfig, ShapeConfig
-from repro.core.dbp import DBPDriver
-from repro.launch.build import resolve
-from repro.launch.train import make_stream
+from repro.api import Session
 
 
 def main():
-    # 1. Resolve a workload: arch x shape x NestPipe config.
-    wl = resolve(
-        "dlrm-ctr", "train_4k",
-        mesh=None,  # CPU quickstart; the 256-chip mesh path is the dry-run
-        npcfg=NestPipeConfig(fwp_microbatches=4, bucket_slack=4.0),
-        reduced=True,
-        shape_override=ShapeConfig("quickstart", kind="train", seq_len=1,
-                                   global_batch=64),
+    # One front door: arch x mode x shape -> ready session.
+    sess = Session.from_arch(
+        "dlrm-ctr", mode="nestpipe", reduced=True,
+        global_batch=64, seq_len=1, n_micro=4, lr=5e-3,
     )
+    wl = sess.workload
     print(f"model={wl.bundle.cfg.name} tables={len(wl.bundle.cfg.tables)} "
           f"mega_rows={wl.spec.padded_rows} n_micro={wl.n_micro}")
 
-    # 2. Build the step functions (FWP window + dense AdamW + sparse adagrad).
-    fns, optimizer = wl.step_fns(OptimizerConfig(lr=5e-3))
-    state = wl.init_state(jax.random.PRNGKey(0), optimizer)
+    report = sess.train(20)
 
-    # 3. Run the five-stage DBP pipeline over a synthetic zipf stream.
-    driver = DBPDriver(
-        fns, make_stream(wl, seed=0), wl.n_micro, mode="nestpipe",
-        device_fields=list(wl.batch_shapes),
-    )
-    state, stats = driver.run(state, 20)
-
-    print("losses:", " ".join(f"{l:.4f}" for l in stats.losses[::4]))
-    print("pipeline:", stats.summary())
-    assert stats.losses[-1] < stats.losses[0], "loss should decrease"
+    print("losses:", " ".join(f"{l:.4f}" for l in report.stats.losses[::4]))
+    print("pipeline:", report.stats.summary())
+    assert report.stats.losses[-1] < report.stats.losses[0], "loss should decrease"
     print("OK — NestPipe quickstart done.")
 
 

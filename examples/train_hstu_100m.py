@@ -6,32 +6,30 @@ Parameter budget (the paper's regime — sparse-dominated):
     HSTU dense backbone (2L, d=256)     ~  3.5M
     total                               ~ 96M
 
-Runs the full NestPipe stack: key-centric clustering, five-stage DBP
-pipeline with dual-buffer sync, FWP frozen windows, rowwise-adagrad sparse
-updates, AdamW dense updates, periodic checkpoints + preemption guard.
+Runs the full NestPipe stack through ``Session.from_workload`` (the escape
+hatch for configs outside the registry): key-centric clustering, five-stage
+DBP pipeline with dual-buffer sync, FWP frozen windows, rowwise-adagrad
+sparse updates, AdamW dense updates, periodic checkpoints + preemption
+guard — the Session wires the checkpoint/fault policy.
 
     PYTHONPATH=src python examples/train_hstu_100m.py [--steps 300]
 """
 import argparse
 import os
+import signal
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import numpy as np
 
+from repro.api import Session
 from repro.configs.base import (
     NestPipeConfig, OptimizerConfig, RecsysModelConfig, ShapeConfig,
     SparseTableConfig,
 )
 from repro.configs.registry import ArchSpec
-from repro.core.dbp import DBPDriver
-from repro.dist.checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from repro.dist.fault import PreemptionGuard, StepWatchdog
-from repro.launch import build as B
-from repro.launch.train import make_stream
 from repro.utils import human_count, tree_size
 
 
@@ -53,11 +51,12 @@ def main():
     arch = ArchSpec("hstu-100m", "recsys", HSTU_100M, HSTU_100M)
 
     # Assemble the workload directly (custom config, not in the registry).
-    from repro.configs.base import ParallelConfig
-    from repro.launch.build import Workload
-    from repro.core.embedding import EmbeddingEngine, make_mega_table_spec
-    from repro.models import build_model, train_batch_shapes
     from jax.sharding import PartitionSpec as P
+
+    from repro.configs.base import ParallelConfig
+    from repro.core.embedding import EmbeddingEngine, make_mega_table_spec
+    from repro.launch.build import Workload
+    from repro.models import build_model, train_batch_shapes
 
     parallel = ParallelConfig(batch_axes=("data",), sparse_axes=("model",))
     npcfg = NestPipeConfig(fwp_microbatches=4, bucket_slack=4.0)
@@ -73,43 +72,33 @@ def main():
                   engine=engine, n_micro=4, batch_shapes=batch_shapes,
                   keys_pspec=P(None, None))
 
-    fns, optimizer = wl.step_fns(OptimizerConfig(lr=1e-3, sparse_lr=0.05))
-    state = wl.init_state(jax.random.PRNGKey(0), optimizer)
+    sess = Session.from_workload(
+        wl, opt_cfg=OptimizerConfig(lr=1e-3, sparse_lr=0.05),
+        seed=0, ckpt_dir=args.ckpt_dir, ckpt_every=100,
+        preemption_signals=(signal.SIGTERM,),
+    )
     sparse_n = spec.padded_rows * spec.dim
-    dense_n = tree_size(state.dense)
+    dense_n = tree_size(sess.state.dense)
     print(f"params: sparse={human_count(sparse_n)} dense={human_count(dense_n)} "
           f"total={human_count(sparse_n + dense_n)}")
 
     start = 0
-    if args.resume and latest_step(args.ckpt_dir) is not None:
-        state = restore_checkpoint(args.ckpt_dir, state)
-        start = int(state.step)
-        print(f"resumed from step {start}")
+    if args.resume:
+        last = sess.restore_if_available()
+        if last is not None:
+            start = int(sess.state.step)
+            print(f"resumed from step {start}")
 
-    guard = PreemptionGuard()
-    watchdog = StepWatchdog()
-
-    def on_ckpt(st, _):
-        save_checkpoint(args.ckpt_dir, st, int(st.step))
-
-    driver = DBPDriver(fns, make_stream(wl, seed=0), 4, mode="nestpipe",
-                       device_fields=list(wl.batch_shapes),
-                       on_checkpoint=on_ckpt, ckpt_every=100)
-    t0 = time.time()
-    state, stats = driver.run(state, args.steps - start)
-    dt = time.time() - t0
-    for i, s in enumerate(stats.step_times):
-        watchdog.observe(i, s)
-    if guard.should_checkpoint:
-        on_ckpt(state, int(state.step))
-    save_checkpoint(args.ckpt_dir, state, int(state.step))
+    report = sess.train(args.steps - start, checkpoint_final=True)
+    stats = report.stats
 
     n = len(stats.losses)
     head = float(np.mean(stats.losses[: max(n // 10, 1)]))
     tail = float(np.mean(stats.losses[-max(n // 10, 1):]))
-    print(f"steps={n} wall={dt:.1f}s mean_step={np.mean(stats.step_times)*1e3:.1f}ms "
-          f"QPS={args.batch * n / dt:.1f}")
-    print(f"loss {head:.4f} -> {tail:.4f} | stragglers={len(watchdog.events)} "
+    print(f"steps={n} wall={report.wall_s:.1f}s "
+          f"mean_step={np.mean(stats.step_times)*1e3:.1f}ms "
+          f"QPS={args.batch * n / report.wall_s:.1f}")
+    print(f"loss {head:.4f} -> {tail:.4f} | stragglers={report.stragglers} "
           f"overflow={stats.overflow_max}")
     assert tail < head, "training should reduce the loss"
     print("OK — 100M HSTU trained end to end.")

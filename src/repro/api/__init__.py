@@ -1,0 +1,63 @@
+"""``repro.api`` — the stable front door to the NestPipe reproduction.
+
+One facade, three verbs, every execution mode::
+
+    from repro.api import Session
+
+    sess = Session.from_arch("hstu-industrial", mode="nestpipe", reduced=True,
+                             global_batch=16, seq_len=32)
+    report = sess.train(steps=50)          # five-stage DBP + FWP training
+    report = sess.bench(steps=10)          # same loop, stats only
+    out = Session.from_arch("stablelm-3b", reduced=True).serve(gen=8)
+
+The Session composes what used to be five separate call sites — workload
+resolution (``launch.build.resolve``), stream construction, state
+init/restore, the DBP driver, and the checkpoint/fault policy from
+``repro.dist`` — so launchers, examples and benchmarks stay one-screen
+shims.
+
+Strategy registration contract
+------------------------------
+
+Execution modes (``mode="serial" | "async" | "nestpipe"``) are pluggable
+strategies, registered exactly like archs in ``configs/registry``:
+
+1. Implement the :class:`~repro.api.strategies.Strategy` protocol — a
+   ``name``, a ``configure(npcfg) -> npcfg`` hook that adjusts the NestPipe
+   feature switches before workload resolution, and a
+   ``build_driver(fns, stream, workload, **driver_kw)`` factory returning an
+   object with ``run(state, num_steps) -> (state, stats)``. Subclassing
+   :class:`~repro.api.strategies.DriverStrategy` covers any backend that
+   rides the five-stage host driver.
+2. Register it: ``register_strategy(MyStrategy(...))`` (also usable as a
+   decorator). The ``name`` becomes a valid ``mode=`` argument to
+   ``Session.from_arch`` everywhere — CLI, examples and benchmarks included.
+3. ``Session.from_arch`` fails fast with the registered-mode list on an
+   unknown ``mode``, so typos surface before any compilation starts.
+
+Strategies must preserve the synchronous-semantics contract where they claim
+to (NestPipe's pitch): if your strategy pipelines, it is responsible for its
+own staleness story; the consistency benchmarks compare every registered
+mode against ``serial``.
+"""
+from .session import ServeReport, Session, TrainReport
+from .strategies import (
+    DriverStrategy,
+    Strategy,
+    available_strategies,
+    get_strategy,
+    register_strategy,
+)
+from .streams import resolve_stream
+
+__all__ = [
+    "Session",
+    "TrainReport",
+    "ServeReport",
+    "Strategy",
+    "DriverStrategy",
+    "register_strategy",
+    "get_strategy",
+    "available_strategies",
+    "resolve_stream",
+]

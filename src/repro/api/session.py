@@ -1,0 +1,381 @@
+"""The Session facade: one front door for train / serve / bench.
+
+Composes workload resolution (``launch.build.resolve``), stream construction
+(``api.streams``), state init/restore, the execution strategy
+(``api.strategies``) and the checkpoint + fault policy (``repro.dist``)
+behind one object:
+
+    from repro.api import Session
+
+    sess = Session.from_arch("hstu-industrial", mode="nestpipe", reduced=True)
+    report = sess.train(steps=200)
+    print(report.summary)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import NestPipeConfig, OptimizerConfig, ShapeConfig
+from ..core.dbp.pipeline import PipelineStats
+from ..core.embedding import init_table_state
+from ..dist.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from ..dist.fault import PreemptionGuard, StepWatchdog
+from ..launch.build import Workload, resolve
+from ..train.state import TrainState
+from .strategies import Strategy, get_strategy
+from .streams import resolve_stream
+
+
+@dataclass
+class TrainReport:
+    """What a train/bench run produced: final state + pipeline statistics."""
+
+    state: TrainState
+    stats: PipelineStats
+    wall_s: float
+    stragglers: int
+    summary: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class ServeReport:
+    """Generated tokens (B, gen) + latency summary from a serve run."""
+
+    tokens: np.ndarray
+    summary: Dict[str, Any] = field(default_factory=dict)
+
+
+class Session:
+    """A training/serving session over one resolved workload.
+
+    Construction goes through :meth:`from_arch` (registry archs) or
+    :meth:`from_workload` (hand-assembled workloads). The session owns:
+
+    - the resolved :class:`~repro.launch.build.Workload` (``.workload``)
+    - the execution :class:`~repro.api.strategies.Strategy` (``.strategy``)
+    - the train state (``.state``), lazily initialized on first use
+    - the data stream cursor — after a restore, training resumes at batch
+      index ``state.step``, so restarts are exact in serial mode
+    - the checkpoint policy (``ckpt_dir``/``ckpt_every``) and fault policy
+      (preemption guard + step watchdog), which no caller has to wire again
+    """
+
+    def __init__(
+        self,
+        workload: Workload,
+        *,
+        opt_cfg: Optional[OptimizerConfig] = None,
+        seed: int = 0,
+        data_seed: Optional[int] = None,
+        ckpt_dir: str = "",
+        ckpt_every: int = 0,
+        strategy: Optional[Strategy] = None,
+        watchdog_factor: float = 3.0,
+        preemption_signals: tuple = (),
+        reduced: bool = False,
+    ):
+        self.workload = workload
+        self.reduced = reduced
+        self.strategy = strategy or get_strategy(workload.mode)
+        self.opt_cfg = opt_cfg or OptimizerConfig()
+        self.seed = seed
+        self.data_seed = seed if data_seed is None else data_seed
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.guard = PreemptionGuard(signals=preemption_signals)
+        self.watchdog = StepWatchdog(factor=watchdog_factor)
+        self._fns = None  # training step fns built on first train/bench
+        self._optimizer = None
+        self._state: Optional[TrainState] = None
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_arch(
+        cls,
+        arch: str,
+        *,
+        mode: str = "nestpipe",
+        reduced: bool = False,
+        shape: str = "train_4k",
+        mesh=None,
+        global_batch: Optional[int] = None,
+        seq_len: Optional[int] = None,
+        n_micro: int = 4,
+        clustering: str = "keycentric",
+        unroll: bool = True,
+        bucket_slack: float = 4.0,
+        t_chunk: int = 64,
+        npcfg: Optional[NestPipeConfig] = None,
+        opt_cfg: Optional[OptimizerConfig] = None,
+        lr: Optional[float] = None,
+        seed: int = 0,
+        data_seed: Optional[int] = None,
+        ckpt_dir: str = "",
+        ckpt_every: int = 0,
+        preemption_signals: tuple = (),
+    ) -> "Session":
+        """Resolve a registry arch into a ready session.
+
+        ``mode`` must name a registered strategy (``repro.api.strategies``).
+        ``global_batch``/``seq_len`` override the named ``shape`` with a
+        CPU-scale custom shape; leave them None to use the production shape.
+        """
+        strategy = get_strategy(mode)  # fail fast on unknown modes
+        npcfg = npcfg or NestPipeConfig(
+            fwp_microbatches=n_micro, bucket_slack=bucket_slack,
+            clustering=clustering, fwp_unroll=unroll,
+        )
+        npcfg = strategy.configure(npcfg)
+        shape_override = None
+        if global_batch is not None or seq_len is not None:
+            shape_override = ShapeConfig(
+                "api", kind="train",
+                seq_len=seq_len or 32, global_batch=global_batch or 32)
+        wl = resolve(
+            arch, shape, mesh=mesh, mode=mode, npcfg=npcfg, reduced=reduced,
+            t_chunk=t_chunk, shape_override=shape_override,
+        )
+        if lr is not None:
+            opt_cfg = dataclasses.replace(opt_cfg or OptimizerConfig(), lr=lr)
+        return cls(
+            wl, opt_cfg=opt_cfg, seed=seed, data_seed=data_seed,
+            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, strategy=strategy,
+            preemption_signals=preemption_signals, reduced=reduced,
+        )
+
+    @classmethod
+    def from_workload(cls, workload: Workload, **kwargs) -> "Session":
+        """Wrap a hand-assembled Workload (custom configs outside the
+        registry, e.g. the 100M-param HSTU example)."""
+        return cls(workload, **kwargs)
+
+    # ------------------------------------------------------------------
+    # state + checkpoints
+    # ------------------------------------------------------------------
+
+    @property
+    def fns(self):
+        if self._fns is None:
+            self._fns, self._optimizer = self.workload.step_fns(self.opt_cfg)
+        return self._fns
+
+    @property
+    def optimizer(self):
+        self.fns  # build the (fns, optimizer) pair lazily together
+        return self._optimizer
+
+    @property
+    def state(self) -> TrainState:
+        if self._state is None:
+            self._state = self.workload.init_state(
+                jax.random.PRNGKey(self.seed), self.optimizer)
+        return self._state
+
+    @state.setter
+    def state(self, value: TrainState) -> None:
+        self._state = value
+
+    def save(self, step: Optional[int] = None) -> str:
+        """Checkpoint the current state (atomic manifest write)."""
+        if not self.ckpt_dir:
+            raise ValueError("Session has no ckpt_dir configured")
+        s = int(self.state.step) if step is None else int(step)
+        return save_checkpoint(self.ckpt_dir, self.state, s)
+
+    def restore(self, step: Optional[int] = None) -> TrainState:
+        """Restore state from ``ckpt_dir`` (latest step by default). The next
+        ``train()`` resumes the data stream at batch index ``state.step``."""
+        if not self.ckpt_dir:
+            raise ValueError("Session has no ckpt_dir configured")
+        self._state = restore_checkpoint(self.ckpt_dir, self.state, step)
+        return self._state
+
+    def restore_if_available(self) -> Optional[int]:
+        """Restore the latest checkpoint when one exists; returns its step."""
+        if not self.ckpt_dir:
+            return None
+        last = latest_step(self.ckpt_dir)
+        if last is not None:
+            self.restore(last)
+        return last
+
+    # ------------------------------------------------------------------
+    # train / bench
+    # ------------------------------------------------------------------
+
+    def train(self, steps: int, *, resume: bool = False,
+              checkpoint_final: bool = False) -> TrainReport:
+        """Run ``steps`` training steps from the current state.
+
+        The stream starts at batch index ``state.step`` (exact restart in
+        serial mode; pipelined modes re-prime the carry one batch early by
+        construction). Periodic checkpoints every ``ckpt_every`` steps and a
+        final save on preemption are handled here.
+        """
+        if resume:
+            self.restore_if_available()
+        start = int(self.state.step)
+        stream = resolve_stream(self.workload, self.data_seed,
+                                start_step=start)
+
+        def on_ckpt(st, _step_no):
+            if self.ckpt_dir:
+                save_checkpoint(self.ckpt_dir, st, int(st.step))
+
+        driver = self.strategy.build_driver(
+            self.fns, stream, self.workload,
+            on_checkpoint=on_ckpt if (self.ckpt_dir and self.ckpt_every) else None,
+            ckpt_every=self.ckpt_every,
+        )
+        t0 = time.time()
+        state, stats = driver.run(self.state, max(int(steps), 0))
+        wall = time.time() - t0
+        self._state = state
+
+        events_before = len(self.watchdog.events)
+        for i, st in enumerate(stats.step_times):
+            self.watchdog.observe(start + i, st)
+        flagged = len(self.watchdog.events) - events_before
+        if self.ckpt_dir and (checkpoint_final or self.guard.should_checkpoint):
+            self.save()
+
+        summary = stats.summary()
+        gb = self.workload.shape.global_batch
+        summary.update({
+            "arch": self.workload.arch.name,
+            "mode": self.strategy.name,
+            "wall_s": round(wall, 2),
+            "qps": round(gb * len(stats.step_times) / max(wall, 1e-9), 2),
+            "stragglers_flagged": flagged,
+        })
+        return TrainReport(state=state, stats=stats, wall_s=wall,
+                           stragglers=flagged, summary=summary)
+
+    def bench(self, steps: int = 10) -> TrainReport:
+        """Short measured run with no checkpointing — the benchmark path."""
+        ckpt_dir, ckpt_every = self.ckpt_dir, self.ckpt_every
+        self.ckpt_dir, self.ckpt_every = "", 0
+        try:
+            return self.train(steps)
+        finally:
+            self.ckpt_dir, self.ckpt_every = ckpt_dir, ckpt_every
+
+    # ------------------------------------------------------------------
+    # serve
+    # ------------------------------------------------------------------
+
+    def serve(self, *, batch: int = 4, prompt_len: int = 16, gen: int = 8,
+              seed: Optional[int] = None) -> ServeReport:
+        """Batched prefill + greedy KV-cache decode through the embedding
+        engine. Reuses this session's trained dense params + master table
+        when training has run; otherwise serves from a fresh init."""
+        if self.workload.arch.kind == "recsys":
+            raise ValueError(
+                f"{self.workload.arch.name} is a recsys arch: no KV-cache "
+                "decode path to serve (use .train()/.bench())")
+        if self.workload.mesh is not None:
+            raise ValueError(
+                "serve() runs the CPU-scale single-device decode path; a "
+                "mesh-trained session's table is sharded under a different "
+                "mega-table layout — checkpoint and restore into a mesh-less "
+                "Session first")
+        seed = self.seed if seed is None else seed
+        max_len = prompt_len + gen
+        try:
+            wl = resolve(
+                self.workload.arch.name, "decode_32k", mesh=None,
+                reduced=self.reduced,
+                npcfg=NestPipeConfig(bucket_slack=4.0), t_chunk=64,
+                shape_override=ShapeConfig("api-serve", kind="decode",
+                                           seq_len=max_len, global_batch=batch),
+            )
+        except KeyError:
+            raise ValueError(
+                f"serve() needs a registry arch to resolve a decode workload; "
+                f"{self.workload.arch.name!r} is not registered "
+                "(from_workload sessions are train/bench only)") from None
+        cfg = wl.bundle.cfg
+        bundle = wl.bundle
+        engine = wl.engine
+        rng = np.random.default_rng(seed)
+        spec_matches = (
+            wl.spec.padded_rows == self.workload.spec.padded_rows
+            and wl.spec.dim == self.workload.spec.dim
+            and wl.spec.num_shards == self.workload.spec.num_shards
+        )
+        if self._state is not None and spec_matches:
+            # serve the trained weights from this session
+            params, table = self._state.dense, self._state.table
+        else:
+            params = bundle.init_params(jax.random.PRNGKey(seed))
+            table = init_table_state(jax.random.PRNGKey(1), wl.spec, None,
+                                     engine.sparse_axes)
+
+        toks = rng.integers(0, cfg.vocab_size, size=(batch, prompt_len))
+        keys = np.asarray(wl.spec.scramble(jnp.asarray(toks.astype(np.int32))))
+
+        @jax.jit
+        def prefill_fn(params, table, keys, extras):
+            emb, _ = engine.lookup_from_master(table, keys)
+            if bundle.kind == "encdec":
+                logits, cache = bundle.prefill(
+                    params, emb, frames=extras["frames"], cache_len=max_len)
+            elif getattr(cfg, "frontend", None) is not None:
+                full = jnp.concatenate(
+                    [extras["patches"].astype(emb.dtype), emb], 1)
+                logits, cache = bundle.prefill(params, full, cache_len=max_len)
+            else:
+                logits, cache = bundle.prefill(params, emb, cache_len=max_len)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        @jax.jit
+        def decode_fn(params, table, cache, keys):
+            emb, _ = engine.lookup_from_master(table, keys)
+            logits, cache = bundle.decode_step(params, emb, cache)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        extras = {}
+        if bundle.kind == "encdec":
+            enc_d = cfg.encoder.d_model or cfg.d_model
+            extras["frames"] = jnp.asarray(
+                rng.normal(size=(batch, cfg.encoder.n_frames, enc_d)),
+                jnp.float32) * 0.02
+        elif getattr(cfg, "frontend", None) is not None:
+            extras["patches"] = jnp.asarray(
+                rng.normal(size=(batch, cfg.frontend.n_positions, cfg.d_model)),
+                jnp.float32) * 0.02
+
+        t0 = time.time()
+        next_tok, cache = prefill_fn(params, table, jnp.asarray(keys), extras)
+        next_tok.block_until_ready()
+        t_prefill = time.time() - t0
+
+        generated = [np.asarray(next_tok)]
+        t1 = time.time()
+        for _ in range(gen - 1):
+            k = wl.spec.scramble(next_tok[:, None])
+            next_tok, cache = decode_fn(params, table, cache, k)
+            generated.append(np.asarray(next_tok))
+        jax.block_until_ready(next_tok)
+        t_decode = time.time() - t1
+
+        out = np.stack(generated, axis=1)
+        summary = {
+            "arch": self.workload.arch.name, "batch": batch,
+            "prompt_len": prompt_len, "generated": gen,
+            "prefill_s": round(t_prefill, 3), "decode_s": round(t_decode, 3),
+            "tokens_per_s": round(
+                batch * (gen - 1) / max(t_decode, 1e-9), 1),
+            "sample_tokens": out[0, :8].tolist(),
+        }
+        return ServeReport(tokens=out, summary=summary)

@@ -1,0 +1,103 @@
+"""Execution strategies: HOW a resolved workload's steps run.
+
+A strategy owns the execution semantics of training — serial synchronous,
+async/staleness pipelining, or NestPipe's dual-buffer + frozen-window nested
+pipelining — while the Session owns everything around it (workload, state,
+streams, checkpoints, fault policy). New backends register here exactly like
+archs register in ``configs/registry``:
+
+    @register_strategy
+    @dataclass(frozen=True)
+    class MyStrategy(DriverStrategy):
+        name: str = "my-mode"
+        ...
+
+See ``repro.api`` package docs for the full contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Protocol, Tuple, runtime_checkable
+
+from ..configs.base import NestPipeConfig
+from ..core.dbp import DBPDriver
+
+
+@runtime_checkable
+class Strategy(Protocol):
+    """Contract every execution strategy implements.
+
+    - ``name``: the ``mode=`` string users pass to ``Session.from_arch``
+      (also forwarded to ``launch.build.resolve`` so sparse-parallel axis
+      selection can differ per strategy).
+    - ``configure(npcfg)``: adjust the NestPipe feature switches before the
+      workload is resolved (e.g. disable dual-buffer pipelining).
+    - ``build_driver(fns, stream, workload, **driver_kw)``: return a driver
+      object exposing ``run(state, num_steps) -> (state, stats)`` and a
+      ``queue`` of prefetched host batches.
+    """
+
+    name: str
+
+    def configure(self, npcfg: NestPipeConfig) -> NestPipeConfig: ...
+
+    def build_driver(self, fns, stream, workload, **driver_kw): ...
+
+
+@dataclass(frozen=True)
+class DriverStrategy:
+    """Strategy backed by the five-stage host DBPDriver.
+
+    The three paper modes are instances of this class; a new backend can
+    subclass it (override ``build_driver``) or implement the ``Strategy``
+    protocol from scratch.
+    """
+
+    name: str
+    driver_mode: str  # which jitted step family DBPDriver dispatches to
+    dbp: bool = True  # dual-buffer (inter-batch) pipelining enabled
+
+    def configure(self, npcfg: NestPipeConfig) -> NestPipeConfig:
+        # launch.build.resolve independently pins dbp=False for the builtin
+        # "serial"/"2dsp" mode strings (direct resolve() callers bypass the
+        # registry); this hook is the extension point for registered modes.
+        if self.dbp:
+            return npcfg
+        return dataclasses.replace(npcfg, dbp=False)
+
+    def build_driver(self, fns, stream, workload, **driver_kw):
+        driver_kw.setdefault("clustering", workload.npcfg.clustering)
+        driver_kw.setdefault("device_fields", list(workload.batch_shapes))
+        return DBPDriver(fns, stream, workload.n_micro,
+                         mode=self.driver_mode, **driver_kw)
+
+
+_STRATEGIES: Dict[str, Strategy] = {}
+
+
+def register_strategy(strategy: Strategy) -> Strategy:
+    """Register an execution strategy under ``strategy.name`` (decorator- or
+    call-style). Later registrations replace earlier ones, so downstream
+    code can override a built-in mode."""
+    _STRATEGIES[strategy.name] = strategy
+    return strategy
+
+
+def get_strategy(name: str) -> Strategy:
+    try:
+        return _STRATEGIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown execution mode {name!r}; registered: "
+            f"{sorted(_STRATEGIES)}") from None
+
+
+def available_strategies() -> Tuple[str, ...]:
+    return tuple(sorted(_STRATEGIES))
+
+
+# The paper's three execution modes (§V baselines + NestPipe itself).
+register_strategy(DriverStrategy("nestpipe", "nestpipe"))
+register_strategy(DriverStrategy("async", "async"))
+register_strategy(DriverStrategy("serial", "serial", dbp=False))

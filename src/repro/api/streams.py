@@ -1,0 +1,77 @@
+"""Host batch streams for a resolved Workload — the ONE place that maps a
+workload's ``batch_shapes`` to a synthetic input iterator.
+
+``resolve_stream`` dispatches on the workload kind:
+
+- recsys + dlrm backbone  -> ``SyntheticRecsysStream`` (multi-table zipf CTR)
+- recsys sequential / LM  -> ``SyntheticLMStream`` (zipf id sequences),
+  with VLM patch spans, enc-dec frames and label padding derived from the
+  workload's ``batch_shapes``.
+
+Streams are deterministic in ``(seed, batch index)``; ``start_step`` fast-
+forwards to any batch index exactly, which is how ``Session`` resumes a
+data stream after a checkpoint restore without replaying batches.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import numpy as np
+
+from ..data.synthetic import SyntheticLMStream, SyntheticRecsysStream
+
+
+def resolve_stream(wl, seed: int = 0, *, global_batch: Optional[int] = None,
+                   seq_len: Optional[int] = None,
+                   start_step: int = 0) -> Iterator[dict]:
+    """Infinite iterator of host batch dicts matching ``wl.batch_shapes``."""
+    cfg = wl.bundle.cfg
+    n_micro, mb = wl.batch_shapes["keys"][0][:2]
+    gb = global_batch or n_micro * mb
+
+    if wl.bundle.kind == "recsys" and cfg.backbone == "dlrm":
+        stream = SyntheticRecsysStream(cfg, wl.spec, gb, seed=seed)
+
+        def gen():
+            step = start_step
+            while True:
+                b = stream.make_batch(step)
+                yield {"keys": b.keys, "dense": b.dense, "labels": b.labels,
+                       "raw_keys": b.raw_keys}
+                step += 1
+
+        return gen()
+
+    # sequential recsys and LM archs both consume zipf id sequences
+    if wl.bundle.kind == "recsys":
+        vocab = cfg.tables[0].vocab_size
+        seq = cfg.seq_len
+    else:
+        vocab = cfg.vocab_size
+        seq = seq_len or wl.batch_shapes["keys"][0][2]
+    lm = SyntheticLMStream(vocab, wl.spec, gb, seq, seed=seed)
+
+    def gen():
+        step = start_step
+        while True:
+            b = lm.make_batch(step)
+            out = {"keys": b["keys"], "raw_keys": b["raw_tokens"]}
+            if "labels" in wl.batch_shapes:
+                ls = wl.batch_shapes["labels"][0]
+                lab = b["labels"]
+                if len(ls) == 3 and ls[2] != lab.shape[1]:  # vlm: pad patch span
+                    pad = ls[2] - lab.shape[1]
+                    lab = np.concatenate(
+                        [np.full((gb, pad), -1, np.int32), lab], axis=1)
+                out["labels"] = lab
+            if "patches" in wl.batch_shapes:
+                ps = wl.batch_shapes["patches"][0]
+                out["patches"] = np.zeros((gb,) + ps[2:], np.float32)
+            if "frames" in wl.batch_shapes:
+                fs = wl.batch_shapes["frames"][0]
+                rng = np.random.default_rng((seed, step, 7))
+                out["frames"] = rng.normal(size=(gb,) + fs[2:]).astype(np.float32) * 0.02
+            yield out
+            step += 1
+
+    return gen()

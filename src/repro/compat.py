@@ -1,0 +1,47 @@
+"""Version-tolerant JAX shims.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and renamed its replication-check kwarg ``check_rep`` -> ``check_vma``)
+across JAX releases. Import it from here so the repo runs on both sides of
+that move:
+
+    from repro.compat import shard_map
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.6: top-level export with the check_vma kwarg
+    from jax import shard_map as _shard_map
+except ImportError:  # older jax: experimental module with check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SMAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def make_auto_mesh(axis_shapes, axis_names, **kwargs):
+    """``jax.make_mesh`` with Auto axis types on JAX versions that have
+    explicit-sharding axis types, plain ``make_mesh`` on older ones."""
+    import jax
+
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs.setdefault(
+            "axis_types", (jax.sharding.AxisType.Auto,) * len(axis_names))
+    try:
+        return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+    except TypeError:  # no axis_types kwarg on this version
+        kwargs.pop("axis_types", None)
+        return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """``jax.shard_map`` with ``check_vma``/``check_rep`` accepted on any
+    JAX version (mapped to whichever spelling the installed JAX takes)."""
+    flag = kwargs.pop("check_vma", kwargs.pop("check_rep", None))
+    if flag is not None:
+        if "check_vma" in _SMAP_PARAMS:
+            kwargs["check_vma"] = flag
+        elif "check_rep" in _SMAP_PARAMS:
+            kwargs["check_rep"] = flag
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

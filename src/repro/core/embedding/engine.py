@@ -27,8 +27,9 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from ...compat import shard_map
 
 from ...configs.base import NestPipeConfig
 from ...utils import cdiv, round_up
@@ -121,8 +122,10 @@ class EmbeddingEngine:
         else:
             self.num_shards = 1
         assert spec.num_shards == self.num_shards, (spec.num_shards, self.num_shards)
-        # Axes the grads vary over but the table is replicated over.
-        self.psum_axes = tuple(
+        # Axes the grads vary over but the table is replicated over. No mesh
+        # means no named axes are ever bound (single-device; _smap is a
+        # passthrough), so psum/all_gather over them must be disabled.
+        self.psum_axes = () if mesh is None else tuple(
             a for a in self._pspec_axes(keys_pspec) if a not in self.sparse_axes
         )
         self.union_size = 1

@@ -1,0 +1,16 @@
+"""Distribution substrate: atomic checkpointing, fault handling
+(preemption / straggler / transient-failure policies), and compressed
+collectives. Owned by ``repro.api.Session``; importable standalone."""
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .compressed import ring_allreduce_quant
+from .fault import PreemptionGuard, StepWatchdog, retry_step
+
+__all__ = [
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "ring_allreduce_quant",
+    "PreemptionGuard",
+    "StepWatchdog",
+    "retry_step",
+]

@@ -1,0 +1,138 @@
+"""Atomic manifest checkpointer for TrainState-like pytrees.
+
+Layout: one directory per step, written via a temp dir + ``os.replace`` so a
+checkpoint either exists completely (manifest present) or not at all —
+killing the trainer mid-save never leaves a restorable-looking corpse:
+
+    <dir>/step_000040/
+        manifest.json       # step + leaf index (path, shape, dtype, file)
+        leaf_00000.npy ...  # one .npy per pytree leaf, keypath-ordered
+
+Restore is template-driven: the caller passes a state pytree of the expected
+structure; leaf paths, shapes and dtypes are validated against the manifest
+(``ValueError`` on any mismatch) so a config drift can never silently load a
+mis-shaped table.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+_MANIFEST = "manifest.json"
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def _flatten(state: PyTree) -> List[Tuple[str, Any]]:
+    leaves, _ = jax.tree_util.tree_flatten_with_path(state)
+    return [(_keystr(p), x) for p, x in leaves]
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{int(step):08d}")
+
+
+def save_checkpoint(ckpt_dir: str, state: PyTree, step: int) -> str:
+    """Write ``state`` at ``step`` atomically; returns the checkpoint path.
+
+    An existing checkpoint for the same step is replaced.
+    """
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = _step_dir(ckpt_dir, step)
+    leaves = _flatten(state)
+    tmp = tempfile.mkdtemp(prefix=".tmp_save_", dir=ckpt_dir)
+    try:
+        index = []
+        for i, (path, leaf) in enumerate(leaves):
+            arr = np.asarray(leaf)
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            index.append({
+                "path": path,
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            })
+        manifest = {"step": int(step), "leaves": index}
+        # manifest last: its presence marks the payload as complete
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Highest step with a COMPLETE checkpoint (manifest present), else None."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if not m:
+            continue
+        if not os.path.exists(os.path.join(ckpt_dir, name, _MANIFEST)):
+            continue  # incomplete / foreign dir
+        s = int(m.group(1))
+        best = s if best is None else max(best, s)
+    return best
+
+
+def restore_checkpoint(ckpt_dir: str, state: PyTree,
+                       step: Optional[int] = None) -> PyTree:
+    """Load the checkpoint at ``step`` (default: latest) into the structure
+    of the template ``state``. Raises ``FileNotFoundError`` when no complete
+    checkpoint exists and ``ValueError`` on any structure/shape/dtype
+    mismatch against the template."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {ckpt_dir}")
+    d = _step_dir(ckpt_dir, step)
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(state)
+    template = [(_keystr(p), x) for p, x in paths]
+    index = manifest["leaves"]
+    if len(index) != len(template):
+        raise ValueError(
+            f"checkpoint has {len(index)} leaves, template has {len(template)}")
+    out = []
+    for entry, (path, leaf) in zip(index, template):
+        if entry["path"] != path:
+            raise ValueError(
+                f"leaf path mismatch: checkpoint {entry['path']!r} vs "
+                f"template {path!r}")
+        want_shape = tuple(np.shape(leaf))
+        want_dtype = np.asarray(leaf).dtype
+        got_shape = tuple(entry["shape"])
+        if got_shape != want_shape:
+            raise ValueError(
+                f"{path}: checkpoint shape {got_shape} != template "
+                f"shape {want_shape}")
+        if str(want_dtype) != entry["dtype"]:
+            raise ValueError(
+                f"{path}: checkpoint dtype {entry['dtype']} != template "
+                f"dtype {want_dtype}")
+        arr = np.load(os.path.join(d, entry["file"]))
+        out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

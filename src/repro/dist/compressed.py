@@ -1,0 +1,94 @@
+"""Compressed collectives: int8 ring AllReduce with error feedback.
+
+``ring_allreduce_quant`` runs the classic two-phase ring (reduce-scatter then
+all-gather) over a named mesh axis, quantizing every hop's payload to int8
+with a per-chunk fp32 scale — an 8x wire-byte reduction for the dense-grad
+AllReduce that dominates replicated-dense recsys training (paper §III's
+hybrid layout keeps dense params replicated across all workers).
+
+Error feedback: the quantization error this device introduced on its own
+sends is returned as a same-shaped residual so callers can fold it into the
+next step's gradient (momentum-style error feedback keeps SGD unbiased in
+the long run). On a 1-device ring the op is the exact identity and the
+residual is zero.
+
+Must be called inside ``shard_map`` with ``axis_name`` bound.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-chunk symmetric int8: returns (q, scale(1,), error)."""
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    scale = jnp.maximum(scale, jnp.float32(1e-30))
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale[None], x - deq
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[0]
+
+
+def ring_allreduce_quant(v: jax.Array, axis_name: str
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """AllReduce (sum) of 1-D ``v`` over ``axis_name`` with int8-quantized
+    ring hops. Returns ``(summed, residual)`` where ``residual`` holds the
+    local quantization error (error-feedback term), same shape as ``v``."""
+    if v.ndim != 1:
+        raise ValueError(f"ring_allreduce_quant expects 1-D input, got {v.shape}")
+    n = jax.lax.psum(1, axis_name)  # static ring size
+    if n == 1:
+        return v, jnp.zeros_like(v)
+
+    idx = jax.lax.axis_index(axis_name)
+    length = v.shape[0]
+    c = -(-length // n)  # chunk size
+    padded = jnp.pad(v.astype(jnp.float32), (0, n * c - length))
+    chunks = padded.reshape(n, c)
+    # ring: device i sends to i+1
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    residual = jnp.zeros_like(padded)
+
+    def take_chunk(buf2d, j):
+        return jax.lax.dynamic_slice_in_dim(buf2d.reshape(-1), j * c, c)
+
+    # ---- phase 1: reduce-scatter (n-1 quantized hops) --------------------
+    # At hop s, device i forwards its partial sum of chunk (i - s) mod n and
+    # folds the received partial into its own copy of chunk (i - s - 1).
+    cur = take_chunk(chunks, idx)
+    for s in range(n - 1):
+        q, scale, err = _quantize(cur)
+        residual = jax.lax.dynamic_update_slice(
+            residual, err, (jnp.mod(idx - s, n) * c,))
+        q = jax.lax.ppermute(q, axis_name, perm)
+        scale = jax.lax.ppermute(scale, axis_name, perm)
+        cur = _dequantize(q, scale) + take_chunk(chunks, jnp.mod(idx - s - 1, n))
+    # cur == full sum of chunk (idx + 1) mod n
+
+    # ---- phase 2: all-gather (n-1 quantized hops) ------------------------
+    # Quantize ONCE at the owning device and forward the same int8 payload
+    # around the ring: every device (owner included) dequantizes identical
+    # bits, so the reduced tensor is bit-identical ring-wide. The owner's
+    # quantization error goes into the residual too — phase 1 covered chunks
+    # idx..idx-(n-2); this covers the remaining chunk (idx+1) mod n, so the
+    # error-feedback term accounts for every lossy encode this device did.
+    q, scale, err = _quantize(cur)
+    residual = jax.lax.dynamic_update_slice(
+        residual, err, (jnp.mod(idx + 1, n) * c,))
+    out = jnp.zeros_like(padded)
+    out = jax.lax.dynamic_update_slice(
+        out, _dequantize(q, scale), (jnp.mod(idx + 1, n) * c,))
+    for s in range(n - 1):
+        q = jax.lax.ppermute(q, axis_name, perm)
+        scale = jax.lax.ppermute(scale, axis_name, perm)
+        out = jax.lax.dynamic_update_slice(
+            out, _dequantize(q, scale), (jnp.mod(idx - s, n) * c,))
+
+    return out[:length].astype(v.dtype), residual[:length].astype(v.dtype)

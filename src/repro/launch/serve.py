@@ -1,5 +1,5 @@
-"""Serving launcher: batched prefill + decode with engine-backed embedding
-lookups (the inference side of the assigned decode shapes).
+"""Serving launcher: thin CLI over ``repro.api.Session.serve`` (batched
+prefill + KV-cache decode with engine-backed embedding lookups).
 
     python -m repro.launch.serve --arch stablelm-3b --reduced \
         --batch 4 --prompt-len 16 --gen 8
@@ -8,16 +8,8 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from ..configs.base import NestPipeConfig, ShapeConfig
-from ..configs.registry import get_arch
-from ..core.embedding import init_table_state
-from .build import resolve
+from ..api import Session
 
 
 def serve(argv=None):
@@ -30,81 +22,14 @@ def serve(argv=None):
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
-    max_len = args.prompt_len + args.gen
-    wl = resolve(
-        args.arch, "decode_32k", mesh=None, reduced=args.reduced,
-        npcfg=NestPipeConfig(bucket_slack=4.0), t_chunk=64,
-        shape_override=ShapeConfig("cli", kind="decode", seq_len=max_len,
-                                   global_batch=args.batch),
-    )
-    cfg = wl.bundle.cfg
-    arch = wl.arch
-    rng = np.random.default_rng(args.seed)
-    params = wl.bundle.init_params(jax.random.PRNGKey(args.seed))
-    table = init_table_state(jax.random.PRNGKey(1), wl.spec, None,
-                             wl.engine.sparse_axes)
-
-    # prompt tokens -> scrambled keys
-    toks = rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len))
-    keys = np.asarray(wl.spec.scramble(jnp.asarray(toks.astype(np.int32))))
-
-    engine = wl.engine
-    bundle = wl.bundle
-
-    @jax.jit
-    def prefill_fn(params, table, keys, extras):
-        emb, _ = engine.lookup_from_master(table, keys)
-        if bundle.kind == "encdec":
-            logits, cache = bundle.prefill(params, emb, frames=extras["frames"],
-                                           cache_len=max_len)
-        elif getattr(cfg, "frontend", None) is not None:
-            full = jnp.concatenate([extras["patches"].astype(emb.dtype), emb], 1)
-            logits, cache = bundle.prefill(params, full, cache_len=max_len)
-        else:
-            logits, cache = bundle.prefill(params, emb, cache_len=max_len)
-        return jnp.argmax(logits, -1).astype(jnp.int32), cache
-
-    @jax.jit
-    def decode_fn(params, table, cache, keys):
-        emb, _ = engine.lookup_from_master(table, keys)
-        logits, cache = bundle.decode_step(params, emb, cache)
-        return jnp.argmax(logits, -1).astype(jnp.int32), cache
-
-    extras = {}
-    if bundle.kind == "encdec":
-        enc_d = cfg.encoder.d_model or cfg.d_model
-        extras["frames"] = jnp.asarray(
-            rng.normal(size=(args.batch, cfg.encoder.n_frames, enc_d)), jnp.float32
-        ) * 0.02
-    elif getattr(cfg, "frontend", None) is not None:
-        extras["patches"] = jnp.asarray(
-            rng.normal(size=(args.batch, cfg.frontend.n_positions, cfg.d_model)),
-            jnp.float32) * 0.02
-
-    t0 = time.time()
-    next_tok, cache = prefill_fn(params, table, jnp.asarray(keys), extras)
-    next_tok.block_until_ready()
-    t_prefill = time.time() - t0
-
-    generated = [np.asarray(next_tok)]
-    t1 = time.time()
-    for _ in range(args.gen - 1):
-        k = wl.spec.scramble(next_tok[:, None])
-        next_tok, cache = decode_fn(params, table, cache, k)
-        generated.append(np.asarray(next_tok))
-    jax.block_until_ready(next_tok)
-    t_decode = time.time() - t1
-
-    out = np.stack(generated, axis=1)
-    summary = {
-        "arch": args.arch, "batch": args.batch, "prompt_len": args.prompt_len,
-        "generated": args.gen, "prefill_s": round(t_prefill, 3),
-        "decode_s": round(t_decode, 3),
-        "tokens_per_s": round(args.batch * (args.gen - 1) / max(t_decode, 1e-9), 1),
-        "sample_tokens": out[0, :8].tolist(),
-    }
-    print("[serve] summary:", json.dumps(summary))
-    return out
+    # Small train-shaped host workload; .serve() resolves the decode-shaped
+    # workload (prompt+gen KV cache) internally.
+    sess = Session.from_arch(args.arch, reduced=args.reduced, seed=args.seed,
+                             global_batch=args.batch, seq_len=32)
+    report = sess.serve(batch=args.batch, prompt_len=args.prompt_len,
+                        gen=args.gen)
+    print("[serve] summary:", json.dumps(report.summary))
+    return report.tokens
 
 
 if __name__ == "__main__":

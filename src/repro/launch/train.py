@@ -1,8 +1,9 @@
-"""Training launcher: end-to-end NestPipe training with checkpoint/restart,
-watchdog straggler detection, and preemption-safe saves.
+"""Training launcher: thin CLI over ``repro.api.Session``.
 
-CPU-scale entry point (reduced configs run real steps here; the production
-mesh path is exercised by the dry-run):
+End-to-end NestPipe training with checkpoint/restart, watchdog straggler
+detection, and preemption-safe saves — all owned by the Session; this module
+only parses flags. CPU-scale entry point (reduced configs run real steps
+here; the production mesh path is exercised by the dry-run):
 
     python -m repro.launch.train --arch hstu-industrial --reduced \
         --steps 200 --mode nestpipe --ckpt-dir /tmp/ck --ckpt-every 50
@@ -11,85 +12,16 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
-import time
-from typing import Optional
+import signal
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from ..configs.base import ModelConfig, NestPipeConfig, OptimizerConfig
-from ..configs.registry import get_arch
-from ..core.dbp import DBPDriver
-from ..data.synthetic import SyntheticLMStream, SyntheticRecsysStream
-from ..dist.checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from ..dist.fault import PreemptionGuard, StepWatchdog
-from ..train.state import TrainState
-from .build import resolve
-
-
-def make_stream(wl, seed: int = 0, *, global_batch: Optional[int] = None,
-                seq_len: Optional[int] = None):
-    """Host batch iterator matching the workload's batch_shapes."""
-    cfg = wl.bundle.cfg
-    n_micro, mb = wl.batch_shapes["keys"][0][:2]
-    gb = global_batch or n_micro * mb
-
-    if wl.bundle.kind == "recsys" and cfg.backbone == "dlrm":
-        stream = SyntheticRecsysStream(cfg, wl.spec, gb, seed=seed)
-
-        def gen():
-            step = 0
-            while True:
-                b = stream.make_batch(step)
-                yield {"keys": b.keys, "dense": b.dense, "labels": b.labels,
-                       "raw_keys": b.raw_keys}
-                step += 1
-
-        return gen()
-
-    # sequential recsys and LM archs both consume zipf id sequences
-    if wl.bundle.kind == "recsys":
-        vocab = cfg.tables[0].vocab_size
-        seq = cfg.seq_len
-    else:
-        vocab = cfg.vocab_size
-        seq = seq_len or wl.batch_shapes["keys"][0][2]
-    lm = SyntheticLMStream(vocab, wl.spec, gb, seq, seed=seed)
-
-    def gen():
-        step = 0
-        while True:
-            b = lm.make_batch(step)
-            out = {"keys": b["keys"], "raw_keys": b["raw_tokens"]}
-            if "labels" in wl.batch_shapes:
-                ls = wl.batch_shapes["labels"][0]
-                lab = b["labels"]
-                if len(ls) == 3 and ls[2] != lab.shape[1]:  # vlm: pad patch span
-                    pad = ls[2] - lab.shape[1]
-                    lab = np.concatenate(
-                        [np.full((gb, pad), -1, np.int32), lab], axis=1)
-                out["labels"] = lab
-            if "patches" in wl.batch_shapes:
-                ps = wl.batch_shapes["patches"][0]
-                out["patches"] = np.zeros((gb,) + ps[2:], np.float32)
-            if "frames" in wl.batch_shapes:
-                fs = wl.batch_shapes["frames"][0]
-                rng = np.random.default_rng((seed, step, 7))
-                out["frames"] = rng.normal(size=(gb,) + fs[2:]).astype(np.float32) * 0.02
-            yield out
-            step += 1
-
-    return gen()
+from ..api import Session, available_strategies
 
 
 def train(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", required=True)
     p.add_argument("--shape", default="train_4k")
-    p.add_argument("--mode", default="nestpipe",
-                   choices=["nestpipe", "serial", "async"])
+    p.add_argument("--mode", default="nestpipe", choices=available_strategies())
     p.add_argument("--steps", type=int, default=50)
     p.add_argument("--n-micro", type=int, default=4)
     p.add_argument("--reduced", action="store_true")
@@ -105,62 +37,22 @@ def train(argv=None):
 
     # CPU-scale run: no mesh (single device); the production-mesh config is
     # proven by the dry-run.
-    import dataclasses
-
-    from ..configs.base import ShapeConfig
-
-    wl = resolve(
-        args.arch, args.shape, mesh=None, mode=args.mode,
-        npcfg=NestPipeConfig(fwp_microbatches=args.n_micro, bucket_slack=4.0),
-        reduced=args.reduced, t_chunk=64,
-        shape_override=ShapeConfig(
-            "cli", kind="train",
-            seq_len=args.seq_len, global_batch=args.global_batch),
+    sess = Session.from_arch(
+        args.arch, mode=args.mode, reduced=args.reduced, shape=args.shape,
+        global_batch=args.global_batch, seq_len=args.seq_len,
+        n_micro=args.n_micro, lr=args.lr, seed=args.seed,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        preemption_signals=(signal.SIGTERM,),
     )
-    opt_cfg = OptimizerConfig(lr=args.lr)
-    fns, optimizer = wl.step_fns(opt_cfg)
-    state = wl.init_state(jax.random.PRNGKey(args.seed), optimizer)
-
-    start_step = 0
     if args.resume and args.ckpt_dir:
-        last = latest_step(args.ckpt_dir)
+        last = sess.restore_if_available()
         if last is not None:
-            state = restore_checkpoint(args.ckpt_dir, state)
-            start_step = int(state.step)
-            print(f"[train] resumed from step {start_step}")
+            print(f"[train] resumed from step {int(sess.state.step)}")
 
-    guard = PreemptionGuard()
-    watchdog = StepWatchdog()
-
-    def on_ckpt(st, step_no):
-        if args.ckpt_dir:
-            path = save_checkpoint(args.ckpt_dir, st, int(st.step))
-            print(f"[train] checkpoint @ step {int(st.step)} -> {path}")
-
-    driver = DBPDriver(
-        fns, make_stream(wl, args.seed), wl.n_micro, mode=args.mode,
-        clustering=wl.npcfg.clustering,
-        device_fields=[k for k in wl.batch_shapes],
-        on_checkpoint=on_ckpt, ckpt_every=args.ckpt_every,
-    )
-
-    t0 = time.time()
-    remaining = args.steps - start_step
-    state, stats = driver.run(state, max(remaining, 0))
-    dt = time.time() - t0
-    for i, st in enumerate(stats.step_times):
-        watchdog.observe(i, st)
-    if guard.should_checkpoint and args.ckpt_dir:
-        on_ckpt(state, int(state.step))
-
-    summary = stats.summary()
-    summary.update({
-        "arch": args.arch, "mode": args.mode, "wall_s": round(dt, 2),
-        "qps": round(args.global_batch * len(stats.step_times) / dt, 2),
-        "stragglers_flagged": len(watchdog.events),
-    })
-    print("[train] summary:", json.dumps(summary))
-    return state, stats
+    remaining = args.steps - int(sess.state.step)
+    report = sess.train(max(remaining, 0))
+    print("[train] summary:", json.dumps(report.summary))
+    return report.state, report.stats
 
 
 if __name__ == "__main__":

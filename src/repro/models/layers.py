@@ -463,8 +463,9 @@ def apply_moe_ep_shardmap(params, x, cfg: MoEConfig, mlp_type: str,
     no replicated (E, Cap, D) buffers (measured ~50x collective-byte
     reduction vs the GSPMD-slotted path on olmoe, EXPERIMENTS.md §Perf).
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from ..compat import shard_map
 
     if slack is None:
         slack = cfg.capacity_factor

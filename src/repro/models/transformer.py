@@ -17,8 +17,9 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from ..compat import shard_map
 
 from ..configs.base import ModelConfig, ParallelConfig
 from ..utils import cdiv
@@ -304,14 +305,17 @@ def vocab_parallel_xent(
             s, n = carry
             return (s + nll.sum(), n + valid.sum()), None
 
+        # (1,)-shaped carries: scalar scan carries become scalar shard_map
+        # residuals under grad, which the experimental shard_map's out-spec
+        # rank check rejects (same reason engine overflow metrics are (1,)).
         (s, n), _ = jax.lax.scan(
-            chunk_loss, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            chunk_loss, (jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.float32)),
             (hid_c, lab_c),
         )
         if mesh is not None and batch_axes:
             s = jax.lax.psum(s, batch_axes)
             n = jax.lax.psum(n, batch_axes)
-        return (s / jnp.maximum(n, 1.0))[None]
+        return s / jnp.maximum(n, 1.0)
 
     if mesh is None:
         return _local(hidden, head_w, labels)[0]

@@ -1,0 +1,57 @@
+"""Use real hypothesis when installed; otherwise a minimal random-sampling
+fallback covering the subset this suite uses (`@given` with keyword
+strategies, `@settings(max_examples=..., deadline=...)`, `st.integers`,
+`st.sampled_from`). The fallback draws `max_examples` deterministic samples
+per test, starting from the minimal point of every strategy so the usual
+edge cases (n=1, smallest shard counts, ...) are always exercised.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    import random
+
+    class _Strategy:
+        def __init__(self, sample, minimal):
+            self.sample = sample
+            self.minimal = minimal
+
+    class _St:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: rng.randint(lo, hi), lo)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: rng.choice(seq), seq[0])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)), False)
+
+    st = _St()
+
+    def settings(max_examples=20, **_ignored):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+
+        return deco
+
+    def given(**strats):
+        def deco(f):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(0xC0FFEE)
+                for i in range(n):
+                    if i == 0:
+                        draw = {k: s.minimal for k, s in strats.items()}
+                    else:
+                        draw = {k: s.sample(rng) for k, s in strats.items()}
+                    f(*args, **draw, **kwargs)
+
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+
+        return deco

@@ -1,0 +1,127 @@
+"""Session facade tests: one front door for train / serve / bench across
+all registered execution strategies, for a reduced recsys arch and a
+reduced LM arch. Also covers checkpoint roundtrip via Session.restore and
+the strategy registration contract."""
+import os
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.api import (
+    DriverStrategy,
+    Session,
+    available_strategies,
+    get_strategy,
+    register_strategy,
+)
+
+MODES = ("serial", "async", "nestpipe")
+
+RECSYS_KW = dict(arch="dlrm-ctr", global_batch=64, seq_len=1, lr=5e-3)
+LM_KW = dict(arch="stablelm-3b", global_batch=8, seq_len=16, lr=2e-3)
+
+
+def make_session(arch, *, mode, global_batch, seq_len, lr, **kw):
+    return Session.from_arch(
+        arch, mode=mode, reduced=True, global_batch=global_batch,
+        seq_len=seq_len, n_micro=2, lr=lr, t_chunk=32, **kw)
+
+
+def _head_tail(losses):
+    k = max(len(losses) // 4, 1)
+    return float(np.mean(losses[:k])), float(np.mean(losses[-k:]))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_recsys_all_modes_loss_decreases(mode):
+    report = make_session(mode=mode, **RECSYS_KW).train(16)
+    assert len(report.stats.losses) == 16
+    head, tail = _head_tail(report.stats.losses)
+    assert tail < head, (mode, head, tail)
+    assert report.summary["mode"] == mode
+    assert report.stats.overflow_max == 0
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_lm_all_modes_loss_decreases(mode):
+    report = make_session(mode=mode, **LM_KW).train(8)
+    assert len(report.stats.losses) == 8
+    head, tail = _head_tail(report.stats.losses)
+    assert tail < head, (mode, head, tail)
+
+
+def test_checkpoint_roundtrip_via_session():
+    with tempfile.TemporaryDirectory() as d:
+        sess = make_session(mode="serial", **RECSYS_KW, ckpt_dir=d)
+        sess.train(4)
+        sess.save()
+        assert int(sess.state.step) == 4
+
+        # different init seed: restore must overwrite it completely
+        sess2 = make_session(mode="serial", **RECSYS_KW, ckpt_dir=d,
+                             seed=123, data_seed=0)
+        sess2.restore()
+        assert int(sess2.state.step) == 4
+        np.testing.assert_array_equal(np.asarray(sess2.state.table.rows),
+                                      np.asarray(sess.state.table.rows))
+
+
+def test_serial_restart_is_exact():
+    """Restore + auto stream fast-forward == uninterrupted run (serial)."""
+    ref = make_session(mode="serial", **RECSYS_KW, data_seed=0).train(8).state
+    with tempfile.TemporaryDirectory() as d:
+        sess = make_session(mode="serial", **RECSYS_KW, ckpt_dir=d, data_seed=0)
+        sess.train(4)
+        sess.save()
+        sess2 = make_session(mode="serial", **RECSYS_KW, ckpt_dir=d,
+                             seed=77, data_seed=0)
+        sess2.restore()
+        final = sess2.train(4).state
+    np.testing.assert_allclose(np.asarray(final.table.rows),
+                               np.asarray(ref.table.rows), atol=1e-6)
+
+
+def test_restore_requires_ckpt_dir():
+    sess = make_session(mode="serial", **RECSYS_KW)
+    with pytest.raises(ValueError):
+        sess.restore()
+    with pytest.raises(ValueError):
+        sess.save()
+
+
+def test_unknown_mode_fails_fast():
+    with pytest.raises(KeyError) as e:
+        Session.from_arch("dlrm-ctr", mode="warp-drive", reduced=True)
+    assert "nestpipe" in str(e.value)  # lists registered modes
+
+
+def test_strategy_registration_contract():
+    assert set(MODES) <= set(available_strategies())
+    # a custom strategy registers like an arch and becomes a valid mode=
+    custom = DriverStrategy("test-serial-alias", "serial", dbp=False)
+    register_strategy(custom)
+    try:
+        assert get_strategy("test-serial-alias") is custom
+        report = make_session(mode="test-serial-alias", **RECSYS_KW).train(2)
+        assert len(report.stats.losses) == 2
+    finally:
+        from repro.api.strategies import _STRATEGIES
+        _STRATEGIES.pop("test-serial-alias", None)
+
+
+def test_lm_serve_after_train():
+    sess = make_session(mode="nestpipe", **LM_KW)
+    sess.train(2)
+    out = sess.serve(batch=2, prompt_len=8, gen=4)
+    assert out.tokens.shape == (2, 4)
+    assert out.summary["generated"] == 4
+
+
+def test_recsys_serve_rejected():
+    sess = make_session(mode="nestpipe", **RECSYS_KW)
+    with pytest.raises(ValueError):
+        sess.serve()

@@ -105,8 +105,8 @@ def test_retry_step_exhausts():
 
 def test_ring_allreduce_quant_single_axis():
     """Degenerate 1-device ring: exact identity."""
-    from jax import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
+    from repro.compat import shard_map
     mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("d",))
     x = jnp.asarray(np.random.default_rng(0).normal(size=(17,)), jnp.float32)
 

@@ -10,7 +10,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
