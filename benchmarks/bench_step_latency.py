@@ -7,20 +7,32 @@ roofline (EXPERIMENTS.md §Roofline); here we measure the real host+device
 pipeline effects that exist on CPU: input-wait hiding and per-step wall
 time, plus the step-exact loss to confirm no mode trades accuracy except
 async (which is the paper's point).
+
+``REPRO_BENCH_STEPS`` / ``REPRO_BENCH_BATCH`` shrink the run for CI's
+perf-smoke job (trajectory-only, no thresholds).
 """
 from __future__ import annotations
+
+import os
 
 from .common import emit, run_driver
 
 MODES = [("torchrec_serial", "serial"), ("uniemb_async", "async"),
          ("nestpipe", "nestpipe")]
 
+ARCH = "hstu-industrial"
+# Routing-dominated cell: trivial dense net, wide multi-hot bags, sizable
+# table — isolates the sparse hot paths (routing, buffers, writeback).
+ROUTING_ARCH = "dlrm-routing"
+
 
 def main():
+    steps = int(os.environ.get("REPRO_BENCH_STEPS", "12"))
+    global_batch = int(os.environ.get("REPRO_BENCH_BATCH", "32"))
     results = {}
     for name, mode in MODES:
-        state, stats, wl = run_driver("hstu-industrial", mode=mode, steps=12,
-                                      global_batch=32)
+        state, stats, wl = run_driver(ARCH, mode=mode, steps=steps,
+                                      global_batch=global_batch)
         s = stats.summary()
         results[name] = s
         emit(
@@ -28,11 +40,28 @@ def main():
             s["mean_step_s"] * 1e6,
             f"input_wait_us={s['mean_input_wait_s']*1e6:.1f};"
             f"final_loss={s['final_loss']:.4f};overflow={s['overflow_max']}",
+            config={"arch": ARCH, "mode": mode, "steps": steps,
+                    "global_batch": global_batch, "n_micro": 4,
+                    "seq_len": 32, "reduced": True},
         )
     speedup = results["torchrec_serial"]["mean_step_s"] / max(
         results["nestpipe"]["mean_step_s"], 1e-9)
     emit("table2_nestpipe_speedup_x1000", speedup * 1000,
-         "serial_vs_nestpipe_wall")
+         "serial_vs_nestpipe_wall",
+         config={"arch": ARCH, "steps": steps, "global_batch": global_batch})
+
+    # routing-dominated cell (nestpipe only: the hot-path trajectory number)
+    r_batch = global_batch * 8
+    state, stats, wl = run_driver(ROUTING_ARCH, mode="nestpipe", steps=steps,
+                                  n_micro=8, global_batch=r_batch)
+    s = stats.summary()
+    emit(
+        "table2_step_latency_routing_nestpipe",
+        s["mean_step_s"] * 1e6,
+        f"final_loss={s['final_loss']:.4f};overflow={s['overflow_max']}",
+        config={"arch": ROUTING_ARCH, "mode": "nestpipe", "steps": steps,
+                "global_batch": r_batch, "n_micro": 8, "reduced": True},
+    )
 
 
 if __name__ == "__main__":

@@ -1,18 +1,39 @@
 """Shared benchmark harness utilities (CPU-scale reproductions of the
 paper's tables; production-mesh numbers come from the dry-run JSONLs).
-Thin shim over ``repro.api.Session.bench``."""
+Thin shim over ``repro.api.Session.bench``.
+
+Every ``emit`` both prints the human CSV line AND appends a machine-
+readable record to ``RESULTS`` so ``benchmarks.run --json PATH`` can write
+the per-PR perf trajectory file (``BENCH_*.json``).
+"""
 from __future__ import annotations
 
 import os
 import sys
+from typing import List, Optional
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.api import Session
 
+# Machine-readable trajectory records, one per emit():
+#   {"bench": str, "us_per_call": float, "derived": str, "config": dict}
+RESULTS: List[dict] = []
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+
+def emit(name: str, us_per_call: float, derived: str = "",
+         config: Optional[dict] = None):
     print(f"{name},{us_per_call:.1f},{derived}")
+    RESULTS.append({
+        "bench": name,
+        "us_per_call": round(float(us_per_call), 1),
+        "derived": derived,
+        "config": dict(config or {}),
+    })
+
+
+def reset_results() -> None:
+    RESULTS.clear()
 
 
 def run_driver(arch: str, *, mode: str, steps: int = 10, n_micro: int = 4,

@@ -5,10 +5,17 @@ the host-pipeline effects; production-mesh numbers derive from dry-run
 artifacts (subprocessed where a different device count is needed).
 
     PYTHONPATH=src python -m benchmarks.run [--only fig9,table2]
+    PYTHONPATH=src python -m benchmarks.run --only table2 \\
+        --json BENCH_step_latency.json
+
+``--json PATH`` additionally writes every emitted measurement as a
+machine-readable ``{bench, us_per_call, derived, config}`` record so the
+perf trajectory is tracked across PRs (CI uploads it as an artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -38,19 +45,36 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default="",
                    help="comma-separated subset of: " + ",".join(BENCHES))
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="write machine-readable {bench,us_per_call,derived,"
+                        "config} records to PATH (perf trajectory file)")
     args = p.parse_args()
     wanted = [w for w in args.only.split(",") if w] or list(BENCHES)
     print("name,us_per_call,derived")
     failures = 0
+    ran = []
     for name in wanted:
         t0 = time.time()
         try:
             BENCHES[name]()
+            ran.append(name)
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception as e:
             failures += 1
             print(f"# {name} FAILED: {e}", file=sys.stderr)
             traceback.print_exc()
+    if args.json:
+        from .common import RESULTS
+        payload = {
+            "schema": "repro-bench-v1",
+            "benches": ran,
+            "failures": failures,
+            "records": RESULTS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(RESULTS)} records to {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -80,6 +80,7 @@ class Session:
         watchdog_factor: float = 3.0,
         preemption_signals: tuple = (),
         reduced: bool = False,
+        metrics_every: Optional[int] = None,
     ):
         self.workload = workload
         self.reduced = reduced
@@ -89,6 +90,7 @@ class Session:
         self.data_seed = seed if data_seed is None else data_seed
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
+        self.metrics_every = metrics_every
         self.guard = PreemptionGuard(signals=preemption_signals)
         self.watchdog = StepWatchdog(factor=watchdog_factor)
         self._fns = None  # training step fns built on first train/bench
@@ -123,12 +125,19 @@ class Session:
         ckpt_dir: str = "",
         ckpt_every: int = 0,
         preemption_signals: tuple = (),
+        metrics_every: Optional[int] = None,
     ) -> "Session":
         """Resolve a registry arch into a ready session.
 
         ``mode`` must name a registered strategy (``repro.api.strategies``).
         ``global_batch``/``seq_len`` override the named ``shape`` with a
         CPU-scale custom shape; leave them None to use the production shape.
+        ``metrics_every`` sets the driver's deferred metric-drain cadence
+        (loss/timing stay on device between drains; None = strategy default).
+        Note the step watchdog then sees span-AVERAGED step times — a single
+        slow step inside a span is diluted by a factor of ``metrics_every``;
+        pass ``metrics_every=1`` when per-step watchdog sensitivity matters
+        more than pipeline overlap.
         """
         strategy = get_strategy(mode)  # fail fast on unknown modes
         npcfg = npcfg or NestPipeConfig(
@@ -151,6 +160,7 @@ class Session:
             wl, opt_cfg=opt_cfg, seed=seed, data_seed=data_seed,
             ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, strategy=strategy,
             preemption_signals=preemption_signals, reduced=reduced,
+            metrics_every=metrics_every,
         )
 
     @classmethod
@@ -221,6 +231,10 @@ class Session:
         serial mode; pipelined modes re-prime the carry one batch early by
         construction). Periodic checkpoints every ``ckpt_every`` steps and a
         final save on preemption are handled here.
+
+        The current state's buffers are DONATED to the jitted steps (updated
+        in place); ``self.state`` is rebound to the returned state, but any
+        outside references to the pre-train state arrays become invalid.
         """
         if resume:
             self.restore_if_available()
@@ -232,10 +246,14 @@ class Session:
             if self.ckpt_dir:
                 save_checkpoint(self.ckpt_dir, st, int(st.step))
 
+        driver_kw = {}
+        if self.metrics_every is not None:
+            driver_kw["metrics_every"] = self.metrics_every
         driver = self.strategy.build_driver(
             self.fns, stream, self.workload,
             on_checkpoint=on_ckpt if (self.ckpt_dir and self.ckpt_every) else None,
             ckpt_every=self.ckpt_every,
+            **driver_kw,
         )
         t0 = time.time()
         state, stats = driver.run(self.state, max(int(steps), 0))

@@ -57,6 +57,8 @@ class DriverStrategy:
     name: str
     driver_mode: str  # which jitted step family DBPDriver dispatches to
     dbp: bool = True  # dual-buffer (inter-batch) pipelining enabled
+    metrics_every: int = 8  # deferred metric-drain cadence (DBPDriver)
+    donate: bool = True  # donate state+carry buffers to the steady-state jit
 
     def configure(self, npcfg: NestPipeConfig) -> NestPipeConfig:
         # launch.build.resolve independently pins dbp=False for the builtin
@@ -69,6 +71,8 @@ class DriverStrategy:
     def build_driver(self, fns, stream, workload, **driver_kw):
         driver_kw.setdefault("clustering", workload.npcfg.clustering)
         driver_kw.setdefault("device_fields", list(workload.batch_shapes))
+        driver_kw.setdefault("metrics_every", self.metrics_every)
+        driver_kw.setdefault("donate", self.donate)
         return DBPDriver(fns, stream, workload.n_micro,
                          mode=self.driver_mode, **driver_kw)
 

@@ -233,6 +233,10 @@ class NestPipeConfig:
     bucket_slack: float = 1.5  # C = ceil(U_max / S * slack)
     dedup_remote: bool = False  # owner-side second dedup (paper's retrieval stage)
     grad_mode: str = "compact"  # "compact" | "dense_shard"
+    # Hot-path kernel backend: "auto" picks Pallas on TPU and the jnp
+    # reference elsewhere; "pallas" | "interpret" | "reference" force one
+    # (see kernels/dispatch.py for the contract).
+    kernel_backend: str = "auto"
 
 
 @dataclass(frozen=True)

@@ -57,6 +57,23 @@ DLRM_CTR = RecsysModelConfig(
     num_dense_features=13,
 )
 
+# Routing-dominated bench cell (benchmarks/bench_step_latency): trivial
+# dense net, wide multi-hot bags over a sizable table — per-step time is
+# dominated by key dedup/routing, dual-buffer maintenance and the master
+# writeback, i.e. exactly the sparse hot paths. CPU-runnable (full ==
+# reduced); the table is big enough that per-step state copies would
+# dominate without buffer donation.
+DLRM_ROUTING = RecsysModelConfig(
+    name="dlrm-routing", backbone="dlrm",
+    tables=(
+        SparseTableConfig("items", vocab_size=400_000, dim=64, bag_size=8),
+        SparseTableConfig("users", vocab_size=100_000, dim=64, bag_size=4),
+        SparseTableConfig("context", vocab_size=10_000, dim=64, bag_size=4),
+    ),
+    d_model=32, n_layers=0, n_heads=1, d_ff=64, seq_len=1,
+    num_dense_features=4,
+)
+
 DLRM_REDUCED = RecsysModelConfig(
     name="dlrm-reduced", backbone="dlrm",
     tables=(

@@ -26,6 +26,8 @@ _RECSYS = {
     "hstu-industrial": ("HSTU_INDUSTRIAL", "HSTU_REDUCED"),
     "fuxi-kuairand": ("FUXI_KUAIRAND", "FUXI_REDUCED"),
     "dlrm-ctr": ("DLRM_CTR", "DLRM_REDUCED"),
+    # routing-dominated perf-bench cell (CPU-runnable at full size)
+    "dlrm-routing": ("DLRM_ROUTING", "DLRM_ROUTING"),
 }
 
 ASSIGNED_LM_ARCHS: Tuple[str, ...] = tuple(_LM_MODULES)

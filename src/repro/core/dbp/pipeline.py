@@ -15,6 +15,29 @@ timing, and checkpoint hooks.
 
 It also runs the baselines: ``serial`` (no pipelining), ``async``
 (prefetch without dual-buffer sync — the staleness baseline).
+
+Hot-loop discipline (this is the part the paper's overlap depends on):
+
+- **Donated buffers.** The steady-state jits donate the ``TrainState`` and
+  the ``PipelineCarry`` (master table, both dual buffers, adagrad state) so
+  XLA updates the largest arrays in the system in place instead of
+  round-tripping a full copy every step. Each step runs as TWO dispatches:
+  the main step (which leaves the master table untouched — it only READS it
+  for the stale-master retrieval) and a commit jit whose donated table has a
+  single consumer, making the writeback scatter truly in place (see
+  train/step.py: a fused program must copy the table because retrieval and
+  writeback both consume it). The state/carry objects passed to ``run`` are
+  CONSUMED — callers must not touch them afterwards (pass ``donate=False``
+  to keep them alive, e.g. for A/B comparisons).
+- **Non-blocking metric drain.** The loop never calls ``float(aux[...])``
+  per step — that would insert a host sync serializing stages 1-2 against
+  stage 5. Instead per-step aux pytrees stay on device in a pending list
+  and are drained (one ``jax.block_until_ready`` + host conversion) every
+  ``metrics_every`` steps, at checkpoints, and at the end of the run. Step
+  wall times and the straggler EMA are therefore computed from drained
+  timestamps: every step in a drained span is attributed the span's mean
+  wall time (minus host input-wait), so straggler detection operates at
+  drain granularity.
 """
 from __future__ import annotations
 
@@ -27,6 +50,11 @@ import numpy as np
 
 from ...data.pipeline import PrefetchQueue, make_cluster_transform, stage_to_device
 from ...train.state import PipelineCarry, TrainState
+from ...train.step import (
+    COMMIT_DONATE_ARGNUMS,
+    SERIAL_DONATE_ARGNUMS,
+    STEADY_DONATE_ARGNUMS,
+)
 
 
 @dataclass
@@ -52,6 +80,50 @@ class PipelineStats:
         }
 
 
+class _MetricsDrain:
+    """Deferred device->host metric conversion (see module docstring).
+
+    ``push`` keeps a step's aux pytree on device; ``drain`` blocks once on
+    the newest aux (everything older is already done by program order),
+    converts the whole pending span, and spreads the span's wall time —
+    minus the host-side input wait accrued inside it — evenly over its
+    steps for the stats and the straggler EMA.
+    """
+
+    def __init__(self, stats: PipelineStats, straggler_factor: float):
+        self.stats = stats
+        self.straggler_factor = straggler_factor
+        self.pending: List[tuple] = []
+        self.ema: Optional[float] = None
+        self._t_mark = time.perf_counter()
+        self._wait_mark = 0.0  # sum(stats.input_wait_times) at the mark
+
+    def push(self, t: int, aux) -> None:
+        self.pending.append((t, aux))
+
+    def drain(self) -> None:
+        if not self.pending:
+            self._t_mark = time.perf_counter()
+            self._wait_mark = sum(self.stats.input_wait_times)
+            return
+        jax.block_until_ready(self.pending[-1][1])
+        now = time.perf_counter()
+        waited = sum(self.stats.input_wait_times) - self._wait_mark
+        dt = max(now - self._t_mark - waited, 0.0) / len(self.pending)
+        for t, aux in self.pending:
+            self.stats.step_times.append(dt)
+            self.stats.losses.append(float(aux["loss"]))
+            self.stats.overflow_max = max(
+                self.stats.overflow_max, int(aux.get("routing_overflow", 0))
+            )
+            if self.ema is not None and dt > self.straggler_factor * self.ema:
+                self.stats.straggler_steps.append(t)
+            self.ema = dt if self.ema is None else 0.9 * self.ema + 0.1 * dt
+        self.pending.clear()
+        self._t_mark = now
+        self._wait_mark = sum(self.stats.input_wait_times)
+
+
 class DBPDriver:
     """Runs NestPipe training (or a baseline mode) over a host batch stream."""
 
@@ -69,6 +141,8 @@ class DBPDriver:
         straggler_factor: float = 3.0,
         on_checkpoint: Optional[Callable[[TrainState, int], None]] = None,
         ckpt_every: int = 0,
+        metrics_every: int = 8,  # steps between deferred metric drains
+        donate: bool = True,  # donate state+carry to the steady-state jits
     ):
         self.fns = step_fns
         self.n_micro = n_micro
@@ -78,13 +152,30 @@ class DBPDriver:
         self.straggler_factor = straggler_factor
         self.on_checkpoint = on_checkpoint
         self.ckpt_every = ckpt_every
-        transform = make_cluster_transform(
-            n_micro, clustering if mode != "serial" else clustering
-        )
+        self.metrics_every = max(int(metrics_every), 1)
+        self.donate = donate
+        # Key-centric clustering only shapes FWP micro-batch locality; the
+        # serial baseline has no window to cluster for, so it skips the
+        # host-side permutation entirely.
+        self.clustering = clustering if mode != "serial" else "none"
+        transform = make_cluster_transform(n_micro, self.clustering)
         self.queue = PrefetchQueue(source, depth=prefetch_depth, transform=transform)
-        self._jit_nestpipe = jax.jit(step_fns.nestpipe_step)
-        self._jit_async = jax.jit(step_fns.async_step)
-        self._jit_serial = jax.jit(step_fns.serial_step)
+        # Split-phase steps: the steady/serial jits leave the master table
+        # untouched (trivially aliasable passthrough) and the commit jits
+        # apply the update with the table donated and singly-consumed, so
+        # the scatter is truly in place (see train/step.py module doc).
+        steady_donate = STEADY_DONATE_ARGNUMS if donate else ()
+        commit_donate = COMMIT_DONATE_ARGNUMS if donate else ()
+        self._jit_nestpipe = jax.jit(step_fns.nestpipe_step_nowb,
+                                     donate_argnums=steady_donate)
+        self._jit_async = jax.jit(step_fns.async_step_nowb,
+                                  donate_argnums=steady_donate)
+        self._jit_serial = jax.jit(step_fns.serial_step_noupd,
+                                   donate_argnums=SERIAL_DONATE_ARGNUMS if donate else ())
+        self._jit_commit_wb = jax.jit(step_fns.commit_writeback,
+                                      donate_argnums=commit_donate)
+        self._jit_commit_pkts = jax.jit(step_fns.commit_packets,
+                                        donate_argnums=commit_donate)
         self._jit_init = jax.jit(step_fns.init_carry)
 
     # -- stages 1-2 -----------------------------------------------------
@@ -104,18 +195,18 @@ class DBPDriver:
 
     def run(self, state: TrainState, num_steps: int) -> (TrainState, PipelineStats):
         stats = PipelineStats()
-        ema = None
+        drain = _MetricsDrain(stats, self.straggler_factor)
         try:
             if self.mode == "serial":
                 for t in range(num_steps):
                     batch = self._next_device_batch(stats)
-                    t0 = time.perf_counter()
-                    state, aux = self._jit_serial(state, batch)
-                    loss = float(aux["loss"])  # blocks: end-of-step barrier
-                    dt = time.perf_counter() - t0
-                    self._record(stats, t, dt, loss, aux, ema)
-                    ema = dt if ema is None else 0.9 * ema + 0.1 * dt
-                    self._maybe_ckpt(state, t)
+                    state, aux, pkts = self._jit_serial(state, batch)
+                    state = state._replace(
+                        table=self._jit_commit_pkts(state.table, pkts))
+                    drain.push(t, aux)
+                    self._maybe_drain(drain, t, num_steps)
+                    self._maybe_ckpt(state, t, drain)
+                drain.drain()
                 return state, stats
 
             step_fn = self._jit_nestpipe if self.mode == "nestpipe" else self._jit_async
@@ -123,25 +214,27 @@ class DBPDriver:
             carry = self._jit_init(state.table, batch["keys"])
             for t in range(num_steps):
                 nxt = self._next_device_batch(stats)
-                t0 = time.perf_counter()
-                state, carry, aux = step_fn(state, carry, batch, nxt["keys"])
-                loss = float(aux["loss"])
-                dt = time.perf_counter() - t0
-                self._record(stats, t, dt, loss, aux, ema)
-                ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+                state, carry, aux, buf_updated = step_fn(
+                    state, carry, batch, nxt["keys"])
+                state = state._replace(
+                    table=self._jit_commit_wb(state.table, buf_updated))
+                drain.push(t, aux)
+                self._maybe_drain(drain, t, num_steps)
                 batch = nxt
-                self._maybe_ckpt(state, t)
+                self._maybe_ckpt(state, t, drain)
+            drain.drain()
             return state, stats
         finally:
             self.queue.close()
 
-    def _record(self, stats, t, dt, loss, aux, ema):
-        stats.step_times.append(dt)
-        stats.losses.append(loss)
-        stats.overflow_max = max(stats.overflow_max, int(aux.get("routing_overflow", 0)))
-        if ema is not None and dt > self.straggler_factor * ema:
-            stats.straggler_steps.append(t)
+    def _maybe_drain(self, drain: _MetricsDrain, t: int, num_steps: int):
+        # Step 0 carries compile time — drain it alone so the smear stays out
+        # of the steady-state timings (summary() already drops step 0).
+        if t == 0 or (t + 1) % self.metrics_every == 0 or t == num_steps - 1:
+            drain.drain()
 
-    def _maybe_ckpt(self, state, t):
+    def _maybe_ckpt(self, state, t, drain: _MetricsDrain):
         if self.on_checkpoint is not None and self.ckpt_every and (t + 1) % self.ckpt_every == 0:
+            drain.drain()  # flush the device queue + stats before saving
             self.on_checkpoint(state, t + 1)
+            drain.drain()  # re-mark: keep save time out of the next span's steps

@@ -32,14 +32,14 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ...compat import shard_map
 
 from ...configs.base import NestPipeConfig
+from ...kernels import dispatch
 from ...utils import cdiv, round_up
 from .routing import (
     SENTINEL,
-    bucket_by_owner,
-    fixed_unique,
-    gather_rows,
+    bucket_by_owner_window,
+    fixed_unique_window,
     intersect_sorted,
-    segment_rowsum,
+    merge_sorted_unique,
     sorted_lookup,
 )
 from .table import EmbeddingTableState, MegaTableSpec
@@ -114,6 +114,9 @@ class EmbeddingEngine:
         self.compute_dtype = compute_dtype
         self.sparse_lr = float(sparse_lr)
         self.sparse_eps = float(sparse_eps)
+        # Hot-path kernel backend, resolved once (see kernels/dispatch.py).
+        self.kernel_backend = dispatch.resolve_backend(
+            getattr(np_cfg, "kernel_backend", None))
 
         if mesh is not None:
             self.num_shards = 1
@@ -218,55 +221,52 @@ class EmbeddingEngine:
     # Device-local building blocks (run inside shard_map)
     # ==================================================================
 
-    def _route_one(self, keys_flat: jax.Array, dims: EngineDims) -> LookupPlan:
-        uniq = fixed_unique(keys_flat, dims.u_max)
-        buck = bucket_by_owner(
+    def _route_plans(self, kf: jax.Array, dims: EngineDims) -> LookupPlan:
+        """Fused routing for an (N, L) key block: one window-wide sort-based
+        dedup + owner bucketing pass (no per-micro-batch loop) and ONE key
+        All2All covering all N lookup units (DBP stage 3)."""
+        n = kf.shape[0]
+        uniq = fixed_unique_window(kf, dims.u_max)  # leaves (N, ...)
+        buck = bucket_by_owner_window(
             uniq.unique_keys, dims.num_shards, dims.cap, self.spec.rows_per_shard
         )
-        recv_keys = self._a2a(buck.send_keys)
-        return LookupPlan(
-            uniq.inverse, buck.slot_of_unique, recv_keys,
-            (uniq.overflow + buck.overflow)[None],  # (1,) so shard_map specs apply
-        )
-
-    def _route_window_local(self, keys: jax.Array, dims: EngineDims) -> WindowPlan:
-        """Route all N micro-batches with one fused key All2All, then union
-        the owner-side key sets (over micro-batches AND replicated axes)."""
-        n = dims.n_micro
-        kf = keys.reshape(n, -1)
-        uniqs = [fixed_unique(kf[i], dims.u_max) for i in range(n)]
-        bucks = [
-            bucket_by_owner(u.unique_keys, dims.num_shards, dims.cap,
-                            self.spec.rows_per_shard)
-            for u in uniqs
-        ]
-        # Fused key exchange: (S, N*C) single All2All (DBP stage 3).
-        send = jnp.concatenate([b.send_keys for b in bucks], axis=1)  # (S, N*C)
+        # Fused key exchange: (S, N*C) single All2All. send_keys is (N, S, C);
+        # lay the N axis out along the per-destination columns.
+        send = jnp.moveaxis(buck.send_keys, 0, 1).reshape(
+            dims.num_shards, n * dims.cap)
         recv = self._a2a(send).reshape(dims.num_shards, n, dims.cap)
         recv_per_mb = jnp.moveaxis(recv, 1, 0)  # (N, S, C)
+        return LookupPlan(
+            inverse=uniq.inverse,
+            slot_of_unique=buck.slot_of_unique,
+            recv_keys=recv_per_mb,
+            overflow=(uniq.overflow + buck.overflow)[:, None],  # (N, 1)
+        )
 
-        all_keys = recv_per_mb.reshape(-1)
+    def _route_one(self, keys_flat: jax.Array, dims: EngineDims) -> LookupPlan:
+        """Single lookup unit (serial mode / serving): the N=1 view of the
+        same fused window route."""
+        plans = self._route_plans(keys_flat[None], dims)
+        return jax.tree.map(lambda x: x[0], plans)
+
+    def _route_window_local(self, keys: jax.Array, dims: EngineDims) -> WindowPlan:
+        """Route all N micro-batches in one fused pass, then union the
+        owner-side key sets (over micro-batches AND replicated axes)."""
+        plans = self._route_plans(keys.reshape(dims.n_micro, -1), dims)
+
+        all_keys = plans.recv_keys.reshape(-1)
         if self.psum_axes:
             # Union over replicated axes so buffers are replica-identical.
             gathered = jax.lax.all_gather(all_keys, self.psum_axes, tiled=True)
             all_keys = gathered.reshape(-1)
-        buffer_keys = fixed_unique(all_keys, dims.buffer_cap).unique_keys
-
-        plans = LookupPlan(
-            inverse=jnp.stack([u.inverse for u in uniqs]),
-            slot_of_unique=jnp.stack([b.slot_of_unique for b in bucks]),
-            recv_keys=recv_per_mb,
-            overflow=jnp.stack(
-                [(u.overflow + b.overflow)[None] for u, b in zip(uniqs, bucks)]
-            ),
-        )
+        buffer_keys = merge_sorted_unique(all_keys, dims.buffer_cap)
         return WindowPlan(plans, buffer_keys)
 
     def _serve_rows(self, rows_src: jax.Array, local_idx: jax.Array,
                     shape: Tuple[int, ...]) -> jax.Array:
-        return gather_rows(rows_src, local_idx.reshape(-1)).reshape(
-            *shape, rows_src.shape[-1]
-        ).astype(self.compute_dtype)
+        served = dispatch.gather_rows(rows_src, local_idx.reshape(-1),
+                                      backend=self.kernel_backend)
+        return served.reshape(*shape, rows_src.shape[-1]).astype(self.compute_dtype)
 
     def _master_local_idx(self, recv_keys: jax.Array) -> jax.Array:
         shard_id = self._shard_id()
@@ -279,12 +279,15 @@ class EmbeddingEngine:
     def _assemble(self, plan: LookupPlan, served: jax.Array) -> jax.Array:
         back = self._a2a(served)  # (S, C, D)
         flat = back.reshape(-1, back.shape[-1])
-        unique_emb = gather_rows(flat, plan.slot_of_unique)
-        return gather_rows(unique_emb, plan.inverse)  # (L, D)
+        unique_emb = dispatch.gather_rows(flat, plan.slot_of_unique,
+                                          backend=self.kernel_backend)
+        return dispatch.gather_rows(unique_emb, plan.inverse,
+                                    backend=self.kernel_backend)  # (L, D)
 
     def _grads_out(self, plan: LookupPlan, demb: jax.Array, dims: EngineDims) -> GradPacket:
         """Source-side segment-sum to uniques + gradient All2All to owners."""
-        uniq_grads = segment_rowsum(demb, plan.inverse, dims.u_max)
+        uniq_grads = dispatch.segment_rowsum(demb, plan.inverse, dims.u_max,
+                                             backend=self.kernel_backend)
         send = jnp.zeros((dims.num_shards * dims.cap, demb.shape[-1]), jnp.float32)
         send = send.at[plan.slot_of_unique].set(uniq_grads, mode="drop")
         recv = self._a2a(send.reshape(dims.num_shards, dims.cap, -1))
@@ -297,7 +300,9 @@ class EmbeddingEngine:
         flat_keys = packets.keys.reshape(-1)
         flat_grads = packets.grads.reshape(-1, packets.grads.shape[-1])
         idx = sorted_lookup(buffer_keys, flat_keys)
-        total = segment_rowsum(flat_grads, idx, buffer_keys.shape[0])  # (K, D) f32
+        total = dispatch.segment_rowsum(
+            flat_grads, idx, buffer_keys.shape[0],
+            backend=self.kernel_backend)  # (K, D) f32
         if self.psum_axes:
             total = jax.lax.psum(total, self.psum_axes)
         return total
@@ -356,7 +361,7 @@ class EmbeddingEngine:
             idx = intersect_sorted(ak, pk)  # (K_p,) -> slot in active or K_a
             hit = idx < ak.shape[0]
             src = jnp.minimum(idx, ak.shape[0] - 1)
-            rows = jnp.where(hit[:, None], ar[src], pr)
+            rows = dispatch.buffer_sync(ar, pr, idx, backend=self.kernel_backend)
             accum = jnp.where(hit, aa[src], pa)
             return DualBuffer(pk, rows, accum)
 
@@ -479,7 +484,9 @@ class EmbeddingEngine:
         def _f(rows, accum, pkeys, pgrads):
             local_idx = self._master_local_idx(pkeys).reshape(-1)
             flat = pgrads.reshape(-1, pgrads.shape[-1])
-            total = segment_rowsum(flat, local_idx, self.spec.rows_per_shard)
+            total = dispatch.segment_rowsum(flat, local_idx,
+                                            self.spec.rows_per_shard,
+                                            backend=self.kernel_backend)
             if self.psum_axes:
                 total = jax.lax.psum(total, self.psum_axes)
             touched = jnp.any(total != 0.0, axis=-1)

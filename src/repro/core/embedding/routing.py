@@ -39,6 +39,48 @@ class BucketResult(NamedTuple):
     overflow: jax.Array  # () int32: keys dropped because C too small
 
 
+def fixed_unique_window(keys: jax.Array, u_max: int) -> UniqueResult:
+    """Window-fused sort-based dedup: N independent lookup units in ONE pass.
+
+    ``keys``: (N, L) int32, may contain SENTINEL padding. One batched sort
+    over the whole (N, L) block plus vectorized compaction produces, for
+    every row independently, exactly what :func:`fixed_unique` produces for
+    that row — leaves carry a leading N axis (``unique_keys`` (N, u_max),
+    ``inverse`` (N, L), ``n_unique``/``overflow`` (N,)). Uniques beyond
+    ``u_max`` are dropped per row (counted in ``overflow``).
+    """
+    n, L = keys.shape
+    order = jnp.argsort(keys, axis=1)
+    sk = jnp.take_along_axis(keys, order, axis=1)
+    valid = sk != SENTINEL
+    is_new = jnp.concatenate(
+        [valid[:, :1], (sk[:, 1:] != sk[:, :-1]) & valid[:, 1:]], axis=1
+    )
+    uid_sorted = jnp.cumsum(is_new, axis=1) - 1  # unique id per sorted position
+    n_unique = jnp.sum(is_new, axis=1).astype(jnp.int32)
+
+    # Compact unique keys into the fixed per-row buffers via one flat scatter
+    # (row r's slot u lives at r * u_max + u; out-of-capacity -> n * u_max,
+    # which mode="drop" discards).
+    row = jnp.arange(n, dtype=jnp.int32)[:, None]
+    keep = is_new & (uid_sorted < u_max)
+    dst = jnp.where(keep, row * u_max + uid_sorted, n * u_max)
+    unique_keys = (
+        jnp.full((n * u_max,), SENTINEL, jnp.int32)
+        .at[dst.reshape(-1)]
+        .set(sk.reshape(-1), mode="drop")
+        .reshape(n, u_max)
+    )
+
+    # Inverse map back to original positions; invalid/overflowed -> u_max.
+    inv_sorted = jnp.where(valid & (uid_sorted < u_max), uid_sorted, u_max)
+    inverse = (
+        jnp.zeros((n, L), jnp.int32).at[row, order].set(inv_sorted.astype(jnp.int32))
+    )
+    overflow = jnp.maximum(n_unique - u_max, 0).astype(jnp.int32)
+    return UniqueResult(unique_keys, inverse, n_unique, overflow)
+
+
 def fixed_unique(keys: jax.Array, u_max: int) -> UniqueResult:
     """Sort-based dedup into a fixed-size buffer.
 
@@ -46,24 +88,56 @@ def fixed_unique(keys: jax.Array, u_max: int) -> UniqueResult:
     keys padded to ``u_max`` and the inverse map for gathers. Uniques beyond
     ``u_max`` are dropped (counted in ``overflow``) — configure capacity so
     this never happens in production; tests assert overflow == 0.
+
+    Single-row view of :func:`fixed_unique_window` (one implementation, two
+    arities).
     """
-    L = keys.shape[0]
-    order = jnp.argsort(keys)
-    sk = keys[order]
-    valid = sk != SENTINEL
-    is_new = jnp.concatenate([valid[:1], (sk[1:] != sk[:-1]) & valid[1:]])
-    uid_sorted = jnp.cumsum(is_new) - 1  # unique id per sorted position
-    n_unique = jnp.sum(is_new).astype(jnp.int32)
+    res = fixed_unique_window(keys[None], u_max)
+    return UniqueResult(
+        res.unique_keys[0], res.inverse[0], res.n_unique[0], res.overflow[0]
+    )
 
-    # Compact unique keys into the fixed buffer (drop overflowing scatter).
-    dst = jnp.where(is_new & (uid_sorted < u_max), uid_sorted, u_max)
-    unique_keys = jnp.full((u_max,), SENTINEL, jnp.int32).at[dst].set(sk, mode="drop")
 
-    # Inverse map back to original positions; invalid/overflowed -> u_max.
-    inv_sorted = jnp.where(valid & (uid_sorted < u_max), uid_sorted, u_max)
-    inverse = jnp.zeros((L,), jnp.int32).at[order].set(inv_sorted.astype(jnp.int32))
-    overflow = jnp.maximum(n_unique - u_max, 0).astype(jnp.int32)
-    return UniqueResult(unique_keys, inverse, n_unique, overflow)
+def bucket_by_owner_window(
+    unique_keys: jax.Array, num_shards: int, capacity: int, rows_per_shard: int
+) -> BucketResult:
+    """Window-fused owner bucketing: (N, U) sorted-unique rows -> (N, S, C).
+
+    Per-row semantics identical to :func:`bucket_by_owner`; leaves carry a
+    leading N axis (``send_keys`` (N, S, C), ``slot_of_unique`` (N, U),
+    ``overflow`` (N,)). Group starts come from a batched searchsorted (the
+    rows are independently sorted, so owners are grouped within each row).
+    """
+    n, u_max = unique_keys.shape
+    valid = unique_keys != SENTINEL
+    owner = jnp.minimum(unique_keys // rows_per_shard, num_shards - 1)
+    owner = jnp.where(valid, owner, num_shards)  # sentinels -> virtual shard S
+
+    # group start of each owner within each sorted row
+    shard_ids = jnp.arange(num_shards + 1)
+    starts = jax.vmap(
+        lambda o: jnp.searchsorted(o, shard_ids, side="left")
+    )(owner)  # (N, S+1)
+    pos_in_group = jnp.arange(u_max)[None, :] - jnp.take_along_axis(
+        starts, jnp.minimum(owner, num_shards), axis=1
+    )
+    in_cap = pos_in_group < capacity
+    dest = jnp.where(
+        valid & in_cap, owner * capacity + pos_in_group, num_shards * capacity
+    )
+
+    # One flat scatter builds all N send buffers (row offset n*S*C drops).
+    row = jnp.arange(n, dtype=jnp.int32)[:, None]
+    flat_sc = num_shards * capacity
+    dst = jnp.where(dest < flat_sc, row * flat_sc + dest, n * flat_sc)
+    send_keys = (
+        jnp.full((n * flat_sc,), SENTINEL, jnp.int32)
+        .at[dst.reshape(-1)]
+        .set(unique_keys.reshape(-1), mode="drop")
+        .reshape(n, num_shards, capacity)
+    )
+    overflow = jnp.sum(valid & ~in_cap, axis=1).astype(jnp.int32)
+    return BucketResult(send_keys, dest.astype(jnp.int32), overflow)
 
 
 def bucket_by_owner(
@@ -73,27 +147,13 @@ def bucket_by_owner(
 
     Because ``unique_keys`` is sorted and owners are contiguous ranges, keys
     are already grouped by owner; the rank within each owner group is
-    ``arange - group_start``.
+    ``arange - group_start``. Single-row view of
+    :func:`bucket_by_owner_window`.
     """
-    u_max = unique_keys.shape[0]
-    valid = unique_keys != SENTINEL
-    owner = jnp.minimum(unique_keys // rows_per_shard, num_shards - 1)
-    owner = jnp.where(valid, owner, num_shards)  # sentinels -> virtual shard S
-
-    # group start of each owner within the sorted array
-    starts = jnp.searchsorted(owner, jnp.arange(num_shards + 1), side="left")
-    pos_in_group = jnp.arange(u_max) - starts[jnp.minimum(owner, num_shards)]
-    in_cap = pos_in_group < capacity
-    dest = jnp.where(valid & in_cap, owner * capacity + pos_in_group, num_shards * capacity)
-
-    send_keys = (
-        jnp.full((num_shards * capacity,), SENTINEL, jnp.int32)
-        .at[dest]
-        .set(unique_keys, mode="drop")
-        .reshape(num_shards, capacity)
+    res = bucket_by_owner_window(
+        unique_keys[None], num_shards, capacity, rows_per_shard
     )
-    overflow = jnp.sum(valid & ~in_cap).astype(jnp.int32)
-    return BucketResult(send_keys, dest.astype(jnp.int32), overflow)
+    return BucketResult(res.send_keys[0], res.slot_of_unique[0], res.overflow[0])
 
 
 def gather_rows(rows: jax.Array, idx: jax.Array) -> jax.Array:

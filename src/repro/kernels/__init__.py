@@ -6,5 +6,7 @@ buffer_sync     — dual-buffer intersection row copy (DBP stage 4b)
 flash_attention — causal GQA flash attention (LM backbones)
 hstu_attention  — fused silu pointwise attention (paper's HSTU backbone)
 
-ops.py: jit wrappers (interpret on CPU); ref.py: pure-jnp oracles.
+dispatch.py: the engine-facing backend dispatch (pallas on TPU, jnp
+reference on CPU, interpret for validation — config/env overridable);
+ops.py: jit wrappers over the raw kernels; ref.py: pure-jnp oracles.
 """

@@ -1,14 +1,17 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers around the raw Pallas kernels.
 
-``interpret`` defaults to True on CPU hosts (this container) and False on
-real TPU backends — detected once at import. Every op is shape/dtype-swept
-against ref.py in tests/test_kernels.py.
+These wrappers expose the kernels' native contracts (pre-clamped indices,
+explicit ``interpret`` switch) for tests and direct callers. The embedding
+engine does NOT call these: its hot paths go through ``kernels/dispatch.py``,
+which adds sentinel-safe semantics and the pallas/interpret/reference
+backend selection (config- and env-overridable). ``interpret=None`` here
+defers to the dispatch layer's resolved backend, so both entry points agree
+on when the real TPU kernels run.
 """
 from __future__ import annotations
 
-import jax
-
 from .buffer_sync import buffer_sync_rows as _buffer_sync
+from .dispatch import resolve_backend
 from .embedding_gather import embedding_gather as _gather
 from .flash_attention import flash_attention as _flash
 from .hstu_attention import hstu_attention as _hstu
@@ -16,10 +19,7 @@ from .segment_rowsum import segment_rowsum_sorted as _segsum
 
 
 def _default_interpret() -> bool:
-    try:
-        return jax.default_backend() != "tpu"
-    except Exception:
-        return True
+    return resolve_backend() != "pallas"
 
 
 INTERPRET = _default_interpret()

@@ -16,6 +16,26 @@ Retrieval deliberately reads the stale master: keys in K(t) ∩ K(t+1) are
 repaired by the sync, keys outside K(t) were never touched — so the step is
 *exactly* synchronous while retrieval needs no dependency on the writeback,
 which is what lets XLA overlap it with the window compute.
+
+Donation contract: every step family returns state (and carry) pytrees that
+are leaf-for-leaf shape/dtype-identical to its inputs, so callers jit them
+with ``donate_argnums=STEADY_DONATE_ARGNUMS`` (steady-state: state + carry)
+or ``SERIAL_DONATE_ARGNUMS`` (serial: state) and XLA updates the master
+table, dual buffers and optimizer moments in place — no per-step copy of
+the largest arrays in the system. Donated inputs are consumed; the DBP
+driver (core/dbp/pipeline.py) owns that lifecycle.
+
+Split-phase variants: inside ONE XLA program the master table has TWO
+consumers — the stage-4a retrieval (stale read, by design) and the
+stage-5'' writeback scatter — which forces buffer assignment to copy the
+whole table before scattering even when it is donated (the dominant
+per-step cost for big tables). The ``*_nowb`` / ``*_noupd`` step fns
+therefore return the table UNTOUCHED (trivially aliasable passthrough) plus
+the update payload, and ``commit_writeback`` / ``commit_packets`` apply it
+in a second jit where the donated table has a single consumer, so the
+scatter really is in place. The fused fns remain the composition of the two
+phases (identical math, one dispatch) for the dry-run and for TPU runs that
+want XLA to overlap the writeback with stage 3/4 of the next batch.
 """
 from __future__ import annotations
 
@@ -36,6 +56,18 @@ class StepFns(NamedTuple):
     nestpipe_step: Callable  # (state, carry, batch, keys_next) -> (state, carry, aux)
     async_step: Callable  # same, but no dual-buffer sync (staleness baseline)
     serial_step: Callable  # (state, batch) -> (state, aux)
+    # split-phase variants (see module doc: in-place master updates) --------
+    nestpipe_step_nowb: Callable  # -> (state[old table], carry, aux, buf_updated)
+    async_step_nowb: Callable  # same, staleness baseline
+    serial_step_noupd: Callable  # (state, batch) -> (state[old table], aux, pkts)
+    commit_writeback: Callable  # (table, buf_updated) -> table  [donate table]
+    commit_packets: Callable  # (table, pkts) -> table  [donate table]
+
+
+# Canonical donate_argnums for jitting the step families (see module doc).
+STEADY_DONATE_ARGNUMS = (0, 1)  # steady-state fns: state + carry
+SERIAL_DONATE_ARGNUMS = (0,)  # serial fns: state
+COMMIT_DONATE_ARGNUMS = (0,)  # commit fns: master table (in-place scatter)
 
 
 def build_step_fns(
@@ -58,8 +90,8 @@ def build_step_fns(
         buf = engine.retrieve(table, plan)
         return PipelineCarry(buf, plan)
 
-    def _step(state: TrainState, carry: PipelineCarry, batch, keys_next, *,
-              sync: bool):
+    def _step_nowb(state: TrainState, carry: PipelineCarry, batch, keys_next,
+                   *, sync: bool):
         # ---- stage 5: frozen window over batch t --------------------------
         out = window_fn(state.dense, carry.buffer, carry.plan, batch)
         lr = lr_sched(state.step)
@@ -67,9 +99,6 @@ def build_step_fns(
             state.dense, state.opt, out.dense_grads, lr
         )
         buf_updated = engine.apply_window_to_buffer(carry.buffer, out.packets)
-
-        # ---- stage 5'': writeback of t ------------------------------------
-        new_table = engine.writeback(state.table, buf_updated)
 
         # ---- stages 3+4: routing, retrieval and sync for t+1 --------------
         plan_next = engine.route_window(keys_next, n_micro)
@@ -84,25 +113,44 @@ def build_step_fns(
             "routing_overflow": engine.overflow_metric(carry.plan),
             **out.metrics,
         }
-        new_state = TrainState(new_dense, new_opt, new_table, state.step + 1)
-        return new_state, PipelineCarry(pre_buf, plan_next), aux
+        # The table is returned UNTOUCHED: stage 5'' (writeback of t) runs in
+        # commit_writeback so the donated table has one consumer there.
+        new_state = TrainState(new_dense, new_opt, state.table, state.step + 1)
+        return new_state, PipelineCarry(pre_buf, plan_next), aux, buf_updated
 
-    def nestpipe_step(state, carry, batch, keys_next):
-        return _step(state, carry, batch, keys_next, sync=True)
+    def commit_writeback(table, buf_updated):
+        """Stage 5'': in-place master writeback (jit with the table donated)."""
+        return engine.writeback(table, buf_updated)
 
-    def async_step(state, carry, batch, keys_next):
+    def nestpipe_step_nowb(state, carry, batch, keys_next):
+        return _step_nowb(state, carry, batch, keys_next, sync=True)
+
+    def async_step_nowb(state, carry, batch, keys_next):
         """UniEmb-like pipeline WITHOUT dual-buffer sync: embeddings read by
         batch t+1 miss batch t's updates for intersecting keys (one-step
         staleness) — reproduces the paper's consistency comparison."""
-        return _step(state, carry, batch, keys_next, sync=False)
+        return _step_nowb(state, carry, batch, keys_next, sync=False)
+
+    def _fused(step_nowb):
+        def step(state, carry, batch, keys_next):
+            new_state, new_carry, aux, buf_updated = step_nowb(
+                state, carry, batch, keys_next)
+            table = commit_writeback(new_state.table, buf_updated)
+            return new_state._replace(table=table), new_carry, aux
+
+        return step
+
+    nestpipe_step = _fused(nestpipe_step_nowb)
+    async_step = _fused(async_step_nowb)
 
     # ---------------- serial (TorchRec-like) baseline ----------------------
     grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)
 
-    def serial_step(state: TrainState, batch):
+    def serial_step_noupd(state: TrainState, batch):
         """Fully synchronous flat step: batch-level lookup from master,
-        single fwd/bwd over the whole batch, direct master update. The
-        same math as NestPipe (test-asserted), none of the pipelining."""
+        single fwd/bwd over the whole batch. The same math as NestPipe
+        (test-asserted), none of the pipelining. Returns the packets; the
+        master update runs in commit_packets (in-place, table donated)."""
         # batch keys arrive stacked (N, ...) for uniformity; flatten window.
         packets = []
         losses = []
@@ -122,8 +170,18 @@ def build_step_fns(
         gmean = tree_scale(gsum, 1.0 / n_micro)
         lr = lr_sched(state.step)
         new_dense, new_opt, gnorm = optimizer.update(state.dense, state.opt, gmean, lr)
-        new_table = engine.apply_packets_to_master(state.table, pkts)
         aux = {"loss": jnp.mean(jnp.stack(losses)), "grad_norm": gnorm, "lr": lr}
-        return TrainState(new_dense, new_opt, new_table, state.step + 1), aux
+        return TrainState(new_dense, new_opt, state.table, state.step + 1), aux, pkts
 
-    return StepFns(init_carry, nestpipe_step, async_step, serial_step)
+    def commit_packets(table, pkts):
+        """Serial-mode master update (jit with the table donated)."""
+        return engine.apply_packets_to_master(table, pkts)
+
+    def serial_step(state, batch):
+        new_state, aux, pkts = serial_step_noupd(state, batch)
+        table = commit_packets(new_state.table, pkts)
+        return new_state._replace(table=table), aux
+
+    return StepFns(init_carry, nestpipe_step, async_step, serial_step,
+                   nestpipe_step_nowb, async_step_nowb, serial_step_noupd,
+                   commit_writeback, commit_packets)

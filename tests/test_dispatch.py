@@ -1,0 +1,154 @@
+"""Kernel dispatch layer: backend resolution + cross-backend exactness.
+
+Each hot-path op must be bit-identical between the ``reference`` (pure jnp)
+and ``interpret`` (Pallas kernel under the interpreter) backends for f32 —
+swapping backends is a performance decision, never a numerics one. The
+segment-rowsum check uses integer-valued f32 grads so summation-order
+differences cannot hide behind rounding: sums of small integers are exact
+in f32, making bitwise equality meaningful.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.kernels import dispatch, ref
+from repro.core.embedding.routing import SENTINEL
+
+
+# ---------------------------------------------------------------------------
+# backend resolution
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_backend_defaults_to_reference_on_cpu():
+    assert jax.default_backend() != "tpu"  # harness invariant
+    assert dispatch.resolve_backend() == "reference"
+    assert dispatch.resolve_backend("auto") == "reference"
+
+
+def test_resolve_backend_precedence_and_validation():
+    assert dispatch.resolve_backend("interpret") == "interpret"
+    dispatch.set_default_backend("interpret")
+    try:
+        assert dispatch.resolve_backend() == "interpret"
+        assert dispatch.resolve_backend("reference") == "reference"  # arg wins
+    finally:
+        dispatch.set_default_backend(None)
+    assert dispatch.resolve_backend() == "reference"
+    with pytest.raises(ValueError):
+        dispatch.resolve_backend("vulkan")
+    with pytest.raises(ValueError):
+        dispatch.set_default_backend("vulkan")
+
+
+def test_resolve_backend_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    assert dispatch.resolve_backend() == "interpret"
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "auto")
+    assert dispatch.resolve_backend() == "reference"
+
+
+def test_engine_resolves_backend_from_config():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs.base import NestPipeConfig
+    from repro.core.embedding.engine import EmbeddingEngine
+    from repro.core.embedding.table import make_mega_table_spec
+
+    spec = make_mega_table_spec(None, vocab_size=64, dim=8, num_shards=1)
+    eng = EmbeddingEngine(
+        spec, None, ("model",), P(None, None),
+        NestPipeConfig(kernel_backend="interpret"))
+    assert eng.kernel_backend == "interpret"
+    eng = EmbeddingEngine(spec, None, ("model",), P(None, None),
+                          NestPipeConfig())
+    assert eng.kernel_backend == "reference"  # auto on CPU
+
+
+# ---------------------------------------------------------------------------
+# cross-backend exactness (reference vs interpret, bit-for-f32)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,d,n", [(64, 128, 37), (100, 96, 200), (32, 33, 8)])
+def test_gather_rows_backends_bitwise_equal(rows, d, n):
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(rows, d)), jnp.float32)
+    idx = rng.integers(0, rows, size=n)
+    idx[rng.random(n) < 0.3] = rows  # sentinel-miss slots -> zero rows
+    idx = jnp.asarray(idx, jnp.int32)
+    want = dispatch.gather_rows(table, idx, backend="reference")
+    got = dispatch.gather_rows(table, idx, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # miss rows are exactly zero
+    np.testing.assert_array_equal(
+        np.asarray(got)[np.asarray(idx) == rows], 0.0)
+
+
+@pytest.mark.parametrize("l,s,d", [(64, 16, 64), (200, 50, 96), (96, 256, 128)])
+def test_segment_rowsum_backends_bitwise_equal(l, s, d):
+    rng = np.random.default_rng(1)
+    ids = np.sort(rng.integers(0, s + 1, size=l)).astype(np.int32)  # incl drops
+    grads = jnp.asarray(rng.integers(-8, 8, size=(l, d)), jnp.float32)
+    want = dispatch.segment_rowsum(grads, jnp.asarray(ids), s,
+                                   backend="reference")
+    got = dispatch.segment_rowsum(grads, jnp.asarray(ids), s,
+                                  backend="interpret")
+    assert want.dtype == got.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # ref oracle agreement, and drop semantics for ids == s
+    np.testing.assert_array_equal(
+        np.asarray(want), np.asarray(ref.segment_rowsum_ref(grads,
+                                                            jnp.asarray(ids), s)))
+
+
+@pytest.mark.parametrize("ka,kp,d", [(32, 16, 64), (128, 128, 100), (8, 64, 40)])
+def test_buffer_sync_backends_bitwise_equal(ka, kp, d):
+    rng = np.random.default_rng(2)
+    act = jnp.asarray(rng.normal(size=(ka, d)), jnp.float32)
+    pre = jnp.asarray(rng.normal(size=(kp, d)), jnp.float32)
+    src = rng.integers(0, ka, size=kp)
+    src[rng.random(kp) < 0.5] = ka  # misses keep the prefetch row
+    src = jnp.asarray(src, jnp.int32)
+    want = dispatch.buffer_sync(act, pre, src, backend="reference")
+    got = dispatch.buffer_sync(act, pre, src, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(want), np.asarray(ref.buffer_sync_ref(act, pre, src)))
+
+
+# ---------------------------------------------------------------------------
+# engine integration: the hot paths really go through the dispatch layer
+# ---------------------------------------------------------------------------
+
+
+def test_engine_lookup_identical_across_backends():
+    """One end-to-end lookup served by the reference and the interpret
+    (Pallas) backends must agree bit-for-bit."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs.base import NestPipeConfig
+    from repro.core.embedding import init_table_state, make_mega_table_spec
+    from repro.core.embedding.engine import EmbeddingEngine
+
+    spec = make_mega_table_spec(None, vocab_size=128, dim=16, num_shards=1)
+    rng = np.random.default_rng(3)
+    keys = spec.scramble(jnp.asarray(
+        rng.integers(0, 128, size=(4, 8)).astype(np.int32)))
+    table = init_table_state(jax.random.PRNGKey(0), spec, None, ("model",))
+
+    outs = {}
+    for backend in ("reference", "interpret"):
+        eng = EmbeddingEngine(
+            spec, None, ("model",), P(None, None),
+            NestPipeConfig(kernel_backend=backend), compute_dtype=jnp.float32)
+        emb, plan = eng.lookup_from_master(table, keys)
+        outs[backend] = np.asarray(emb)
+        assert int(eng.overflow_metric(plan)) == 0
+    np.testing.assert_array_equal(outs["reference"], outs["interpret"])

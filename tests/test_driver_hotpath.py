@@ -1,0 +1,168 @@
+"""DBPDriver hot-loop discipline: donated buffers, deferred metric drain,
+and the serial-mode clustering fix (ISSUE 2 tentpole parts 3-4).
+
+Reuses the tiny-CTR setup from test_consistency so every run is the real
+five-stage host pipeline on a single CPU device.
+"""
+import os
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from test_consistency import batch_iter, init_state, make_setup
+
+from repro.configs.base import NestPipeConfig, OptimizerConfig
+from repro.core.dbp import DBPDriver
+from repro.core.embedding import EmbeddingEngine
+from repro.train import build_step_fns, constant_lr, make_optimizer
+
+from jax.sharding import PartitionSpec as P
+
+N_MICRO = 4
+BATCH = 32
+
+
+def make_driver(mode="nestpipe", clustering="keycentric", **driver_kw):
+    cfg, spec, stream, dense_params, loss_fn = make_setup()
+    optimizer = make_optimizer(OptimizerConfig(lr=0.05, grad_clip=0.0))
+    np_cfg = NestPipeConfig(fwp_microbatches=N_MICRO, bucket_slack=2.0,
+                            clustering=clustering)
+    eng = EmbeddingEngine(spec, None, ("model",), P(None, None), np_cfg,
+                          compute_dtype=np.float32)
+    fns = build_step_fns(
+        eng, loss_fn, optimizer, constant_lr(0.05), N_MICRO,
+        (BATCH // N_MICRO, stream.f_total))
+    state = init_state(spec, dense_params, optimizer)
+    driver = DBPDriver(fns, batch_iter(stream), N_MICRO, mode=mode,
+                       clustering=clustering,
+                       device_fields=["keys", "dense", "labels"], **driver_kw)
+    return driver, state
+
+
+# ---------------------------------------------------------------------------
+# donation
+# ---------------------------------------------------------------------------
+
+
+def test_steady_state_jit_donates_state_and_carry():
+    """The largest arrays in the system (master table, optimizer moments)
+    must be donated to the steady-state jit: after a run, the INPUT state's
+    buffers are consumed (deleted on CPU), not copied."""
+    driver, state0 = make_driver("nestpipe")
+    rows0, accum0 = state0.table.rows, state0.table.accum
+    w1_0 = state0.dense["w1"]
+    state, stats = driver.run(state0, 3)
+    assert rows0.is_deleted()
+    assert accum0.is_deleted()
+    assert w1_0.is_deleted()
+    # the returned state is alive and advanced
+    assert int(state.step) == 3
+    assert not state.table.rows.is_deleted()
+
+
+def test_serial_jit_donates_state():
+    driver, state0 = make_driver("serial")
+    rows0 = state0.table.rows
+    state, _ = driver.run(state0, 2)
+    assert rows0.is_deleted()
+    assert int(state.step) == 2
+
+
+def test_donate_false_keeps_input_state_alive():
+    driver, state0 = make_driver("nestpipe", donate=False)
+    rows0 = state0.table.rows
+    state, _ = driver.run(state0, 2)
+    assert not rows0.is_deleted()
+    np.testing.assert_array_equal(  # still readable
+        np.asarray(rows0).shape, np.asarray(state.table.rows).shape)
+
+
+# ---------------------------------------------------------------------------
+# non-blocking metric drain
+# ---------------------------------------------------------------------------
+
+
+def test_deferred_drain_records_every_step():
+    steps = 7
+    driver, state0 = make_driver("nestpipe", metrics_every=3)
+    state, stats = driver.run(state0, steps)
+    assert len(stats.losses) == steps
+    assert len(stats.step_times) == steps
+    assert all(np.isfinite(l) for l in stats.losses)
+    assert all(dt >= 0.0 for dt in stats.step_times)
+    assert stats.overflow_max == 0
+
+
+def test_deferred_drain_losses_match_per_step_drain():
+    """metrics_every only defers WHEN metrics reach the host, never what
+    they are: the loss sequence is identical to draining every step."""
+    d1, st1 = make_driver("nestpipe", metrics_every=1)
+    _, stats1 = d1.run(st1, 6)
+    d8, st8 = make_driver("nestpipe", metrics_every=8)
+    _, stats8 = d8.run(st8, 6)
+    np.testing.assert_allclose(stats1.losses, stats8.losses, rtol=0, atol=0)
+
+
+def test_checkpoint_drains_pending_metrics(monkeypatch):
+    """A checkpoint must flush the deferred metric queue first, so stats are
+    current and the device queue is quiesced when the state is saved."""
+    import repro.core.dbp.pipeline as pl
+
+    events = []
+    orig_drain = pl._MetricsDrain.drain
+
+    def spy_drain(self):
+        events.append(("drain", len(self.pending)))
+        orig_drain(self)
+
+    monkeypatch.setattr(pl._MetricsDrain, "drain", spy_drain)
+    driver, state0 = make_driver(
+        "nestpipe", metrics_every=100, ckpt_every=2,
+        on_checkpoint=lambda st, n: events.append(("ckpt", n)))
+    driver.run(state0, 4)
+    ckpts = [ev for ev in events if ev[0] == "ckpt"]
+    assert ckpts == [("ckpt", 2), ("ckpt", 4)]
+    for i, ev in enumerate(events):
+        if ev[0] == "ckpt":
+            assert events[i - 1][0] == "drain"  # drained right before saving
+
+
+# ---------------------------------------------------------------------------
+# clustering fix (satellite): serial mode skips key-centric clustering
+# ---------------------------------------------------------------------------
+
+
+def test_serial_mode_forces_round_robin_clustering():
+    driver, _ = make_driver("serial", clustering="keycentric")
+    assert driver.clustering == "none"
+    driver, _ = make_driver("nestpipe", clustering="keycentric")
+    assert driver.clustering == "keycentric"
+
+
+def test_serial_none_clustering_matches_reference_trajectory():
+    """Skipping the host permutation must not change serial-mode math
+    (micro-batch partition invariance — Prop. 2)."""
+    from repro.core.consistency import build_reference_step
+    from repro.data.pipeline import make_cluster_transform
+    from repro.utils import tree_allclose
+
+    cfg, spec, stream, dense_params, loss_fn = make_setup()
+    optimizer = make_optimizer(OptimizerConfig(lr=0.05, grad_clip=0.0))
+    ref_step = jax.jit(build_reference_step(loss_fn, optimizer,
+                                            constant_lr(0.05), N_MICRO))
+    ref_state = init_state(spec, dense_params, optimizer)
+    transform = make_cluster_transform(N_MICRO, "keycentric")
+    it = batch_iter(stream)
+    for _ in range(4):
+        b = transform(next(it))
+        b = {k: np.asarray(v) for k, v in b.items() if k != "raw_keys"}
+        ref_state, _ = ref_step(ref_state, b)
+
+    driver, state0 = make_driver("serial", clustering="keycentric")
+    got, _ = driver.run(state0, 4)
+    assert tree_allclose(got.dense, ref_state.dense, atol=1e-5)
+    assert np.allclose(np.asarray(got.table.rows),
+                       np.asarray(ref_state.table.rows), atol=1e-5)
