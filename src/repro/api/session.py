@@ -117,6 +117,9 @@ class Session:
         unroll: bool = True,
         bucket_slack: float = 4.0,
         t_chunk: int = 64,
+        store: str = "auto",
+        cache_rows: int = 0,
+        prefetch_ahead: int = 1,
         npcfg: Optional[NestPipeConfig] = None,
         opt_cfg: Optional[OptimizerConfig] = None,
         lr: Optional[float] = None,
@@ -138,12 +141,29 @@ class Session:
         slow step inside a span is diluted by a factor of ``metrics_every``;
         pass ``metrics_every=1`` when per-step watchdog sensitivity matters
         more than pipeline overlap.
+
+        ``store`` picks the embedding storage tier for the pipelined modes
+        (``"device" | "host" | "cached"``; ``"auto"`` resolves
+        ``$REPRO_STORE`` then the device tier — see ``repro.core.store``).
+        ``cache_rows`` sizes the CachedStore HBM hot-cache (0 = auto) and
+        ``prefetch_ahead`` sets the DBP retrieval lookahead depth k.
         """
         strategy = get_strategy(mode)  # fail fast on unknown modes
         npcfg = npcfg or NestPipeConfig(
             fwp_microbatches=n_micro, bucket_slack=bucket_slack,
             clustering=clustering, fwp_unroll=unroll,
         )
+        # Overlay only the kwargs the caller actually set — a provided
+        # npcfg keeps its own values for everything left at the default.
+        overlay = {}
+        if store != "auto":
+            overlay["store"] = store
+        if cache_rows != 0:
+            overlay["cache_rows"] = cache_rows
+        if prefetch_ahead != 1:
+            overlay["prefetch_ahead"] = prefetch_ahead
+        if overlay:
+            npcfg = dataclasses.replace(npcfg, **overlay)
         npcfg = strategy.configure(npcfg)
         shape_override = None
         if global_batch is not None or seq_len is not None:

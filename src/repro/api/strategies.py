@@ -22,6 +22,7 @@ from typing import Dict, Protocol, Tuple, runtime_checkable
 
 from ..configs.base import NestPipeConfig
 from ..core.dbp import DBPDriver
+from ..core.store import build_store
 
 
 @runtime_checkable
@@ -73,6 +74,28 @@ class DriverStrategy:
         driver_kw.setdefault("device_fields", list(workload.batch_shapes))
         driver_kw.setdefault("metrics_every", self.metrics_every)
         driver_kw.setdefault("donate", self.donate)
+        driver_kw.setdefault("lookahead", workload.npcfg.prefetch_ahead)
+        if "store" not in driver_kw:
+            npcfg = workload.npcfg
+            # The serial baseline is device-resident by definition: an
+            # EXPLICIT non-device store in the config is a loud error,
+            # while the blunt $REPRO_STORE env override (useful for
+            # whole-suite sweeps that include serial cells) falls back to
+            # the device tier here.
+            name = npcfg.store
+            if self.driver_mode == "serial":
+                if name not in ("auto", "device"):
+                    raise ValueError(
+                        f"mode 'serial' is the device-resident baseline; "
+                        f"store={name!r} needs a pipelined mode "
+                        "(nestpipe | async)")
+                name = "device"
+            driver_kw["store"] = build_store(
+                name, workload.spec, fns,
+                donate=driver_kw["donate"], mesh=workload.mesh,
+                cache_rows=npcfg.cache_rows, cache_admit=npcfg.cache_admit,
+                kernel_backend=npcfg.kernel_backend,
+            )
         return DBPDriver(fns, stream, workload.n_micro,
                          mode=self.driver_mode, **driver_kw)
 

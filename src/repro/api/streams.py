@@ -30,7 +30,8 @@ def resolve_stream(wl, seed: int = 0, *, global_batch: Optional[int] = None,
     gb = global_batch or n_micro * mb
 
     if wl.bundle.kind == "recsys" and cfg.backbone == "dlrm":
-        stream = SyntheticRecsysStream(cfg, wl.spec, gb, seed=seed)
+        stream = SyntheticRecsysStream(cfg, wl.spec, gb, seed=seed,
+                                       zipf_a=cfg.zipf_a)
 
         def gen():
             step = start_step

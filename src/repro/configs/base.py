@@ -192,6 +192,9 @@ class RecsysModelConfig:
     norm_eps: float = 1e-5
     param_dtype: str = "float32"
     compute_dtype: str = "float32"
+    # Zipf exponent of the synthetic key stream (data/synthetic): higher =
+    # more skew = smaller hot set (exercises the CachedStore HBM tier).
+    zipf_a: float = 1.2
 
     @property
     def total_sparse_rows(self) -> int:
@@ -237,6 +240,17 @@ class NestPipeConfig:
     # reference elsewhere; "pallas" | "interpret" | "reference" force one
     # (see kernels/dispatch.py for the contract).
     kernel_backend: str = "auto"
+    # Embedding storage tier: "auto" resolves $REPRO_STORE then "device"
+    # (mirrors kernel_backend); "device" | "host" | "cached" force one
+    # (see core/store for the EmbeddingStore protocol).
+    store: str = "auto"
+    # CachedStore knobs: HBM hot-cache capacity in rows (0 = padded_rows/8)
+    # and the access count a key needs before it is admitted to the cache.
+    cache_rows: int = 0
+    cache_admit: int = 1
+    # DBP lookahead depth k: the Prefetcher issues plan+retrieve for step
+    # t+k while step t computes (k=1 is the paper's dual-buffer setting).
+    prefetch_ahead: int = 1
 
 
 @dataclass(frozen=True)

@@ -74,6 +74,25 @@ DLRM_ROUTING = RecsysModelConfig(
     num_dense_features=4,
 )
 
+# Cache-dominated bench cell (benchmarks/bench_step_latency --store): the
+# same trivial dense net as dlrm-routing, but a STEEP zipf key stream
+# (a=2.5: a few hundred rows carry almost all accesses) over tables sized
+# so the default CachedStore hot-cache (padded_rows/8 rows) comfortably
+# holds the hot set — after the one-window admission warm-up the HBM cache
+# serves >80% of retrieval rows from device, shrinking the DRAM->HBM
+# staging that DBP exists to hide. CPU-runnable (full == reduced).
+DLRM_CACHED = RecsysModelConfig(
+    name="dlrm-cached", backbone="dlrm",
+    tables=(
+        SparseTableConfig("items", vocab_size=100_000, dim=64, bag_size=8),
+        SparseTableConfig("users", vocab_size=25_000, dim=64, bag_size=4),
+        SparseTableConfig("context", vocab_size=10_000, dim=64, bag_size=4),
+    ),
+    d_model=32, n_layers=0, n_heads=1, d_ff=64, seq_len=1,
+    num_dense_features=4,
+    zipf_a=2.5,
+)
+
 DLRM_REDUCED = RecsysModelConfig(
     name="dlrm-reduced", backbone="dlrm",
     tables=(

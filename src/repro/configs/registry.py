@@ -28,6 +28,8 @@ _RECSYS = {
     "dlrm-ctr": ("DLRM_CTR", "DLRM_REDUCED"),
     # routing-dominated perf-bench cell (CPU-runnable at full size)
     "dlrm-routing": ("DLRM_ROUTING", "DLRM_ROUTING"),
+    # cache-dominated perf-bench cell: steep-zipf keys for the CachedStore
+    "dlrm-cached": ("DLRM_CACHED", "DLRM_CACHED"),
 }
 
 ASSIGNED_LM_ARCHS: Tuple[str, ...] = tuple(_LM_MODULES)

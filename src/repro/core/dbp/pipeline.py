@@ -4,46 +4,50 @@ Orchestrates the inter-batch pipeline over a batch stream:
 
     stage 1  data prefetch   — background thread (data/pipeline.PrefetchQueue)
     stage 2  data H2D        — async device_put with target shardings
-    stage 3  key routing     — fused key All2All (inside the jitted step)
-    stage 4  retrieval+sync  — owner gather + dual-buffer intersection sync
+    stage 3  key routing     — fused key All2All (store.plan)
+    stage 4  retrieval+sync  — master rows -> dual buffer (store.retrieve)
+                               + intersection sync against in-flight commits
     stage 5  fwd/bwd (FWP)   — frozen-window micro-batch execution
 
-Stages 3-5 for step t+1 / t live inside ONE jitted steady-state function
-(train/step.py) whose dataflow lets XLA overlap them; this driver supplies
-the host-side halves (1-2), the buffer hand-over between steps, watchdog
-timing, and checkpoint hooks.
+Storage is a seam, not a branch: the driver talks to ONE
+:class:`~repro.core.store.EmbeddingStore` — ``plan`` / ``retrieve`` /
+``commit`` — and the device-HBM, host-DRAM and HBM-hot-cache tiers all ride
+the same loop (core/store). A :class:`~repro.core.store.Prefetcher` keeps
+``lookahead`` batches routed+retrieved ahead of the window compute, the
+intra-driver analogue of DBP's retrieval overlap; every in-flight buffer is
+re-synced at every commit so lookahead never trades exactness (Prop. 1
+generalized — see core/store/prefetch.py).
 
-It also runs the baselines: ``serial`` (no pipelining), ``async``
-(prefetch without dual-buffer sync — the staleness baseline).
+It also runs the baselines: ``serial`` (no pipelining, device tier only),
+``async`` (prefetch without dual-buffer sync — the staleness baseline).
 
 Hot-loop discipline (this is the part the paper's overlap depends on):
 
-- **Donated buffers.** The steady-state jits donate the ``TrainState`` and
-  the ``PipelineCarry`` (master table, both dual buffers, adagrad state) so
-  XLA updates the largest arrays in the system in place instead of
-  round-tripping a full copy every step. Each step runs as TWO dispatches:
-  the main step (which leaves the master table untouched — it only READS it
-  for the stale-master retrieval) and a commit jit whose donated table has a
-  single consumer, making the writeback scatter truly in place (see
-  train/step.py: a fused program must copy the table because retrieval and
-  writeback both consume it). The state/carry objects passed to ``run`` are
-  CONSUMED — callers must not touch them afterwards (pass ``donate=False``
-  to keep them alive, e.g. for A/B comparisons).
+- **Donated buffers.** The window jit donates the ``TrainState`` and the
+  ``PipelineCarry`` (dual buffers, adagrad state, optimizer moments); the
+  master table lives in the store for the duration of the run (the state
+  carries a zero-row placeholder) and the store's commit applies the
+  writeback with the master donated and singly-consumed, so the scatter is
+  truly in place (see train/step.py). The state/carry passed to ``run``
+  are CONSUMED — callers must not touch them afterwards (pass
+  ``donate=False`` to keep them alive, e.g. for A/B comparisons).
 - **Non-blocking metric drain.** The loop never calls ``float(aux[...])``
   per step — that would insert a host sync serializing stages 1-2 against
   stage 5. Instead per-step aux pytrees stay on device in a pending list
   and are drained (one ``jax.block_until_ready`` + host conversion) every
-  ``metrics_every`` steps, at checkpoints, and at the end of the run. Step
-  wall times and the straggler EMA are therefore computed from drained
-  timestamps: every step in a drained span is attributed the span's mean
-  wall time (minus host input-wait), so straggler detection operates at
-  drain granularity.
+  ``metrics_every`` steps, at checkpoints, and at the end of the run. The
+  store's transfer/cache counters (h2d/d2h bytes, hits/misses) are
+  snapshotted into the stats at the same drain points — they are plain
+  host counters, so surfacing them never blocks the device. Step wall
+  times and the straggler EMA are computed from drained timestamps: every
+  step in a drained span is attributed the span's mean wall time (minus
+  host input-wait), so straggler detection operates at drain granularity.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterator, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional
 
 import jax
 import numpy as np
@@ -55,6 +59,7 @@ from ...train.step import (
     SERIAL_DONATE_ARGNUMS,
     STEADY_DONATE_ARGNUMS,
 )
+from ..store import DeviceStore, EmbeddingStore, Prefetcher
 
 
 @dataclass
@@ -65,10 +70,29 @@ class PipelineStats:
     input_wait_times: List[float] = field(default_factory=list)
     straggler_steps: List[int] = field(default_factory=list)
     overflow_max: int = 0
+    store_tier: str = "device"
+    # cumulative store counters at the last drain / after the warm-up drain
+    store_metrics: Dict[str, float] = field(default_factory=dict)
+    store_metrics_warm: Dict[str, float] = field(default_factory=dict)
+
+    def _cache_rates(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        m = self.store_metrics
+        if "cache_hits" in m:
+            total = m["cache_hits"] + m["cache_misses"]
+            if total:
+                out["cache_hit_rate"] = m["cache_hits"] / total
+            w = self.store_metrics_warm
+            if w:
+                dh = m["cache_hits"] - w.get("cache_hits", 0.0)
+                dm = m["cache_misses"] - w.get("cache_misses", 0.0)
+                if dh + dm > 0:
+                    out["cache_hit_rate_steady"] = dh / (dh + dm)
+        return out
 
     def summary(self) -> Dict[str, float]:
         st = np.asarray(self.step_times[1:] or self.step_times)
-        return {
+        out = {
             "steps": len(self.step_times),
             "mean_step_s": float(st.mean()) if len(st) else 0.0,
             "p50_step_s": float(np.percentile(st, 50)) if len(st) else 0.0,
@@ -77,7 +101,13 @@ class PipelineStats:
             "stragglers": len(self.straggler_steps),
             "final_loss": self.losses[-1] if self.losses else float("nan"),
             "overflow_max": self.overflow_max,
+            "store": self.store_tier,
         }
+        for k in ("h2d_bytes", "d2h_bytes"):
+            if k in self.store_metrics:
+                out[k] = self.store_metrics[k]
+        out.update(self._cache_rates())
+        return out
 
 
 class _MetricsDrain:
@@ -85,26 +115,34 @@ class _MetricsDrain:
 
     ``push`` keeps a step's aux pytree on device; ``drain`` blocks once on
     the newest aux (everything older is already done by program order),
-    converts the whole pending span, and spreads the span's wall time —
-    minus the host-side input wait accrued inside it — evenly over its
-    steps for the stats and the straggler EMA.
+    converts the whole pending span, spreads the span's wall time — minus
+    the host-side input wait accrued inside it — evenly over its steps for
+    the stats and the straggler EMA, and snapshots the store's host-side
+    transfer/cache counters.
     """
 
-    def __init__(self, stats: PipelineStats, straggler_factor: float):
+    def __init__(self, stats: PipelineStats, straggler_factor: float,
+                 store: Optional[EmbeddingStore] = None):
         self.stats = stats
         self.straggler_factor = straggler_factor
+        self.store = store
         self.pending: List[tuple] = []
         self.ema: Optional[float] = None
         self._t_mark = time.perf_counter()
         self._wait_mark = 0.0  # sum(stats.input_wait_times) at the mark
 
-    def push(self, t: int, aux) -> None:
-        self.pending.append((t, aux))
+    def _snapshot_store(self) -> None:
+        if self.store is not None:
+            self.stats.store_metrics = dict(self.store.metrics())
+            if not self.stats.store_metrics_warm and self.stats.step_times:
+                # first post-step drain = end of warm-up (compile + cold cache)
+                self.stats.store_metrics_warm = dict(self.stats.store_metrics)
 
     def drain(self) -> None:
         if not self.pending:
             self._t_mark = time.perf_counter()
             self._wait_mark = sum(self.stats.input_wait_times)
+            self._snapshot_store()
             return
         jax.block_until_ready(self.pending[-1][1])
         now = time.perf_counter()
@@ -122,6 +160,10 @@ class _MetricsDrain:
         self.pending.clear()
         self._t_mark = now
         self._wait_mark = sum(self.stats.input_wait_times)
+        self._snapshot_store()
+
+    def push(self, t: int, aux) -> None:
+        self.pending.append((t, aux))
 
 
 class DBPDriver:
@@ -143,6 +185,8 @@ class DBPDriver:
         ckpt_every: int = 0,
         metrics_every: int = 8,  # steps between deferred metric drains
         donate: bool = True,  # donate state+carry to the steady-state jits
+        store: Optional[EmbeddingStore] = None,  # None -> DeviceStore
+        lookahead: int = 1,  # DBP retrieval lookahead depth k (Prefetcher)
     ):
         self.fns = step_fns
         self.n_micro = n_micro
@@ -154,29 +198,37 @@ class DBPDriver:
         self.ckpt_every = ckpt_every
         self.metrics_every = max(int(metrics_every), 1)
         self.donate = donate
+        self.store = store if store is not None \
+            else DeviceStore(step_fns, donate=donate)
+        self.lookahead = max(int(lookahead), 1)
+        if mode == "serial" and self.store.tier != "device":
+            raise ValueError(
+                "serial mode is the TorchRec-like device-resident baseline; "
+                f"store={self.store.tier!r} requires a pipelined mode "
+                "(nestpipe | async)")
         # Key-centric clustering only shapes FWP micro-batch locality; the
         # serial baseline has no window to cluster for, so it skips the
         # host-side permutation entirely.
         self.clustering = clustering if mode != "serial" else "none"
         transform = make_cluster_transform(n_micro, self.clustering)
         self.queue = PrefetchQueue(source, depth=prefetch_depth, transform=transform)
-        # Split-phase steps: the steady/serial jits leave the master table
-        # untouched (trivially aliasable passthrough) and the commit jits
-        # apply the update with the table donated and singly-consumed, so
-        # the scatter is truly in place (see train/step.py module doc).
+        # Split-phase steps (train/step.py): the window jit leaves the master
+        # untouched (the store owns it) and the store's commit applies the
+        # update with the master donated and singly-consumed, so the scatter
+        # is truly in place.
+        # window jit donates (state, buffer); the plan's int32 routing leaves
+        # are read-only and stay undonated (they have no aliasable output).
         steady_donate = STEADY_DONATE_ARGNUMS if donate else ()
-        commit_donate = COMMIT_DONATE_ARGNUMS if donate else ()
-        self._jit_nestpipe = jax.jit(step_fns.nestpipe_step_nowb,
-                                     donate_argnums=steady_donate)
-        self._jit_async = jax.jit(step_fns.async_step_nowb,
-                                  donate_argnums=steady_donate)
+        self._jit_window = jax.jit(step_fns.window_step,
+                                   donate_argnums=steady_donate)
+        # sync consumes the prefetch buffer (arg 1); the active buffer is
+        # read again by commit, so it is never donated here.
+        self._jit_sync = jax.jit(step_fns.sync_buffers,
+                                 donate_argnums=(1,) if donate else ())
         self._jit_serial = jax.jit(step_fns.serial_step_noupd,
                                    donate_argnums=SERIAL_DONATE_ARGNUMS if donate else ())
-        self._jit_commit_wb = jax.jit(step_fns.commit_writeback,
-                                      donate_argnums=commit_donate)
         self._jit_commit_pkts = jax.jit(step_fns.commit_packets,
-                                        donate_argnums=commit_donate)
-        self._jit_init = jax.jit(step_fns.init_carry)
+                                        donate_argnums=COMMIT_DONATE_ARGNUMS if donate else ())
 
     # -- stages 1-2 -----------------------------------------------------
 
@@ -195,7 +247,8 @@ class DBPDriver:
 
     def run(self, state: TrainState, num_steps: int) -> (TrainState, PipelineStats):
         stats = PipelineStats()
-        drain = _MetricsDrain(stats, self.straggler_factor)
+        stats.store_tier = self.store.tier
+        drain = _MetricsDrain(stats, self.straggler_factor, store=self.store)
         try:
             if self.mode == "serial":
                 for t in range(num_steps):
@@ -209,20 +262,42 @@ class DBPDriver:
                 drain.drain()
                 return state, stats
 
-            step_fn = self._jit_nestpipe if self.mode == "nestpipe" else self._jit_async
-            batch = self._next_device_batch(stats)
-            carry = self._jit_init(state.table, batch["keys"])
+            if num_steps <= 0:
+                return state, stats
+
+            # ---- pipelined modes: one loop, any storage tier ------------
+            state = state._replace(table=self.store.ingest(state.table))
+            pf = Prefetcher(lambda: self._next_device_batch(stats), self.store,
+                            depth=self.lookahead)
+            pf.fill(limit=num_steps)  # windows 0..min(k,N)-1
+            first = pf.pop()  # warm-up: route + retrieve batch 0
+            carry = PipelineCarry(first.buffer, first.plan.window)
+            cur_plan, batch = first.plan, first.batch
+            sync_on = self.mode == "nestpipe"
             for t in range(num_steps):
-                nxt = self._next_device_batch(stats)
-                state, carry, aux, buf_updated = step_fn(
-                    state, carry, batch, nxt["keys"])
-                state = state._replace(
-                    table=self._jit_commit_wb(state.table, buf_updated))
+                # stages 3+4 for t+1..t+k overlap this window; capped so a
+                # finite run never retrieves windows no step consumes
+                pf.fill(limit=num_steps - 1 - t)
+                state, aux, buf_updated = self._jit_window(
+                    state, carry.buffer, carry.plan, batch)
+                if t + 1 < num_steps:
+                    nxt = pf.pop()
+                    if sync_on:
+                        # stage 4b: repair the t+1 buffer (and every deeper
+                        # in-flight buffer) against this window's updates.
+                        nxt_buf = self._jit_sync(buf_updated, nxt.buffer)
+                        pf.resync(buf_updated, self._jit_sync)
+                    else:
+                        nxt_buf = nxt.buffer  # staleness baseline: no sync
+                self.store.commit(buf_updated, cur_plan)  # stage 5''
+                if t + 1 < num_steps:
+                    carry = PipelineCarry(nxt_buf, nxt.plan.window)
+                    cur_plan, batch = nxt.plan, nxt.batch
                 drain.push(t, aux)
                 self._maybe_drain(drain, t, num_steps)
-                batch = nxt
                 self._maybe_ckpt(state, t, drain)
             drain.drain()
+            state = state._replace(table=self.store.release())
             return state, stats
         finally:
             self.queue.close()
@@ -233,8 +308,13 @@ class DBPDriver:
         if t == 0 or (t + 1) % self.metrics_every == 0 or t == num_steps - 1:
             drain.drain()
 
+    def _ckpt_state(self, state: TrainState) -> TrainState:
+        if self.store.owns_master:
+            return state._replace(table=self.store.export_table())
+        return state
+
     def _maybe_ckpt(self, state, t, drain: _MetricsDrain):
         if self.on_checkpoint is not None and self.ckpt_every and (t + 1) % self.ckpt_every == 0:
             drain.drain()  # flush the device queue + stats before saving
-            self.on_checkpoint(state, t + 1)
+            self.on_checkpoint(self._ckpt_state(state), t + 1)
             drain.drain()  # re-mark: keep save time out of the next span's steps

@@ -19,6 +19,12 @@ Grad-consistency note: gradient packets from different data rows have
 different (S, C) key layouts, so they are only ever summed after being
 segment-keyed into a space whose key list is identical across replicas
 (the dual buffer, or the shard's row space).
+
+Storage note: this engine is the DEVICE half of the storage stack — its
+``retrieve``/``writeback`` ops are the HBM-master tier used by
+``core.store.DeviceStore``. Host-DRAM and cached tiers implement the same
+``EmbeddingStore`` contract in ``core/store`` (there is deliberately no
+table-type branching here: everything above the engine talks to a store).
 """
 from __future__ import annotations
 

@@ -1,0 +1,32 @@
+"""Tiered embedding storage behind one ``EmbeddingStore`` protocol.
+
+See ``base.py`` for the contract and the tier overview; ``device.py`` /
+``host.py`` / ``cached.py`` for the three tiers; ``prefetch.py`` for the
+DBP-style lookahead prefetcher the driver composes on top.
+"""
+from .base import (
+    STORES,
+    EmbeddingStore,
+    FetchPlan,
+    build_store,
+    placeholder_table,
+    resolve_store,
+)
+from .cached import CachedStore
+from .device import DeviceStore
+from .host import HostStore
+from .prefetch import Prefetcher, PrefetchEntry
+
+__all__ = [
+    "STORES",
+    "EmbeddingStore",
+    "FetchPlan",
+    "build_store",
+    "placeholder_table",
+    "resolve_store",
+    "CachedStore",
+    "DeviceStore",
+    "HostStore",
+    "Prefetcher",
+    "PrefetchEntry",
+]

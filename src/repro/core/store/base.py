@@ -1,0 +1,153 @@
+"""Tiered embedding storage: ONE protocol for where the master rows live.
+
+The paper's bottleneck at O(1k) accelerators is embedding *data movement*:
+DBP exists to hide the DRAM->HBM retrieval stage, and FWP's freezing
+observation says a small hot set dominates accesses. This package turns
+"where do master rows live" into a seam — every tier implements the same
+:class:`EmbeddingStore` contract and the DBP driver composes around it:
+
+    ``plan(keys)``        DBP stage 3: route a window, and (for host tiers)
+                          pull the owner-side union key list to the host.
+    ``retrieve(plan)``    DBP stage 4a: master rows -> a fresh
+                          :class:`~repro.core.embedding.engine.DualBuffer`.
+    ``commit(buffer, plan)``  DBP stage 5'': persist the updated buffer
+                          back into the master tier (in place where the
+                          tier is device-resident — see train/step.py's
+                          donation contract).
+
+Tiers
+-----
+``DeviceStore``  master in HBM — the N=1 trivial plan (no host keys, no
+                 staging); retrieval/writeback are the engine's sharded ops.
+``HostStore``    master in host DRAM (absorbs the old
+                 ``core.embedding.hierarchical.HostTierTable``); retrieval
+                 gathers on the host and ships only the compact buffer H2D.
+``CachedStore``  ``HostStore`` plus a frequency-admitted HBM hot-cache:
+                 hit rows are served from device (kernels/dispatch), only
+                 misses are staged H2D, and evictions write back to DRAM.
+
+Because the paper's consistency argument lives entirely in the buffer
+domain (sync happens between HBM buffers), swapping the master tier is
+invisible to DBP/FWP semantics — ``tests/test_hierarchical.py`` replays a
+training run through all three tiers bit-for-bit.
+
+Selection mirrors ``kernel_backend``: ``NestPipeConfig.store`` ("auto"
+falls through to ``$REPRO_STORE``, then "device"), overridable per driver
+with an explicit store instance.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..embedding.engine import DualBuffer, WindowPlan
+from ..embedding.table import EmbeddingTableState
+
+STORES = ("device", "host", "cached")
+
+
+class FetchPlan(NamedTuple):
+    """One lookahead batch's routing artifacts, as a store needs them.
+
+    ``window`` stays on device (it is also the window plan the FWP step
+    consumes); ``host_keys`` is the host copy of the owner-side union key
+    list — ``None`` on the device tier, which never needs keys on the host.
+    """
+
+    window: WindowPlan
+    host_keys: Optional[np.ndarray]
+
+
+@runtime_checkable
+class EmbeddingStore(Protocol):
+    """Contract every storage tier implements (see module docstring).
+
+    Lifecycle: the driver ``ingest``s the master out of the
+    :class:`~repro.train.state.TrainState` at the start of a run (the state
+    keeps a zero-row placeholder so the steady-state jit signature is
+    tier-independent), calls plan/retrieve/commit per step, may
+    ``export_table`` mid-run for checkpoints (non-destructive; cache and
+    frequency state are NOT part of the export), and ``release``s the
+    master back into the state at the end.
+    """
+
+    tier: str
+    owns_master: bool
+
+    def ingest(self, table: EmbeddingTableState) -> EmbeddingTableState: ...
+
+    def plan(self, keys) -> FetchPlan: ...
+
+    def retrieve(self, plan: FetchPlan) -> DualBuffer: ...
+
+    def commit(self, buffer: DualBuffer, plan: FetchPlan) -> None: ...
+
+    def export_table(self) -> EmbeddingTableState: ...
+
+    def release(self) -> EmbeddingTableState: ...
+
+    def metrics(self) -> Dict[str, float]: ...
+
+
+def placeholder_table(table: EmbeddingTableState) -> EmbeddingTableState:
+    """Zero-row stand-in kept in TrainState while a store owns the master.
+
+    Shape/dtype-stable across steps so the steady-state jit signature (and
+    its donation aliasing) is identical for every tier.
+    """
+    d = table.rows.shape[-1]
+    return EmbeddingTableState(
+        rows=jnp.zeros((0, d), table.rows.dtype),
+        accum=jnp.zeros((0,), jnp.float32),
+    )
+
+
+def resolve_store(store: Optional[str] = None) -> str:
+    """Resolve a store tier name: explicit arg > $REPRO_STORE > "device".
+
+    ``"auto"``/None fall through — exactly the ``kernel_backend``
+    resolution order (kernels/dispatch.py).
+    """
+    for cand in (store, os.environ.get("REPRO_STORE")):
+        if cand and cand != "auto":
+            if cand not in STORES:
+                raise ValueError(
+                    f"unknown embedding store {cand!r}; expected one of "
+                    f"{STORES} or 'auto'")
+            return cand
+    return "device"
+
+
+def build_store(
+    name: Optional[str],
+    spec: Any,  # MegaTableSpec
+    fns: Any,  # train.step.StepFns
+    *,
+    donate: bool = True,
+    mesh: Any = None,
+    cache_rows: int = 0,
+    cache_admit: int = 1,
+    kernel_backend: Optional[str] = None,
+) -> EmbeddingStore:
+    """Construct the store for a resolved tier name (see :func:`resolve_store`)."""
+    from .cached import CachedStore
+    from .device import DeviceStore
+    from .host import HostStore
+
+    tier = resolve_store(name)
+    if tier == "device":
+        return DeviceStore(fns, donate=donate)
+    if mesh is not None:
+        raise ValueError(
+            f"store={tier!r} runs the single-process host-DRAM master; the "
+            "multi-host sharded store is a roadmap item — use store='device' "
+            "on a mesh")
+    if tier == "host":
+        return HostStore(spec, fns)
+    return CachedStore(
+        spec, fns, capacity=cache_rows, admit_threshold=cache_admit,
+        donate=donate, kernel_backend=kernel_backend,
+    )

@@ -1,0 +1,332 @@
+"""CachedStore: a frequency-admitted HBM hot-cache over the DRAM master.
+
+FWP's embedding-freezing observation (and CacheEmbedding / BagPipe, see
+PAPERS.md) says a small hot set dominates accesses under production zipf
+skew. This tier keeps that hot set resident in HBM so DBP's retrieval
+stage only moves the cold tail:
+
+  retrieve   hit rows are served ON DEVICE via ``kernels/dispatch.py``
+             gathers (zero H2D); only miss rows are gathered from the
+             numpy master and staged H2D, padded to a small bucket size so
+             the device-side assemble jit sees O(log K) distinct shapes.
+             Admission happens HERE: a miss key whose retrieval-window
+             count reaches ``admit_threshold`` gets a cache slot and its
+             just-staged row is scattered into the cache — the rows are
+             already in HBM, so admission costs zero extra H2D, and the
+             key hits from the very next window (no lag against the
+             lookahead prefetcher, which retrieves t+1 before t commits).
+  commit     a write-BACK cache. Rows whose key is cached are scattered
+             into the device cache by a donated single-consumer jit — the
+             same in-place discipline as the device master writeback
+             (train/step.py). Only host-resident rows are pulled D2H
+             (compact, bucket-padded) and scattered into the DRAM master,
+             so D2H traffic also shrinks with the hit rate. Evicted rows
+             are written back to DRAM at eviction.
+  eviction   a full cache evicts its least-frequent victim outside the
+             current window, and only for a strictly hotter candidate, so
+             the zipf tail cannot thrash the hot set. A victim with an
+             in-flight window commit pending is safe: its slot reads -1 at
+             that commit, which routes the fresh row to the DRAM master.
+
+Value-transparency: the cache only decides WHERE a row's bytes live, never
+what they are — training through this tier is bit-for-bit identical to the
+host and device tiers (tests/test_hierarchical.py). ``export_table``
+refreshes the DRAM master from the cache first, so checkpoints contain the
+master only; cache membership and frequency state are deliberately NOT
+checkpointed (a restore starts cold and re-warms).
+
+The per-key slot/frequency maps are dense numpy arrays over
+``padded_rows`` — right for the CPU-scale harness; a production-cardinality
+(1e8-row) deployment would swap them for a hashed map without touching the
+protocol.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...kernels import dispatch
+from ...utils import round_up
+from ..embedding.engine import DualBuffer
+from ..embedding.table import EmbeddingTableState, MegaTableSpec
+from .base import FetchPlan
+from .host import _SENTINEL, HostStore
+
+
+class CachedStore(HostStore):
+    """HBM hot-cache tier over the host-DRAM master (see module docstring)."""
+
+    tier = "cached"
+
+    def __init__(
+        self,
+        spec: MegaTableSpec,
+        fns=None,
+        *,
+        capacity: int = 0,
+        admit_threshold: int = 1,
+        miss_bucket: int = 64,
+        donate: bool = True,
+        kernel_backend: Optional[str] = None,
+        **kwargs,
+    ):
+        super().__init__(spec, fns, **kwargs)
+        if capacity <= 0:
+            capacity = max(1024, spec.padded_rows // 8)
+        self.capacity = int(min(round_up(capacity, 8), spec.padded_rows))
+        self.admit_threshold = max(int(admit_threshold), 1)
+        self.miss_bucket = max(int(miss_bucket), 8)
+        self._backend = dispatch.resolve_backend(kernel_backend)
+
+        cap = self.capacity
+        # host-authoritative cache directory + admission frequencies
+        self._slot_of_key = np.full(spec.padded_rows, -1, np.int32)
+        self._key_of_slot = np.full(cap, -1, np.int64)
+        self._freq = np.zeros(spec.padded_rows, np.int64)
+        # device-resident hot rows (+ rowwise adagrad state)
+        self.cache_rows = jnp.zeros((cap, spec.dim), jnp.dtype(self.rows.dtype))
+        self.cache_accum = jnp.zeros((cap,), jnp.float32)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+        backend = self._backend
+
+        def _assemble(cache_rows, cache_accum, miss_rows, miss_accum, src, keys):
+            # hit rows from the device cache, miss rows from the H2D stage;
+            # out-of-range src (sentinel slots) yields zero rows.
+            rows_src = jnp.concatenate([cache_rows, miss_rows], axis=0)
+            acc_src = jnp.concatenate([cache_accum, miss_accum], axis=0)
+            rows = dispatch.gather_rows(rows_src, src, backend=backend)
+            accum = jnp.take(acc_src, src, mode="fill", fill_value=0.0)
+            return DualBuffer(keys, rows, accum)
+
+        def _pull(rows, accum, idx):
+            # compact device-side gather (eviction / host-resident pull);
+            # idx >= len(rows) pads with zero rows.
+            return (dispatch.gather_rows(rows, idx, backend=backend),
+                    jnp.take(accum, idx, mode="fill", fill_value=0.0))
+
+        def _scatter(cache_rows, cache_accum, buf_rows, buf_accum, slots):
+            # in-place hot-row commit: slots == capacity are dropped.
+            rows = cache_rows.at[slots].set(buf_rows.astype(cache_rows.dtype),
+                                            mode="drop")
+            accum = cache_accum.at[slots].set(buf_accum, mode="drop")
+            return rows, accum
+
+        self._assemble = jax.jit(_assemble)
+        self._pull = jax.jit(_pull)
+        # the donated single-consumer scatter — cache rows update in place
+        self._scatter = jax.jit(_scatter,
+                                donate_argnums=(0, 1) if donate else ())
+
+    # -- DBP stage 4a: cache-aware retrieval + admission -----------------
+
+    def retrieve(self, plan: FetchPlan) -> DualBuffer:
+        keys = plan.host_keys
+        cap = self.capacity
+        valid = keys != _SENTINEL
+        safe = np.where(valid, keys, 0)
+        self._freq[safe[valid]] += 1  # buffer keys are unique by construction
+        slots = np.where(valid, self._slot_of_key[safe], -1)
+        hit = slots >= 0
+        miss = valid & ~hit
+        miss_keys = safe[miss]
+        nm = int(miss_keys.shape[0])
+        pm = round_up(nm, self.miss_bucket) if nm else 0
+
+        stage_rows = np.zeros((pm, self.spec.dim), self.rows.dtype)
+        stage_accum = np.zeros((pm,), np.float32)
+        if nm:
+            stage_rows[:nm] = self.rows[miss_keys]
+            stage_accum[:nm] = self.accum[miss_keys]
+        self.h2d_bytes += stage_rows.nbytes + stage_accum.nbytes
+
+        src = np.full(keys.shape[0], cap + pm, np.int32)  # sentinel -> zero row
+        src[hit] = slots[hit]
+        src[miss] = cap + np.arange(nm, dtype=np.int32)
+
+        self.hits += int(hit.sum())
+        self.misses += nm
+        stage_rows_d = jax.device_put(stage_rows)
+        stage_accum_d = jax.device_put(stage_accum)
+        # assemble BEFORE admission scatters: it must read the pre-admission
+        # cache (dispatch order makes the donated scatter safe afterwards).
+        # own keys array, NOT plan.window.buffer_keys: the buffer may be
+        # donated downstream while the plan stays live (see HostStore).
+        buf = self._assemble(
+            self.cache_rows, self.cache_accum, stage_rows_d, stage_accum_d,
+            jax.device_put(src), jax.device_put(keys.astype(np.int32)),
+        )
+        if nm:
+            self._admit_misses(miss_keys, slots, valid,
+                               stage_rows_d, stage_accum_d, pm)
+        return buf
+
+    def _admit_misses(self, miss_keys, window_slots, valid,
+                      stage_rows_d, stage_accum_d, pm: int) -> None:
+        """Admit hot-enough miss keys using their just-staged rows (no extra
+        H2D): assign slots (evicting if needed) and scatter the staged rows
+        into the device cache in place."""
+        cap = self.capacity
+        want = self._freq[miss_keys] >= self.admit_threshold
+        cand_pos = np.flatnonzero(want)
+        if not cand_pos.size:
+            return
+        # hottest candidates first; deterministic tie-break on key
+        ck = miss_keys[cand_pos]
+        order = np.lexsort((ck, -self._freq[ck]))
+        cand_pos = cand_pos[order]
+        free = np.flatnonzero(self._key_of_slot < 0)
+        n_free = min(free.size, cand_pos.size)
+        admitted_pos = list(cand_pos[:n_free])
+        admitted_slot = list(free[:n_free])
+        if n_free:
+            self._admit(miss_keys[cand_pos[:n_free]], free[:n_free])
+        rest = cand_pos[n_free:]
+        if rest.size:
+            got = self._evict_for(miss_keys[rest], window_slots, valid)
+            n_evict = got.size
+            if n_evict:
+                self._admit(miss_keys[rest[:n_evict]], got)
+                admitted_pos.extend(rest[:n_evict])
+                admitted_slot.extend(got)
+        if not admitted_pos:
+            return
+        # staged-row index i corresponds to miss position i (stage order)
+        na = len(admitted_pos)
+        idx = np.full(round_up(na, self.miss_bucket), pm, np.int32)
+        idx[:na] = np.asarray(admitted_pos, np.int32)
+        slots = np.full(idx.shape[0], cap, np.int32)  # pad -> dropped
+        slots[:na] = np.asarray(admitted_slot, np.int32)
+        rows_d, accum_d = self._pull(stage_rows_d, stage_accum_d,
+                                     jax.device_put(idx))
+        self.cache_rows, self.cache_accum = self._scatter(
+            self.cache_rows, self.cache_accum, rows_d, accum_d,
+            jax.device_put(slots),
+        )
+
+    # -- DBP epilogue: split commit (cache scatter + compact D2H) --------
+
+    def commit(self, buffer: DualBuffer, plan: Optional[FetchPlan] = None) -> None:
+        keys = plan.host_keys if plan is not None \
+            else np.asarray(jax.device_get(buffer.keys))
+        cap = self.capacity
+        valid = keys != _SENTINEL
+        safe = np.where(valid, keys, 0)
+        slots = np.where(valid, self._slot_of_key[safe], -1)
+
+        # ---- hot rows: donated in-place scatter into the device cache --
+        upd_slots = np.where(slots >= 0, slots, cap).astype(np.int32)
+        self.cache_rows, self.cache_accum = self._scatter(
+            self.cache_rows, self.cache_accum, buffer.rows, buffer.accum,
+            jax.device_put(upd_slots),
+        )
+
+        # ---- cold rows: compact bucket-padded D2H + master scatter ------
+        host_pos = np.flatnonzero(valid & (slots < 0))
+        nh = int(host_pos.size)
+        if nh:
+            ph = round_up(nh, self.miss_bucket)
+            idx = np.full(ph, buffer.rows.shape[0], np.int32)
+            idx[:nh] = host_pos
+            rows_d, accum_d = self._pull(buffer.rows, buffer.accum,
+                                         jax.device_put(idx))
+            rows = np.asarray(jax.device_get(rows_d))
+            accum = np.asarray(jax.device_get(accum_d))
+            self.d2h_bytes += rows.nbytes + accum.nbytes
+            cold = keys[host_pos]
+            self.rows[cold] = rows[:nh]
+            self.accum[cold] = accum[:nh]
+
+    def _admit(self, admit_keys: np.ndarray, slot_ids: np.ndarray) -> None:
+        self._slot_of_key[admit_keys] = slot_ids.astype(np.int32)
+        self._key_of_slot[slot_ids] = admit_keys
+
+    def _evict_for(self, cand_keys: np.ndarray, window_slots: np.ndarray,
+                   valid: np.ndarray) -> np.ndarray:
+        """Evict least-frequent victims outside the current window for
+        strictly hotter candidates; write victim rows back to the master.
+        Returns the freed slot ids (aligned with ``cand_keys`` order)."""
+        in_window = np.zeros(self.capacity, bool)
+        ws = window_slots[valid & (window_slots >= 0)]
+        in_window[ws] = True
+        evictable = np.flatnonzero((self._key_of_slot >= 0) & ~in_window)
+        if not evictable.size:
+            return evictable
+        vkeys = self._key_of_slot[evictable]
+        order = np.lexsort((vkeys, self._freq[vkeys]))  # coldest first
+        evictable, vkeys = evictable[order], vkeys[order]
+        n = min(evictable.size, cand_keys.size)
+        take = self._freq[cand_keys[:n]] > self._freq[vkeys[:n]]
+        n = int(take.sum()) if take.all() else int(np.argmin(take))
+        if n <= 0:
+            return evictable[:0]
+        vslots, vkeys = evictable[:n], vkeys[:n]
+        # eviction writeback: pull current hot rows D2H, scatter to master
+        pv = round_up(n, self.miss_bucket)
+        idx = np.full(pv, self.capacity, np.int32)
+        idx[:n] = vslots
+        rows_d, accum_d = self._pull(self.cache_rows, self.cache_accum,
+                                     jax.device_put(idx))
+        rows = np.asarray(jax.device_get(rows_d))
+        accum = np.asarray(jax.device_get(accum_d))
+        self.d2h_bytes += rows.nbytes + accum.nbytes
+        self.rows[vkeys] = rows[:n]
+        self.accum[vkeys] = accum[:n]
+        self._slot_of_key[vkeys] = -1
+        self._key_of_slot[vslots] = -1
+        self.evictions += n
+        return vslots
+
+    # -- lifecycle -------------------------------------------------------
+
+    def ingest(self, table: EmbeddingTableState) -> EmbeddingTableState:
+        out = super().ingest(table)
+        self.cache_rows = jnp.zeros((self.capacity, self.spec.dim),
+                                    jnp.asarray(table.rows).dtype)
+        self.cache_accum = jnp.zeros((self.capacity,), jnp.float32)
+        self._slot_of_key.fill(-1)
+        self._key_of_slot.fill(-1)
+        self._freq.fill(0)
+        return out
+
+    def flush(self) -> None:
+        """Refresh the DRAM master from the hot cache (cache stays valid)."""
+        used = np.flatnonzero(self._key_of_slot >= 0)
+        n = int(used.size)
+        if not n:
+            return
+        pv = round_up(n, self.miss_bucket)
+        idx = np.full(pv, self.capacity, np.int32)
+        idx[:n] = used
+        rows_d, accum_d = self._pull(self.cache_rows, self.cache_accum,
+                                     jax.device_put(idx))
+        rows = np.asarray(jax.device_get(rows_d))
+        accum = np.asarray(jax.device_get(accum_d))
+        self.d2h_bytes += rows.nbytes + accum.nbytes
+        ukeys = self._key_of_slot[used]
+        self.rows[ukeys] = rows[:n]
+        self.accum[ukeys] = accum[:n]
+
+    def export_table(self) -> EmbeddingTableState:
+        """Master + hot rows merged; cache/frequency state stays out of the
+        manifest (a restore re-warms from cold)."""
+        self.flush()
+        return super().export_table()
+
+    # -- metrics ---------------------------------------------------------
+
+    def metrics(self) -> Dict[str, float]:
+        out = super().metrics()
+        out.update({
+            "cache_hits": float(self.hits),
+            "cache_misses": float(self.misses),
+            "cache_evictions": float(self.evictions),
+            "cache_rows_used": float(int((self._key_of_slot >= 0).sum())),
+            "cache_capacity": float(self.capacity),
+        })
+        return out

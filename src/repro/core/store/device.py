@@ -1,0 +1,64 @@
+"""DeviceStore: the in-HBM master tier — the N=1 trivial fetch plan.
+
+The master table is the engine's sharded ``EmbeddingTableState``; retrieval
+and writeback are the engine's jitted sharded ops. ``plan`` never touches
+the host (``host_keys is None``) and ``commit`` is the donated in-place
+scatter from PR 2's split-phase contract: the commit jit is the table's
+single consumer, so XLA updates the largest array in the system in place.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+from ..embedding.engine import DualBuffer
+from ..embedding.table import EmbeddingTableState
+from .base import FetchPlan, placeholder_table
+
+
+class DeviceStore:
+    """HBM-resident master (the current device tier, behind the protocol)."""
+
+    tier = "device"
+
+    def __init__(self, fns, *, donate: bool = True):
+        self._route = jax.jit(fns.route_window)
+        self._retrieve = jax.jit(fns.retrieve)
+        self._commit = jax.jit(fns.commit_writeback,
+                               donate_argnums=(0,) if donate else ())
+        self.table: Optional[EmbeddingTableState] = None
+        self.owns_master = False
+
+    # -- lifecycle -------------------------------------------------------
+
+    def ingest(self, table: EmbeddingTableState) -> EmbeddingTableState:
+        self.table = table
+        self.owns_master = True
+        return placeholder_table(table)
+
+    def export_table(self) -> EmbeddingTableState:
+        """Non-destructive view for checkpoints (the live device table)."""
+        assert self.table is not None, "export before ingest"
+        return self.table
+
+    def release(self) -> EmbeddingTableState:
+        table, self.table, self.owns_master = self.table, None, False
+        assert table is not None, "release before ingest"
+        return table
+
+    # -- DBP stages ------------------------------------------------------
+
+    def plan(self, keys) -> FetchPlan:
+        return FetchPlan(self._route(keys), None)
+
+    def retrieve(self, plan: FetchPlan) -> DualBuffer:
+        return self._retrieve(self.table, plan.window)
+
+    def commit(self, buffer: DualBuffer, plan: FetchPlan) -> None:
+        self.table = self._commit(self.table, buffer)
+
+    # -- metrics ---------------------------------------------------------
+
+    def metrics(self) -> Dict[str, float]:
+        return {}  # no host<->device master traffic on this tier

@@ -1,0 +1,166 @@
+"""HostStore: host-DRAM master tier (paper §II-A, DBP's retrieval stage).
+
+Absorbs the old ``core.embedding.hierarchical.HostTierTable``. Production
+recommendation models hold embedding tables that exceed HBM: the master
+lives in host DRAM (a numpy array per process) and only the rows needed by
+in-flight windows are staged into fresh device buffers — exactly DBP stage 4a
+("the retrieved embeddings are transferred from host memory (DRAM) to
+device memory (HBM)"). The epilogue (``commit``) pulls the updated compact
+buffer back D2H and scatters into the numpy master.
+
+Construction note (was a bug): ``from_device_table`` used to build the
+object via ``cls.__new__`` and hand-assign attributes, which left
+subclasses half-initialized. It now goes through ``__init__`` with
+``rows=``/``accum=`` overrides, so ``CachedStore`` (and any other
+subclass) always gets a fully-built object.
+
+On a real multi-host cluster each process owns the shard slice of its
+devices; the single-process container keeps the same per-shard layout (the
+sharded multi-host store is a roadmap item).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from ..embedding.engine import DualBuffer
+from ..embedding.routing import SENTINEL
+from ..embedding.table import EmbeddingTableState, MegaTableSpec
+from .base import FetchPlan, placeholder_table
+
+_SENTINEL = int(SENTINEL)
+
+
+class HostStore:
+    """Host-DRAM master tier for one mega-table (all shards, this process)."""
+
+    tier = "host"
+
+    def __init__(
+        self,
+        spec: MegaTableSpec,
+        fns=None,  # train.step.StepFns; None for direct (test) use
+        *,
+        rows: Optional[np.ndarray] = None,
+        accum: Optional[np.ndarray] = None,
+        rng: Optional[np.random.Generator] = None,
+        scale: float = 0.01,
+        dtype=np.float32,
+        device_sharding=None,
+    ):
+        self.spec = spec
+        self._route = jax.jit(fns.route_window) if fns is not None else None
+        if rows is None:
+            rng = rng or np.random.default_rng(0)
+            # rows in scrambled-id space — identical init law to the device tier
+            rows = (rng.standard_normal((spec.padded_rows, spec.dim)) * scale
+                    ).astype(dtype)
+        if accum is None:
+            accum = np.zeros((spec.padded_rows,), np.float32)
+        assert rows.shape == (spec.padded_rows, spec.dim), rows.shape
+        self.rows = rows
+        self.accum = accum
+        self.device_sharding = device_sharding
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
+        self.owns_master = False
+
+    @classmethod
+    def from_device_table(cls, spec: MegaTableSpec, table, **kwargs) -> "HostStore":
+        """Snapshot a device table into a fresh host master (proper
+        ``__init__`` path — safe for subclasses)."""
+        # device_get may hand back read-only views of device buffers
+        return cls(
+            spec,
+            rows=np.array(jax.device_get(table.rows), copy=True),
+            accum=np.array(jax.device_get(table.accum), copy=True),
+            **kwargs,
+        )
+
+    # -- lifecycle -------------------------------------------------------
+
+    def ingest(self, table: EmbeddingTableState) -> EmbeddingTableState:
+        self.rows = np.array(jax.device_get(table.rows), copy=True)
+        self.accum = np.array(jax.device_get(table.accum), copy=True)
+        self.owns_master = True
+        return placeholder_table(table)
+
+    def export_table(self) -> EmbeddingTableState:
+        """Materialize the master for checkpoints / run end (non-destructive)."""
+        import jax.numpy as jnp
+
+        return EmbeddingTableState(jnp.asarray(self.rows), jnp.asarray(self.accum))
+
+    def release(self) -> EmbeddingTableState:
+        table = self.export_table()
+        self.owns_master = False
+        return table
+
+    # -- DBP stage 3: route + host key copy ------------------------------
+
+    def plan(self, keys) -> FetchPlan:
+        assert self._route is not None, "HostStore built without step fns"
+        window = self._route(keys)
+        return FetchPlan(window, np.asarray(jax.device_get(window.buffer_keys)))
+
+    # -- DBP stage 4a: host-side gather + async H2D ----------------------
+
+    def stage(self, buffer_keys: np.ndarray) -> DualBuffer:
+        """Gather master rows for (sorted, sentinel-padded) ``buffer_keys``
+        and stage them to the device as a fresh prefetch buffer.
+
+        Each stage gets FRESH host arrays, deliberately: ``device_put`` is
+        async and downstream jits may take the resulting buffers donated,
+        after which Python cannot observe whether the H2D copy out of the
+        numpy source has completed — so reusing a "pinned" staging buffer
+        is an unobservable use-after-reuse race under lookahead prefetch
+        (a real pinned-pool needs transfer-completion events JAX does not
+        expose for host sources). The allocation is a few hundred KB per
+        step; ownership transfer is the only safe contract.
+        """
+        k = buffer_keys.shape[0]
+        stage_rows = np.zeros((k, self.spec.dim), self.rows.dtype)
+        stage_accum = np.zeros((k,), np.float32)
+        valid = buffer_keys != _SENTINEL
+        idx = np.where(valid, buffer_keys, 0)
+        np.take(self.rows, idx, axis=0, out=stage_rows)
+        np.take(self.accum, idx, axis=0, out=stage_accum)
+        stage_rows[~valid] = 0
+        stage_accum[~valid] = 0
+        self.h2d_bytes += stage_rows.nbytes + stage_accum.nbytes
+        put = (lambda x: jax.device_put(x, self.device_sharding)) \
+            if self.device_sharding is not None else jax.device_put
+        return DualBuffer(keys=put(buffer_keys.astype(np.int32)),
+                          rows=put(stage_rows), accum=put(stage_accum))
+
+    def retrieve(self, plan: FetchPlan) -> DualBuffer:
+        # The buffer gets its OWN keys array (one small int32 H2D) rather
+        # than sharing plan.window.buffer_keys: the driver's sync jit takes
+        # the prefetch buffer donated, and a shared keys leaf would leave
+        # the plan (still carried into the next window jit) holding a
+        # donated array — alive today only via pjit's passthrough
+        # forwarding, i.e. a landmine.
+        return self.stage(plan.host_keys)
+
+    # -- DBP epilogue: D2H + host scatter --------------------------------
+
+    def commit(self, buffer: DualBuffer, plan: Optional[FetchPlan] = None) -> None:
+        keys = plan.host_keys if plan is not None \
+            else np.asarray(jax.device_get(buffer.keys))
+        rows = np.asarray(jax.device_get(buffer.rows))
+        accum = np.asarray(jax.device_get(buffer.accum))
+        self.d2h_bytes += rows.nbytes + accum.nbytes
+        valid = keys != _SENTINEL
+        self.rows[keys[valid]] = rows[valid]
+        self.accum[keys[valid]] = accum[valid]
+
+    # -- metrics / introspection -----------------------------------------
+
+    def metrics(self) -> Dict[str, float]:
+        return {"h2d_bytes": float(self.h2d_bytes),
+                "d2h_bytes": float(self.d2h_bytes)}
+
+    def memory_bytes(self) -> int:
+        return self.rows.nbytes + self.accum.nbytes

@@ -48,7 +48,27 @@ def save_checkpoint(ckpt_dir: str, state: PyTree, step: int) -> str:
     """Write ``state`` at ``step`` atomically; returns the checkpoint path.
 
     An existing checkpoint for the same step is replaced.
+
+    Storage tiers: while a run is in flight the master embedding table
+    lives in an :class:`~repro.core.store.EmbeddingStore` and the state
+    carries a zero-row placeholder; the DBP driver materializes the master
+    through the protocol (``store.export_table()``) before invoking its
+    checkpoint callback, so the manifest layout is IDENTICAL across tiers
+    and a host/cached-tier checkpoint restores into a device-tier session
+    (and vice versa) bit-for-bit. Cache membership and frequency state are
+    deliberately NOT part of the manifest — a restore starts with a cold
+    cache, which is value-transparent. Saving a state whose table is still
+    the placeholder is always a bug, so it is rejected here rather than
+    written as a restorable-looking corpse.
     """
+    table = getattr(state, "table", None)
+    rows = getattr(table, "rows", None)
+    if rows is not None and getattr(rows, "shape", (1,))[0] == 0:
+        raise ValueError(
+            "state.table is a zero-row store placeholder — the master lives "
+            "in an EmbeddingStore; save state._replace(table="
+            "store.export_table()) (the DBP driver's checkpoint callback "
+            "already does this)")
     os.makedirs(ckpt_dir, exist_ok=True)
     final = _step_dir(ckpt_dir, step)
     leaves = _flatten(state)

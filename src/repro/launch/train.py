@@ -15,6 +15,7 @@ import json
 import signal
 
 from ..api import Session, available_strategies
+from ..core.store import STORES
 
 
 def train(argv=None):
@@ -33,6 +34,11 @@ def train(argv=None):
     p.add_argument("--resume", action="store_true")
     p.add_argument("--log-every", type=int, default=10)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--store", default="auto", choices=("auto", *STORES),
+                   help="embedding storage tier (core/store; auto = "
+                        "$REPRO_STORE then device)")
+    p.add_argument("--prefetch-ahead", type=int, default=1,
+                   help="DBP retrieval lookahead depth k")
     args = p.parse_args(argv)
 
     # CPU-scale run: no mesh (single device); the production-mesh config is
@@ -41,6 +47,7 @@ def train(argv=None):
         args.arch, mode=args.mode, reduced=args.reduced, shape=args.shape,
         global_batch=args.global_batch, seq_len=args.seq_len,
         n_micro=args.n_micro, lr=args.lr, seed=args.seed,
+        store=args.store, prefetch_ahead=args.prefetch_ahead,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         preemption_signals=(signal.SIGTERM,),
     )

@@ -62,6 +62,13 @@ class StepFns(NamedTuple):
     serial_step_noupd: Callable  # (state, batch) -> (state[old table], aux, pkts)
     commit_writeback: Callable  # (table, buf_updated) -> table  [donate table]
     commit_packets: Callable  # (table, pkts) -> table  [donate table]
+    # store-seam pieces (see core/store): the pipelined driver composes
+    # these around an EmbeddingStore instead of hard-wiring the device
+    # master into one fused step -------------------------------------------
+    window_step: Callable  # (state, buffer, plan, batch) -> (state, aux, buf_updated)
+    route_window: Callable  # (keys (N, *mb)) -> WindowPlan   [DBP stage 3]
+    retrieve: Callable  # (table, window) -> DualBuffer       [stage 4a, device tier]
+    sync_buffers: Callable  # (active, prefetch) -> DualBuffer [stage 4b]
 
 
 # Canonical donate_argnums for jitting the step families (see module doc).
@@ -121,6 +128,40 @@ def build_step_fns(
     def commit_writeback(table, buf_updated):
         """Stage 5'': in-place master writeback (jit with the table donated)."""
         return engine.writeback(table, buf_updated)
+
+    # ---------------- store-seam pieces (core/store) ------------------------
+    # The tiered-store driver runs stages 5+5' here and delegates stages
+    # 3 (route_window), 4a (store.retrieve) and 5'' (store.commit) to the
+    # EmbeddingStore, so host/cached master tiers slot in without touching
+    # the window math. The table leaf of ``state`` is a pass-through (the
+    # store owns the master while a run is in flight).
+
+    def window_step(state: TrainState, buffer, plan, batch):
+        """Stages 5+5' only: FWP window over batch t + frozen-window updates
+        (dense AdamW, buffer rowwise-adagrad). No routing / retrieval /
+        writeback — those are the store's half of the step. ``plan`` is
+        passed as its own (non-donated) argument: its int32 routing leaves
+        are not returned, so donating them would only raise unusable-buffer
+        warnings."""
+        out = window_fn(state.dense, buffer, plan, batch)
+        lr = lr_sched(state.step)
+        new_dense, new_opt, gnorm = optimizer.update(
+            state.dense, state.opt, out.dense_grads, lr
+        )
+        buf_updated = engine.apply_window_to_buffer(buffer, out.packets)
+        aux = {
+            "loss": out.loss,
+            "grad_norm": gnorm,
+            "lr": lr,
+            "routing_overflow": engine.overflow_metric(plan),
+            **out.metrics,
+        }
+        new_state = TrainState(new_dense, new_opt, state.table, state.step + 1)
+        return new_state, aux, buf_updated
+
+    def route_window(keys):
+        """DBP stage 3 for one lookahead batch (store.plan's device half)."""
+        return engine.route_window(keys, n_micro)
 
     def nestpipe_step_nowb(state, carry, batch, keys_next):
         return _step_nowb(state, carry, batch, keys_next, sync=True)
@@ -184,4 +225,6 @@ def build_step_fns(
 
     return StepFns(init_carry, nestpipe_step, async_step, serial_step,
                    nestpipe_step_nowb, async_step_nowb, serial_step_noupd,
-                   commit_writeback, commit_packets)
+                   commit_writeback, commit_packets,
+                   window_step, route_window, engine.retrieve,
+                   engine.sync_buffers)

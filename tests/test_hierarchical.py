@@ -1,87 +1,175 @@
-"""Host-tier (DRAM master) training replays the device-tier trajectory
-bit-for-bit: the hierarchical storage is invisible to DBP/FWP semantics."""
+"""Tiered storage is invisible to DBP/FWP semantics: training through the
+host-DRAM master (HostStore) and the HBM hot-cache (CachedStore) replays
+the device-tier (DeviceStore) trajectory bit-for-bit, all three through the
+ONE ``EmbeddingStore`` protocol — no table-type branching anywhere."""
 import os
 import sys
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+import pytest
 from jax.sharding import PartitionSpec as P
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.configs.base import NestPipeConfig
-from repro.core.embedding import (
-    EmbeddingEngine, init_table_state, make_mega_table_spec,
-)
-from repro.core.embedding.hierarchical import HostTierTable
+from test_consistency import batch_iter, init_state, make_setup
 
-N, MB, F, V, D = 2, 8, 4, 256, 16
+from repro.configs.base import NestPipeConfig, OptimizerConfig
+from repro.core.dbp import DBPDriver
+from repro.core.embedding import EmbeddingEngine
+from repro.core.store import CachedStore, DeviceStore, FetchPlan, HostStore
+from repro.train import build_step_fns, constant_lr, make_optimizer
 
-
-def setup():
-    spec = make_mega_table_spec(None, vocab_size=V, dim=D, num_shards=1)
-    cfg = NestPipeConfig(fwp_microbatches=N, bucket_slack=4.0)
-    eng = EmbeddingEngine(spec, None, ("model",), P(None, None), cfg,
-                          compute_dtype=jnp.float32)
-    table = init_table_state(jax.random.PRNGKey(0), spec, None, ("model",))
-    return spec, eng, table
+N_MICRO = 4
+BATCH = 32
+STEPS = 5
 
 
-def run_steps(eng, spec, table, host_tier: bool, steps=4):
-    rng = np.random.default_rng(7)
-    host = HostTierTable.from_device_table(spec, table) if host_tier else None
-    dev_table = table
-    for t in range(steps):
-        raw = rng.integers(0, V, size=(N, MB, F)).astype(np.int32)
-        keys = jnp.asarray(np.asarray(spec.scramble(jnp.asarray(raw))))
-        window = eng.route_window(keys, N)
-        if host_tier:
-            bkeys = np.asarray(jax.device_get(window.buffer_keys))
-            buf = host.retrieve(bkeys)
-        else:
-            buf = eng.retrieve(dev_table, window)
-        # synthetic grads: demb = const per step
-        packets = []
-        for i in range(N):
-            plan = jax.tree.map(lambda x: x[i], window.plans)
-            emb = eng.lookup_from_buffer(buf, plan, (MB, F), N)
-            demb = jnp.full((MB, F, D), 0.01 * (t + 1), jnp.float32)
-            packets.append(eng.grads_to_owner(plan, demb, (MB, F), N))
-        pkts = jax.tree.map(lambda *xs: jnp.stack(xs), *packets)
-        buf2 = eng.apply_window_to_buffer(buf, pkts)
-        if host_tier:
-            host.writeback(buf2)
-        else:
-            dev_table = eng.writeback(dev_table, buf2)
-    if host_tier:
-        return host.rows, host.accum, host
-    return (np.asarray(dev_table.rows), np.asarray(dev_table.accum), None)
+def make_driver_with_store(store_name, *, steps_fns_out=None, lookahead=1,
+                           mode="nestpipe", donate=True, **store_kw):
+    cfg, spec, stream, dense_params, loss_fn = make_setup()
+    optimizer = make_optimizer(OptimizerConfig(lr=0.05, grad_clip=0.0))
+    np_cfg = NestPipeConfig(fwp_microbatches=N_MICRO, bucket_slack=2.0)
+    eng = EmbeddingEngine(spec, None, ("model",), P(None, None), np_cfg,
+                          compute_dtype=np.float32)
+    fns = build_step_fns(eng, loss_fn, optimizer, constant_lr(0.05), N_MICRO,
+                         (BATCH // N_MICRO, stream.f_total))
+    store = {
+        "device": lambda: DeviceStore(fns, donate=donate),
+        "host": lambda: HostStore(spec, fns),
+        "cached": lambda: CachedStore(spec, fns, donate=donate, **store_kw),
+    }[store_name]()
+    state = init_state(spec, dense_params, optimizer)
+    driver = DBPDriver(fns, batch_iter(stream), N_MICRO, mode=mode,
+                       store=store, lookahead=lookahead, donate=donate,
+                       device_fields=["keys", "dense", "labels"])
+    return driver, state, store, spec
 
 
-def test_host_tier_matches_device_tier():
-    spec, eng, table = setup()
-    rows_d, accum_d, _ = run_steps(eng, spec, table, host_tier=False)
-    rows_h, accum_h, host = run_steps(eng, spec, table, host_tier=True)
-    np.testing.assert_allclose(rows_h, rows_d, atol=1e-6)
-    np.testing.assert_allclose(accum_h, accum_d, atol=1e-6)
-    # traffic accounting: exactly one staged buffer per step each way
-    # (buffer caps are clamped to the tiny table here, so compare per step)
-    assert host.h2d_bytes == host.d2h_bytes
-    per_step = host.h2d_bytes / 4
-    assert per_step <= host.memory_bytes() + 8 * 4  # <= one table-equivalent
+def run_store(store_name, *, steps=STEPS, **kw):
+    driver, state, store, spec = make_driver_with_store(store_name, **kw)
+    state, stats = driver.run(state, steps)
+    return state, stats, store
 
 
-def test_host_tier_staging_reuse():
-    """The pinned staging buffer is reused, not reallocated per step."""
-    spec, eng, table = setup()
-    host = HostTierTable.from_device_table(spec, table)
+# ---------------------------------------------------------------------------
+# the tentpole invariant: three tiers, one trajectory, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def test_three_tiers_replay_bit_for_bit():
+    state_d, stats_d, _ = run_store("device")
+    state_h, stats_h, _ = run_store("host")
+    state_c, stats_c, _ = run_store("cached")
+    # losses exactly equal — not allclose: the tiers only move bytes
+    np.testing.assert_array_equal(stats_h.losses, stats_d.losses)
+    np.testing.assert_array_equal(stats_c.losses, stats_d.losses)
+    # and the full master table comes back identical from every tier
+    rows_d = np.asarray(state_d.table.rows)
+    np.testing.assert_array_equal(np.asarray(state_h.table.rows), rows_d)
+    np.testing.assert_array_equal(np.asarray(state_c.table.rows), rows_d)
+    np.testing.assert_array_equal(np.asarray(state_h.table.accum),
+                                  np.asarray(state_d.table.accum))
+    np.testing.assert_array_equal(np.asarray(state_c.table.accum),
+                                  np.asarray(state_d.table.accum))
+
+
+def test_cached_tier_eviction_stays_bit_exact():
+    """A capacity-starved cache must evict (writeback to DRAM) and still
+    replay the device trajectory exactly."""
+    state_d, stats_d, _ = run_store("device")
+    state_c, stats_c, store = run_store("cached", capacity=32, miss_bucket=8)
+    assert store.evictions > 0, "capacity=32 should force evictions"
+    np.testing.assert_array_equal(stats_c.losses, stats_d.losses)
+    np.testing.assert_array_equal(np.asarray(state_c.table.rows),
+                                  np.asarray(state_d.table.rows))
+
+
+def test_async_mode_rides_every_tier():
+    """The staleness baseline flows through the same store seam."""
+    _, stats_d, _ = run_store("device", mode="async")
+    _, stats_h, _ = run_store("host", mode="async")
+    _, stats_c, _ = run_store("cached", mode="async")
+    np.testing.assert_array_equal(stats_h.losses, stats_d.losses)
+    np.testing.assert_array_equal(stats_c.losses, stats_d.losses)
+
+
+def test_lookahead_prefetch_is_exact():
+    """Prefetch depth k>1 (retrieval issued k steps early, resynced at every
+    commit) must not change the trajectory — Prop. 1 generalized."""
+    _, stats_1, _ = run_store("device")
+    for tier in ("device", "host", "cached"):
+        _, stats_k, _ = run_store(tier, lookahead=3)
+        np.testing.assert_array_equal(stats_k.losses, stats_1.losses)
+
+
+def test_serial_mode_rejects_host_tiers():
+    with pytest.raises(ValueError, match="serial"):
+        make_driver_with_store("host", mode="serial")
+
+
+# ---------------------------------------------------------------------------
+# host-tier plumbing (absorbed from the old HostTierTable tests)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_host_store():
+    cfg, spec, stream, dense_params, loss_fn = make_setup()
+    optimizer = make_optimizer(OptimizerConfig(lr=0.05, grad_clip=0.0))
+    np_cfg = NestPipeConfig(fwp_microbatches=N_MICRO, bucket_slack=2.0)
+    eng = EmbeddingEngine(spec, None, ("model",), P(None, None), np_cfg,
+                          compute_dtype=np.float32)
+    fns = build_step_fns(eng, loss_fn, optimizer, constant_lr(0.05), N_MICRO,
+                         (BATCH // N_MICRO, stream.f_total))
+    table = init_state(spec, dense_params, optimizer).table
+    return spec, fns, table
+
+
+def test_staged_buffers_are_independent():
+    """Regression for the staging use-after-reuse race: back-to-back stages
+    (the lookahead-prefetch pattern) must hand out INDEPENDENT buffers — a
+    later stage or master mutation can never leak into an earlier buffer,
+    even though device_put is async."""
+    spec, fns, table = _tiny_host_store()
+    host = HostStore.from_device_table(spec, table)
     keys = np.sort(np.unique(np.random.default_rng(0).integers(
         0, spec.padded_rows, 32))).astype(np.int32)
     keys = np.pad(keys, (0, 40 - len(keys)),
                   constant_values=np.iinfo(np.int32).max)
-    b1 = host.retrieve(keys)
-    stage1 = host._stage_rows
-    b2 = host.retrieve(keys)
-    assert host._stage_rows is stage1
-    np.testing.assert_array_equal(np.asarray(b1.rows), np.asarray(b2.rows))
+    b1 = host.stage(keys)
+    before = np.array(host.rows[keys[0]], copy=True)
+    host.rows[:] = -123.0  # commit-like master mutation
+    b2 = host.stage(keys)
+    np.testing.assert_array_equal(np.asarray(b1.rows)[0], before)
+    assert float(np.asarray(b2.rows)[0, 0]) == -123.0
+
+
+def test_host_traffic_accounting():
+    """Exactly one staged buffer per retrieve (H2D) and one pulled buffer
+    per commit (D2H): a finite run retrieves exactly as many windows as it
+    commits (the lookahead fill is capped — no wasted trailing staging)."""
+    _, stats, store = run_store("host")
+    assert store.h2d_bytes % STEPS == 0
+    per_retrieve = store.h2d_bytes // STEPS
+    assert store.d2h_bytes == STEPS * per_retrieve
+    assert stats.store_metrics["h2d_bytes"] == float(store.h2d_bytes)
+
+
+def test_from_device_table_builds_complete_subclass():
+    """Regression: from_device_table used to construct via cls.__new__,
+    leaving subclasses half-initialized. CachedStore must come back fully
+    built (directory, counters, device cache) and immediately usable."""
+    spec, fns, table = _tiny_host_store()
+    cached = CachedStore.from_device_table(spec, table, capacity=64)
+    assert cached.capacity == 64
+    assert cached.cache_rows.shape == (64, spec.dim)
+    assert cached._slot_of_key.shape == (spec.padded_rows,)
+    assert cached.hits == 0 and cached.misses == 0
+    np.testing.assert_array_equal(cached.rows, np.asarray(table.rows))
+    # usable end to end: stage a window through retrieve (only the host
+    # key list is consulted — the buffer builds its own device keys)
+    keys = np.full((16,), np.iinfo(np.int32).max, np.int32)
+    keys[:4] = [1, 5, 9, 13]
+    buf = cached.retrieve(FetchPlan(None, keys))
+    np.testing.assert_allclose(np.asarray(buf.rows)[:4],
+                               np.asarray(table.rows)[[1, 5, 9, 13]])
+    assert cached.misses == 4

@@ -1,0 +1,183 @@
+"""EmbeddingStore protocol plumbing: tier resolution (config + env
+override), driver metric surfacing, and checkpoint save/restore roundtrips
+through ``Session`` for every storage tier (bit-exact resume vs the
+device-tier run)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.api import Session
+from repro.core.store import (
+    STORES,
+    HostStore,
+    build_store,
+    placeholder_table,
+    resolve_store,
+)
+
+ARCH = "dlrm-ctr"
+
+
+def make_session(store="auto", *, seed=0, ckpt_dir="", ckpt_every=0, mode="nestpipe"):
+    # data_seed pinned: roundtrip tests restore into sessions with a
+    # DIFFERENT init seed, but the stream must stay the same stream.
+    return Session.from_arch(
+        ARCH, mode=mode, reduced=True, global_batch=32, n_micro=4,
+        store=store, lr=1e-2, seed=seed, data_seed=0, ckpt_dir=ckpt_dir,
+        ckpt_every=ckpt_every,
+    )
+
+
+# ---------------------------------------------------------------------------
+# resolution (mirrors kernel_backend: config > $REPRO_STORE > device)
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_store_precedence(monkeypatch):
+    monkeypatch.delenv("REPRO_STORE", raising=False)
+    assert resolve_store(None) == "device"
+    assert resolve_store("auto") == "device"
+    assert resolve_store("cached") == "cached"
+    monkeypatch.setenv("REPRO_STORE", "host")
+    assert resolve_store("auto") == "host"  # env fills the auto hole
+    assert resolve_store("cached") == "cached"  # explicit config wins
+    with pytest.raises(ValueError, match="unknown embedding store"):
+        resolve_store("hbm3")
+    assert set(STORES) == {"device", "host", "cached"}
+
+
+def test_env_override_reaches_the_driver(monkeypatch):
+    monkeypatch.setenv("REPRO_STORE", "host")
+    sess = make_session("auto")
+    report = sess.bench(2)
+    assert report.summary["store"] == "host"
+    assert report.summary["h2d_bytes"] > 0
+
+
+def test_serial_mode_store_handling(monkeypatch):
+    """Explicit store=host|cached with mode=serial fails loudly through the
+    public path; the blanket $REPRO_STORE env override falls back to the
+    device tier (so suite-wide sweeps keep their serial cells)."""
+    with pytest.raises(ValueError, match="serial"):
+        make_session("host", mode="serial").bench(1)
+    monkeypatch.setenv("REPRO_STORE", "cached")
+    rep = make_session("auto", mode="serial").bench(1)
+    assert rep.summary["store"] == "device"
+
+
+def test_build_store_rejects_mesh_for_host_tiers():
+    sess = make_session()
+    with pytest.raises(ValueError, match="multi-host"):
+        build_store("host", sess.workload.spec, sess.fns, mesh=object())
+
+
+def test_placeholder_table_is_zero_row():
+    sess = make_session()
+    table = sess.state.table
+    ph = placeholder_table(table)
+    assert ph.rows.shape == (0, table.rows.shape[1])
+    assert ph.accum.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# driver surfacing: store counters ride the deferred metric drain
+# ---------------------------------------------------------------------------
+
+
+def test_store_counters_surface_in_summary():
+    rep_h = make_session("host").bench(4)
+    assert rep_h.summary["store"] == "host"
+    assert rep_h.summary["h2d_bytes"] > 0
+    assert rep_h.summary["d2h_bytes"] > 0
+
+    rep_c = make_session("cached").bench(4)
+    s = rep_c.summary
+    assert s["store"] == "cached"
+    assert 0.0 <= s["cache_hit_rate"] <= 1.0
+    assert "cache_hit_rate_steady" in s
+    # the cache exists to shrink H2D staging: far less than the host tier
+    assert s["h2d_bytes"] < rep_h.summary["h2d_bytes"]
+
+    rep_d = make_session("device").bench(2)
+    assert rep_d.summary["store"] == "device"
+    assert "h2d_bytes" not in rep_d.summary  # no host master traffic
+
+
+def test_drain_snapshots_not_per_step():
+    """Counters are snapshotted at drain points; the stats dict must match
+    the store's final cumulative counters after the end-of-run drain."""
+    sess = make_session("cached")
+    rep = sess.bench(5)
+    m = rep.stats.store_metrics
+    assert m["cache_hits"] + m["cache_misses"] > 0
+    assert rep.stats.store_metrics_warm  # warm-up snapshot taken at step 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: checkpoint roundtrip through Session.save()/restore()
+# ---------------------------------------------------------------------------
+
+
+def _losses(rep):
+    return np.asarray(rep.stats.losses)
+
+
+@pytest.mark.parametrize("store", ["host", "cached"])
+def test_checkpoint_roundtrip_resumes_bit_exact(store, tmp_path):
+    """save at step 3 through a host/cached store, restore into a FRESH
+    session, continue — the stitched run must equal the uninterrupted
+    device-tier run bit for bit (manifest layout is tier-independent and
+    cache state stays out of it)."""
+    ref = make_session("device").bench(6)
+
+    d = str(tmp_path / store)
+    sess_a = make_session(store, ckpt_dir=d, ckpt_every=3)
+    rep_a = sess_a.train(3)
+
+    sess_b = make_session(store, seed=1, ckpt_dir=d)  # different init seed
+    sess_b.restore()
+    assert int(sess_b.state.step) == 3
+    rep_b = sess_b.train(3)
+
+    stitched = np.concatenate([_losses(rep_a), _losses(rep_b)])
+    np.testing.assert_array_equal(stitched, _losses(ref))
+    np.testing.assert_array_equal(np.asarray(sess_b.state.table.rows),
+                                  np.asarray(ref.state.table.rows))
+
+
+def test_cross_tier_restore(tmp_path):
+    """A cached-tier checkpoint restores into a device-tier session (same
+    manifest layout) and continues on the device trajectory."""
+    ref = make_session("device").bench(6)
+    d = str(tmp_path / "x")
+    sess_a = make_session("cached", ckpt_dir=d, ckpt_every=3)
+    sess_a.train(3)
+    sess_b = make_session("device", seed=2, ckpt_dir=d)
+    sess_b.restore()
+    rep_b = sess_b.train(3)
+    np.testing.assert_array_equal(_losses(rep_b), _losses(ref)[3:])
+
+
+def test_save_checkpoint_rejects_store_placeholder(tmp_path):
+    """Mid-run the master lives in the store and the state carries a
+    zero-row placeholder; saving that directly must fail loudly, and the
+    driver-style export path must roundtrip."""
+    from repro.dist.checkpoint import restore_checkpoint, save_checkpoint
+
+    sess = make_session("host")
+    state = sess.state
+    store = HostStore(sess.workload.spec, sess.fns)
+    mid = state._replace(table=store.ingest(state.table))
+    d = str(tmp_path / "s")
+    with pytest.raises(ValueError, match="placeholder"):
+        save_checkpoint(d, mid, 0)
+    # what the DBP driver's checkpoint callback does:
+    save_checkpoint(d, mid._replace(table=store.export_table()), 0)
+    out = restore_checkpoint(d, sess.workload.init_state(
+        __import__("jax").random.PRNGKey(3), sess.optimizer))
+    np.testing.assert_array_equal(np.asarray(out.table.rows),
+                                  np.asarray(store.export_table().rows))
