@@ -120,6 +120,8 @@ class Session:
         store: str = "auto",
         cache_rows: int = 0,
         prefetch_ahead: int = 1,
+        async_stages: str = "auto",
+        stage_workers: int = 1,
         npcfg: Optional[NestPipeConfig] = None,
         opt_cfg: Optional[OptimizerConfig] = None,
         lr: Optional[float] = None,
@@ -147,6 +149,11 @@ class Session:
         ``$REPRO_STORE`` then the device tier — see ``repro.core.store``).
         ``cache_rows`` sizes the CachedStore HBM hot-cache (0 = auto) and
         ``prefetch_ahead`` sets the DBP retrieval lookahead depth k.
+        ``async_stages`` moves the host-side plan/retrieve/commit stages
+        onto background worker threads (bit-exact — the epoch-fenced
+        executor in ``repro.core.store.async_exec``; ``"auto"`` resolves
+        ``$REPRO_ASYNC_STAGES`` then off) and ``stage_workers`` sizes its
+        plan/retrieve pool.
         """
         strategy = get_strategy(mode)  # fail fast on unknown modes
         npcfg = npcfg or NestPipeConfig(
@@ -162,6 +169,10 @@ class Session:
             overlay["cache_rows"] = cache_rows
         if prefetch_ahead != 1:
             overlay["prefetch_ahead"] = prefetch_ahead
+        if async_stages != "auto":
+            overlay["async_stages"] = async_stages
+        if stage_workers != 1:
+            overlay["stage_workers"] = stage_workers
         if overlay:
             npcfg = dataclasses.replace(npcfg, **overlay)
         npcfg = strategy.configure(npcfg)

@@ -75,6 +75,8 @@ class DriverStrategy:
         driver_kw.setdefault("metrics_every", self.metrics_every)
         driver_kw.setdefault("donate", self.donate)
         driver_kw.setdefault("lookahead", workload.npcfg.prefetch_ahead)
+        driver_kw.setdefault("async_stages", workload.npcfg.async_stages)
+        driver_kw.setdefault("stage_workers", workload.npcfg.stage_workers)
         if "store" not in driver_kw:
             npcfg = workload.npcfg
             # The serial baseline is device-resident by definition: an

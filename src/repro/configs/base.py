@@ -251,6 +251,14 @@ class NestPipeConfig:
     # DBP lookahead depth k: the Prefetcher issues plan+retrieve for step
     # t+k while step t computes (k=1 is the paper's dual-buffer setting).
     prefetch_ahead: int = 1
+    # Async host-stage executor: run plan/retrieve on stage worker threads
+    # and the commit epilogue on a commit thread, epoch-fenced so the
+    # trajectory stays bit-exact (core/store/async_exec.py). "auto"
+    # resolves $REPRO_ASYNC_STAGES then off; "on" | "off" force it.
+    async_stages: str = "auto"
+    # plan/retrieve worker threads for the executor (1 = deterministic
+    # FIFO; >1 keeps values exact, cache counters may vary run to run).
+    stage_workers: int = 1
 
 
 @dataclass(frozen=True)

@@ -1,13 +1,16 @@
-"""DBP five-stage host driver (paper §IV).
+"""DBP six-stage host driver (paper §IV + the async host-stage executor).
 
-Orchestrates the inter-batch pipeline over a batch stream:
+Orchestrates the inter-batch pipeline over a batch stream. Six stages, and
+— with ``async_stages`` on — four kinds of thread run them:
 
-    stage 1  data prefetch   — background thread (data/pipeline.PrefetchQueue)
-    stage 2  data H2D        — async device_put with target shardings
-    stage 3  key routing     — fused key All2All (store.plan)
-    stage 4  retrieval+sync  — master rows -> dual buffer (store.retrieve)
-                               + intersection sync against in-flight commits
-    stage 5  fwd/bwd (FWP)   — frozen-window micro-batch execution
+    stage 1  data prefetch   — PrefetchQueue thread (data/pipeline)
+    stage 2  data H2D        — async device_put (driver thread dispatch)
+    stage 3  key routing     — store.plan: fused key All2All + host key copy
+    stage 4  retrieval+sync  — store.retrieve: master rows -> dual buffer
+                               (4a), + intersection sync against in-flight
+                               commits (4b, driver-dispatched jit)
+    stage 5  fwd/bwd (FWP)   — frozen-window micro-batch execution (device)
+    stage 6  commit epilogue — store.commit: D2H pull + master scatter
 
 Storage is a seam, not a branch: the driver talks to ONE
 :class:`~repro.core.store.EmbeddingStore` — ``plan`` / ``retrieve`` /
@@ -18,8 +21,27 @@ intra-driver analogue of DBP's retrieval overlap; every in-flight buffer is
 re-synced at every commit so lookahead never trades exactness (Prop. 1
 generalized — see core/store/prefetch.py).
 
+**Async host stages** (``async_stages=True``, the BagPipe/Hotline-style
+disaggregation — core/store/async_exec.py): stages 3-4a run on a
+:class:`~repro.core.store.StageExecutor` stage-worker pool and stage 6 on
+its dedicated commit thread, so the driver thread only dispatches jits and
+pops completed futures — the host-side numpy gather/scatter and the
+blocking D2H never sit on the critical path between two window dispatches.
+Exactness holds through the executor's **commit epoch fence**: the master
+carries a monotone commit epoch; a retrieve waits until the epoch covers
+every commit submitted before it (reproducing the synchronous
+interleaving deterministically) and records the epoch it read; any buffer
+whose read epoch trails a completed commit is repaired through the same
+``sync_buffers`` intersection path (eagerly at the commit when its future
+has resolved, else queued and applied at ``pop``). Sync repairs copy
+post-update rows verbatim, so over-repair is idempotent and the async
+schedule replays the synchronous loop bit-for-bit (tests/test_async_exec).
+Mid-run exports (checkpoints) drain the commit queue first and read the
+master under the executor's lock.
+
 It also runs the baselines: ``serial`` (no pipelining, device tier only),
-``async`` (prefetch without dual-buffer sync — the staleness baseline).
+``async`` (prefetch without dual-buffer sync — the staleness baseline;
+orthogonal to ``async_stages``, which never trades exactness).
 
 Hot-loop discipline (this is the part the paper's overlap depends on):
 
@@ -31,17 +53,21 @@ Hot-loop discipline (this is the part the paper's overlap depends on):
   truly in place (see train/step.py). The state/carry passed to ``run``
   are CONSUMED — callers must not touch them afterwards (pass
   ``donate=False`` to keep them alive, e.g. for A/B comparisons).
+  ``buf_updated`` is deliberately NEVER donated anywhere: it is read by
+  the sync jits, the deferred epoch repairs AND the commit job, possibly
+  concurrently from two threads.
 - **Non-blocking metric drain.** The loop never calls ``float(aux[...])``
   per step — that would insert a host sync serializing stages 1-2 against
   stage 5. Instead per-step aux pytrees stay on device in a pending list
   and are drained (one ``jax.block_until_ready`` + host conversion) every
   ``metrics_every`` steps, at checkpoints, and at the end of the run. The
-  store's transfer/cache counters (h2d/d2h bytes, hits/misses) are
-  snapshotted into the stats at the same drain points — they are plain
-  host counters, so surfacing them never blocks the device. Step wall
-  times and the straggler EMA are computed from drained timestamps: every
-  step in a drained span is attributed the span's mean wall time (minus
-  host input-wait), so straggler detection operates at drain granularity.
+  store's transfer/cache counters and per-stage wall-time counters
+  (``plan_ms``/``retrieve_ms``/``commit_ms``/``h2d_ms``) are snapshotted
+  into the stats at the same drain points — they are plain host counters,
+  so surfacing them never blocks the device. Step wall times and the
+  straggler EMA are computed from drained timestamps: every step in a
+  drained span is attributed the span's mean wall time (minus host
+  input-wait), so straggler detection operates at drain granularity.
 """
 from __future__ import annotations
 
@@ -59,7 +85,15 @@ from ...train.step import (
     SERIAL_DONATE_ARGNUMS,
     STEADY_DONATE_ARGNUMS,
 )
-from ..store import DeviceStore, EmbeddingStore, Prefetcher
+from ..store import (
+    STAGE_TIMER_KEYS,
+    AsyncPrefetcher,
+    DeviceStore,
+    EmbeddingStore,
+    Prefetcher,
+    StageExecutor,
+    resolve_async_stages,
+)
 
 
 @dataclass
@@ -68,12 +102,19 @@ class PipelineStats:
     losses: List[float] = field(default_factory=list)
     h2d_times: List[float] = field(default_factory=list)
     input_wait_times: List[float] = field(default_factory=list)
+    input_wait_total: float = 0.0  # running sum (the drain reads it per
+    # span; recomputing sum(input_wait_times) there was O(steps^2))
     straggler_steps: List[int] = field(default_factory=list)
     overflow_max: int = 0
     store_tier: str = "device"
+    async_stages: bool = False
     # cumulative store counters at the last drain / after the warm-up drain
     store_metrics: Dict[str, float] = field(default_factory=dict)
     store_metrics_warm: Dict[str, float] = field(default_factory=dict)
+
+    def add_input_wait(self, dt: float) -> None:
+        self.input_wait_times.append(dt)
+        self.input_wait_total += dt
 
     def _cache_rates(self) -> Dict[str, float]:
         out: Dict[str, float] = {}
@@ -102,8 +143,9 @@ class PipelineStats:
             "final_loss": self.losses[-1] if self.losses else float("nan"),
             "overflow_max": self.overflow_max,
             "store": self.store_tier,
+            "async_stages": self.async_stages,
         }
-        for k in ("h2d_bytes", "d2h_bytes"):
+        for k in ("h2d_bytes", "d2h_bytes") + STAGE_TIMER_KEYS:
             if k in self.store_metrics:
                 out[k] = self.store_metrics[k]
         out.update(self._cache_rates())
@@ -129,7 +171,7 @@ class _MetricsDrain:
         self.pending: List[tuple] = []
         self.ema: Optional[float] = None
         self._t_mark = time.perf_counter()
-        self._wait_mark = 0.0  # sum(stats.input_wait_times) at the mark
+        self._wait_mark = 0.0  # stats.input_wait_total at the mark
 
     def _snapshot_store(self) -> None:
         if self.store is not None:
@@ -141,12 +183,12 @@ class _MetricsDrain:
     def drain(self) -> None:
         if not self.pending:
             self._t_mark = time.perf_counter()
-            self._wait_mark = sum(self.stats.input_wait_times)
+            self._wait_mark = self.stats.input_wait_total
             self._snapshot_store()
             return
         jax.block_until_ready(self.pending[-1][1])
         now = time.perf_counter()
-        waited = sum(self.stats.input_wait_times) - self._wait_mark
+        waited = self.stats.input_wait_total - self._wait_mark
         dt = max(now - self._t_mark - waited, 0.0) / len(self.pending)
         for t, aux in self.pending:
             self.stats.step_times.append(dt)
@@ -159,7 +201,7 @@ class _MetricsDrain:
             self.ema = dt if self.ema is None else 0.9 * self.ema + 0.1 * dt
         self.pending.clear()
         self._t_mark = now
-        self._wait_mark = sum(self.stats.input_wait_times)
+        self._wait_mark = self.stats.input_wait_total
         self._snapshot_store()
 
     def push(self, t: int, aux) -> None:
@@ -187,6 +229,14 @@ class DBPDriver:
         donate: bool = True,  # donate state+carry to the steady-state jits
         store: Optional[EmbeddingStore] = None,  # None -> DeviceStore
         lookahead: int = 1,  # DBP retrieval lookahead depth k (Prefetcher)
+        async_stages="auto",  # host stages on worker threads ("auto" ->
+        # $REPRO_ASYNC_STAGES -> off); ignored by serial mode
+        stage_workers: int = 1,  # plan/retrieve worker threads (>1 keeps
+        # values exact but cache placement/counters nondeterministic)
+        fence_slack: Optional[int] = None,  # commits a retrieve may trail
+        # (None -> lookahead+1 on host tiers in nestpipe mode, else 0; see
+        # core/store/async_exec.py — 0 replays the sync critical path)
+        stage_hooks=None,  # StageExecutor test seam (schedule injection)
     ):
         self.fns = step_fns
         self.n_micro = n_micro
@@ -201,6 +251,18 @@ class DBPDriver:
         self.store = store if store is not None \
             else DeviceStore(step_fns, donate=donate)
         self.lookahead = max(int(lookahead), 1)
+        self.async_stages = resolve_async_stages(async_stages) \
+            and mode != "serial"
+        self.stage_workers = max(int(stage_workers), 1)
+        if fence_slack is None:
+            # overlap needs a relaxed fence; the device tier and the
+            # staleness baseline must keep the synchronous interleaving
+            # (async_exec module doc)
+            fence_slack = self.lookahead + 1 \
+                if (mode == "nestpipe" and self.store.tier != "device") else 0
+        self.fence_slack = max(int(fence_slack), 0)
+        self.stage_hooks = stage_hooks
+        self._exec: Optional[StageExecutor] = None  # live only inside run()
         if mode == "serial" and self.store.tier != "device":
             raise ValueError(
                 "serial mode is the TorchRec-like device-resident baseline; "
@@ -235,7 +297,7 @@ class DBPDriver:
     def _next_device_batch(self, stats: PipelineStats):
         t0 = time.perf_counter()
         host_batch = self.queue.get()
-        stats.input_wait_times.append(time.perf_counter() - t0)
+        stats.add_input_wait(time.perf_counter() - t0)
         if self.device_fields is not None:
             host_batch = {k: host_batch[k] for k in self.device_fields}
         t1 = time.perf_counter()
@@ -267,13 +329,26 @@ class DBPDriver:
 
             # ---- pipelined modes: one loop, any storage tier ------------
             state = state._replace(table=self.store.ingest(state.table))
-            pf = Prefetcher(lambda: self._next_device_batch(stats), self.store,
-                            depth=self.lookahead)
+            sync_on = self.mode == "nestpipe"
+            next_batch = lambda: self._next_device_batch(stats)  # noqa: E731
+            if self.async_stages:
+                stats.async_stages = True
+                self._exec = StageExecutor(self.store,
+                                           workers=self.stage_workers,
+                                           fence_slack=self.fence_slack,
+                                           hooks=self.stage_hooks)
+                if hasattr(self.store, "use_stage_pool"):
+                    self.store.use_stage_pool()
+                pf = AsyncPrefetcher(next_batch, self.store, self._exec,
+                                     depth=self.lookahead, strict=sync_on)
+                commit = self._exec.submit_commit
+            else:
+                pf = Prefetcher(next_batch, self.store, depth=self.lookahead)
+                commit = self.store.commit
             pf.fill(limit=num_steps)  # windows 0..min(k,N)-1
             first = pf.pop()  # warm-up: route + retrieve batch 0
             carry = PipelineCarry(first.buffer, first.plan.window)
             cur_plan, batch = first.plan, first.batch
-            sync_on = self.mode == "nestpipe"
             for t in range(num_steps):
                 # stages 3+4 for t+1..t+k overlap this window; capped so a
                 # finite run never retrieves windows no step consumes
@@ -289,17 +364,26 @@ class DBPDriver:
                         pf.resync(buf_updated, self._jit_sync)
                     else:
                         nxt_buf = nxt.buffer  # staleness baseline: no sync
-                self.store.commit(buf_updated, cur_plan)  # stage 5''
+                commit(buf_updated, cur_plan)  # stage 6 (inline or queued)
                 if t + 1 < num_steps:
                     carry = PipelineCarry(nxt_buf, nxt.plan.window)
                     cur_plan, batch = nxt.plan, nxt.batch
                 drain.push(t, aux)
                 self._maybe_drain(drain, t, num_steps)
                 self._maybe_ckpt(state, t, drain)
+            if self._exec is not None:
+                self._exec.drain()  # all commits applied: master is final
             drain.drain()
             state = state._replace(table=self.store.release())
             return state, stats
         finally:
+            if self._exec is not None:
+                self._exec.shutdown()
+                self._exec = None
+                if hasattr(self.store, "clear_stage_pool"):
+                    # a later sync-mode run on this store must not inherit
+                    # the pooled (blocking) staging path
+                    self.store.clear_stage_pool()
             self.queue.close()
 
     def _maybe_drain(self, drain: _MetricsDrain, t: int, num_steps: int):
@@ -310,6 +394,13 @@ class DBPDriver:
 
     def _ckpt_state(self, state: TrainState) -> TrainState:
         if self.store.owns_master:
+            if self._exec is not None:
+                # all queued commits must reach the master before export;
+                # the lock fences out in-flight retrieves while the cached
+                # tier's export flushes hot rows into the DRAM master
+                self._exec.drain()
+                with self._exec.lock:
+                    return state._replace(table=self.store.export_table())
             return state._replace(table=self.store.export_table())
         return state
 

@@ -2,12 +2,18 @@
 
 See ``base.py`` for the contract and the tier overview; ``device.py`` /
 ``host.py`` / ``cached.py`` for the three tiers; ``prefetch.py`` for the
-DBP-style lookahead prefetcher the driver composes on top.
+DBP-style lookahead prefetcher the driver composes on top; and
+``async_exec.py`` for the StageExecutor that moves plan/retrieve/commit
+onto background worker threads (epoch-fenced, bit-exact).
 """
+from .async_exec import AsyncPrefetcher, StageExecutor, resolve_async_stages
 from .base import (
+    STAGE_TIMER_KEYS,
     STORES,
     EmbeddingStore,
     FetchPlan,
+    StagePool,
+    StageTimers,
     build_store,
     placeholder_table,
     resolve_store,
@@ -18,12 +24,18 @@ from .host import HostStore
 from .prefetch import Prefetcher, PrefetchEntry
 
 __all__ = [
+    "STAGE_TIMER_KEYS",
     "STORES",
     "EmbeddingStore",
     "FetchPlan",
+    "StagePool",
+    "StageTimers",
     "build_store",
     "placeholder_table",
     "resolve_store",
+    "AsyncPrefetcher",
+    "StageExecutor",
+    "resolve_async_stages",
     "CachedStore",
     "DeviceStore",
     "HostStore",

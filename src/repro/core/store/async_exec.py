@@ -1,0 +1,425 @@
+"""Async host-stage executor: plan/retrieve/commit off the DBP critical path.
+
+DBP's point (paper §IV) is that lookup-side work overlaps window compute,
+but with the synchronous :class:`~repro.core.store.Prefetcher` the DRIVER
+THREAD still executes every host-side stage inline: ``store.plan`` (routing
+device_get) and ``store.retrieve`` (numpy master gather + H2D staging) run
+before the next window jit is dispatched, and the host/cached tiers'
+``commit`` blocks on a D2H pull + numpy scatter. On DRAM-master tiers that
+host time is the dominant un-overlapped cost — BagPipe-style disaggregated
+lookahead workers (Agarwal et al.) and Hotline's CPU-side staging pipeline
+(Adnan et al.) both put it on background workers; this module does the same
+inside one process.
+
+Threads
+-------
+``StageExecutor`` owns two worker pools:
+
+* ``workers`` **stage threads** run plan+retrieve jobs (DBP stages 3-4a).
+* one **commit thread** applies commit jobs (the stage-6 epilogue: D2H +
+  master scatter) strictly in submission order.
+
+The driver thread only dispatches jits and pops completed futures.
+
+Exactness: the commit epoch fence
+---------------------------------
+The master table has a monotone **commit epoch** — the number of commits
+the commit thread has applied. Correctness is governed by two rules:
+
+1. **Retrieve fence.** A retrieve job computes ``fence = max(0, commits
+   submitted before it - fence_slack)`` at submission and waits (before
+   touching the master) until ``commit_epoch >= fence``. With
+   ``fence_slack=0`` this reproduces the synchronous schedule's
+   interleaving exactly — and therefore ALSO its critical path: retrieve
+   for window ``w`` transitively waits on window ``w-k-1``'s compute
+   through its commit's D2H, so nothing overlaps. A positive slack is what
+   buys the overlap: the gather may read a master up to ``slack`` commits
+   OLDER than the synchronous schedule would have, running concurrently
+   with the commit pipeline instead of behind it.
+2. **Epoch repair.** Each retrieve records the epoch its gather ACTUALLY
+   observed (``read_epoch``, read under the master lock; >= fence). A
+   buffer whose read epoch trails the window it serves is stale by the
+   commits in between — ALL of them, and only them, are repaired through
+   the existing ``sync_buffers`` intersection path (the k-deep
+   generalization of Prop. 1 in ``prefetch.Prefetcher.resync``): repairs
+   for commits submitted BEFORE the window was issued come from the
+   prefetcher's epoch-labeled ring of recent commit sources, repairs for
+   commits submitted while in flight are added at each commit (applied
+   eagerly once the future has resolved, queued otherwise), and
+   :meth:`AsyncPrefetcher.pop` applies anything still queued, all in epoch
+   order. In the caught-up steady state ``read_epoch`` equals the
+   submission epoch and the schedule degenerates to the synchronous loop's
+   single sync per step; only a genuinely lagging commit pipeline costs
+   extra repairs — exactly when the overlap is paying for them. A repair
+   against a commit the master already held at the gather is safe either
+   way: ``sync_buffers`` copies the post-update rows verbatim for
+   intersecting keys, so over-repair rewrites identical bytes and
+   under-repair is impossible by rule 1 — the async schedule is bit-exact
+   with the synchronous loop regardless of thread timing
+   (tests/test_async_exec).
+
+The driver keeps ``fence_slack=0`` for the device tier (its retrieve is a
+jit dispatch — nothing to overlap — and a relaxed fence would let the
+retrieve hold a read of the master the commit jit wants donated, forcing
+XLA to copy the largest array in the system) and for the ``async``
+staleness baseline (a relaxed fence would change WHICH stale values it
+reads; the baseline must match its synchronous counterpart exactly).
+
+One store-side wrinkle rides outside the buffer domain: the cached tier's
+ADMISSION copies a just-staged miss row into the HBM cache, and that copy
+is never epoch-repaired. A row staged for a key belonging to a
+submitted-but-unapplied commit is stale; the trajectory would still be
+exact (the window's own commit rewrites the slot before any unrepaired
+reader), but a mid-run checkpoint flush could export the stale row. The
+executor therefore passes the union key list of unapplied commits to
+``CachedStore.set_admission_block`` around every retrieve: blocked keys
+simply get admitted a window or two later, so every cached row is exactly
+valued at all times (cache PLACEMENT may differ from the synchronous
+schedule under thread timing; row values and exports never do).
+
+A single ``lock`` serializes every master/cache-directory access (retrieve
+bodies, commit bodies, and mid-run exports) — the overlap this module buys
+is host-work vs DEVICE compute, never torn host state. With the default
+``workers=1`` the stage pool is FIFO, so even the cached tier's admission /
+frequency bookkeeping replays in deterministic order; ``workers>1`` keeps
+values bit-exact (placement never changes row bytes) but cache placement
+and hit/miss counters may vary run to run.
+
+Selection mirrors ``kernel_backend``/``store``: ``NestPipeConfig
+.async_stages`` ("auto" falls through to ``$REPRO_ASYNC_STAGES``, then
+off), per-driver override via ``DBPDriver(async_stages=...)``.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from .base import EmbeddingStore
+from .prefetch import PrefetchEntry
+
+
+def resolve_async_stages(value: Any = None) -> bool:
+    """Resolve the async-stages switch: explicit arg > $REPRO_ASYNC_STAGES
+    > off. ``"auto"``/None fall through — the ``resolve_store`` order."""
+    for cand in (value, os.environ.get("REPRO_ASYNC_STAGES")):
+        if cand is None or cand == "auto":
+            continue
+        if isinstance(cand, bool):
+            return cand
+        s = str(cand).strip().lower()
+        if s in ("1", "on", "true", "yes"):
+            return True
+        if s in ("0", "off", "false", "no"):
+            return False
+        raise ValueError(
+            f"unknown async_stages value {cand!r}; expected "
+            "'auto' | on | off (or a bool)")
+    return False
+
+
+class StageExecutor:
+    """Background executor for a store's host-side stages (module doc).
+
+    ``hooks`` is a test seam for deterministic schedule injection: a dict
+    of callables keyed by ``"retrieve_start" | "retrieve_done"`` (called
+    with the window index on the stage thread) and ``"commit_submit" |
+    "commit_apply"`` (called with the epoch on the driver / commit thread).
+    A hook that blocks forces a specific interleaving — e.g. gating
+    ``retrieve_start`` on a ``commit_submit`` event exercises the deferred
+    epoch-repair path on demand (tests/test_async_exec.py).
+    """
+
+    def __init__(self, store: EmbeddingStore, *, workers: int = 1,
+                 fence_slack: int = 0,
+                 hooks: Optional[Dict[str, Callable]] = None):
+        self.store = store
+        self.fence_slack = max(int(fence_slack), 0)
+        self.hooks = dict(hooks or {})
+        self.lock = threading.Lock()  # master / cache-directory access
+        self._epoch_cv = threading.Condition()
+        self.commits_submitted = 0  # driver thread only
+        self.commit_epoch = 0  # commits APPLIED (commit thread, under cv)
+        self._stage_pool = ThreadPoolExecutor(
+            max_workers=max(int(workers), 1),
+            thread_name_prefix="repro-stage")
+        # workers == 1: fold commits into the single stage worker — one
+        # FIFO thread runs every host stage in submission order (exactly
+        # the synchronous interleaving, just off the driver), retrieves
+        # can never be fenced behind a commit queued after them, and one
+        # fewer thread fights the XLA pool for cores. workers > 1: the
+        # stage pool loses FIFO, so commits need their own ordered thread.
+        self._commit_pool = self._stage_pool if int(workers) <= 1 \
+            else ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="repro-commit")
+        self._commit_futures: List[Future] = []
+        self._failed: Optional[BaseException] = None
+        # epoch -> host key list of submitted-but-unapplied commits: a miss
+        # row staged for one of these keys is stale (its commit has not
+        # reached the master yet), so the cached tier must not ADMIT it —
+        # the buffer copy gets epoch-repaired, a cache copy would not.
+        # Guarded by its own small mutex: the driver adds entries while the
+        # commit thread may be holding the master lock for seconds.
+        self._pk_lock = threading.Lock()
+        self._pending_commit_keys: Dict[int, Any] = {}
+
+    def _hook(self, name: str, arg) -> None:
+        fn = self.hooks.get(name)
+        if fn is not None:
+            fn(arg)
+
+    # -- stages 3-4a: plan + retrieve ------------------------------------
+
+    def submit_retrieve(self, keys, window: int) -> Future:
+        """Issue plan+retrieve for one lookahead window on a stage thread.
+
+        Resolves to ``(plan, buffer, read_epoch)`` where ``read_epoch`` is
+        the commit epoch the gather actually observed (module doc, rule 2)
+        — every commit from ``read_epoch`` on must be repaired into the
+        buffer. The routing jit is dispatched HERE, on
+        the driver thread, so it lands on the XLA queue ahead of the next
+        window jit (the order the synchronous loop gets for free — a
+        worker-side dispatch would queue the routing compute behind a full
+        window and ``pop`` would transitively wait for both). Only the
+        waits move to the stage thread: the D2H key-list pull, the epoch
+        fence (never needed by routing — it reads no master state), and
+        the master gather under the lock.
+        """
+        fence = max(self.commits_submitted - self.fence_slack, 0)
+        wplan = self.store.route(keys)  # driver-thread dispatch, no wait
+
+        def job():
+            self._hook("retrieve_start", window)
+            plan = self.store.plan_from_window(wplan)
+            with self._epoch_cv:
+                # a failed commit can never bump the epoch — wake up and
+                # surface the failure instead of fencing forever
+                self._epoch_cv.wait_for(
+                    lambda: self._failed is not None
+                    or self.commit_epoch >= fence)
+                if self._failed is not None:
+                    raise RuntimeError(
+                        "commit stage failed; master state is undefined"
+                    ) from self._failed
+            block = getattr(self.store, "set_admission_block", None)
+            with self.lock:
+                # the epoch the gather ACTUALLY observes (>= fence): reading
+                # it under the master lock makes it exact, so the repair
+                # path applies only the commits this buffer truly missed —
+                # in the caught-up steady state that is the synchronous
+                # loop's single sync per step, not fence_slack extra ones
+                read_epoch = self.commit_epoch
+                if block is not None:
+                    block(self._blocked_keys())
+                try:
+                    buffer = self.store.retrieve(plan)
+                finally:
+                    if block is not None:
+                        block(None)
+            self._hook("retrieve_done", window)
+            return plan, buffer, read_epoch
+
+        return self._stage_pool.submit(job)
+
+    def _blocked_keys(self):
+        """Union key list of commits submitted but not yet applied (called
+        under the master lock, so the set cannot shrink mid-retrieve)."""
+        with self._pk_lock:
+            pending = [k for k in self._pending_commit_keys.values()
+                       if k is not None]
+        if not pending:
+            return None
+        return pending[0] if len(pending) == 1 else np.concatenate(pending)
+
+    # -- stage 6: the commit epilogue ------------------------------------
+
+    def submit_commit(self, buffer, plan) -> Future:
+        """Queue one window's commit (D2H + master scatter). Commits apply
+        strictly in submission order; each application bumps the epoch."""
+        epoch = self.commits_submitted
+        self.commits_submitted += 1
+        with self._pk_lock:
+            self._pending_commit_keys[epoch] = \
+                getattr(plan, "host_keys", None) if plan is not None else None
+        self._hook("commit_submit", epoch)
+
+        def job():
+            try:
+                if self.store.tier != "device":
+                    # wait for the window jit to finish producing the
+                    # buffer BEFORE taking the master lock: the D2H pull
+                    # reads no master state, and holding the lock across a
+                    # full window compute would stall every fenced
+                    # retrieve for a step's length (the device tier's
+                    # commit is a jit dispatch — nothing to hoist)
+                    jax.block_until_ready((buffer.rows, buffer.accum))
+                with self.lock:
+                    self.store.commit(buffer, plan)
+                    # cleared under the master lock: a retrieve can never
+                    # observe this commit as both applied and pending-stale
+                    with self._pk_lock:
+                        self._pending_commit_keys.pop(epoch, None)
+            except BaseException as e:
+                with self._epoch_cv:
+                    self._failed = e
+                    self._epoch_cv.notify_all()
+                raise
+            with self._epoch_cv:
+                self.commit_epoch = epoch + 1
+                self._epoch_cv.notify_all()
+            self._hook("commit_apply", epoch)
+
+        fut = self._commit_pool.submit(job)
+        self._commit_futures.append(fut)
+        if len(self._commit_futures) >= 128:
+            # prune futures that completed cleanly (drain() only needs the
+            # in-flight ones and any carrying an exception to re-raise)
+            self._commit_futures = [
+                f for f in self._commit_futures
+                if not f.done() or f.exception() is not None]
+        return fut
+
+    # -- lifecycle --------------------------------------------------------
+
+    def drain(self) -> None:
+        """Block until every submitted commit has been applied (the master
+        is final w.r.t. all submitted windows); re-raises worker errors on
+        the driver thread. Call before export_table / release."""
+        futures, self._commit_futures = self._commit_futures, []
+        for f in futures:
+            f.result()
+
+    def shutdown(self, wait: bool = True) -> None:
+        self._stage_pool.shutdown(wait=wait)
+        if self._commit_pool is not self._stage_pool:
+            self._commit_pool.shutdown(wait=wait)
+
+
+class _InFlight:
+    """One lookahead window staged through the executor."""
+
+    __slots__ = ("batch", "future", "window", "submit_epoch", "resolved",
+                 "pending", "syncs_applied")
+
+    def __init__(self, batch, future: Future, window: int, submit_epoch: int):
+        self.batch = batch
+        self.future = future
+        self.window = window
+        self.submit_epoch = submit_epoch  # commits submitted at issue time
+        self.resolved = None  # (plan, buffer, read_epoch) once realized
+        # deferred sync sources for commits submitted while in flight
+        # (epochs submit_epoch..), in epoch order
+        self.pending: List[Any] = []
+        self.syncs_applied = 0
+
+
+class AsyncPrefetcher:
+    """Executor-backed drop-in for :class:`~repro.core.store.Prefetcher`.
+
+    Same driver contract (``fill`` / ``pop`` / ``resync``), but ``fill``
+    only SUBMITS plan+retrieve jobs and ``pop`` resolves the window's
+    future — the driver thread never executes a host gather. ``resync``
+    implements the epoch repair: entries whose retrieve is still in flight
+    queue the sync source (``buf_updated``) instead of syncing now; ``pop``
+    drains the queue in epoch order before returning, so every buffer hands
+    out repaired against exactly the commits its read epoch trails
+    (module doc, rule 2).
+    """
+
+    def __init__(self, next_batch: Callable[[], Any], store: EmbeddingStore,
+                 executor: StageExecutor, *, depth: int = 1,
+                 keys_field: str = "keys", strict: bool = False):
+        self.next_batch = next_batch
+        self.store = store
+        self.executor = executor
+        self.depth = max(int(depth), 1)
+        self.keys_field = keys_field
+        self.strict = strict  # assert the epoch-repair invariant (nestpipe)
+        self._q: "deque[_InFlight]" = deque()
+        self._sync_fn: Optional[Callable] = None
+        self._windows_issued = 0
+        # epoch-labeled ring of recent commit sources: when an entry
+        # resolves, the repairs for the commits its gather ACTUALLY missed
+        # before it was even issued (epochs read_epoch..submit_epoch-1)
+        # come from here. Depth covers the deepest possible miss: the
+        # fence bounds read_epoch >= submit_epoch - fence_slack, and up to
+        # ``depth`` more commits land while an entry is in flight.
+        self._ring: "deque" = deque(maxlen=executor.fence_slack + self.depth)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def fill(self, limit: Optional[int] = None) -> None:
+        """Top up to ``depth`` in-flight windows (submits plan+retrieve
+        jobs; same ``limit`` cap contract as the synchronous Prefetcher)."""
+        target = self.depth if limit is None else min(self.depth, max(limit, 0))
+        while len(self._q) < target:
+            batch = self.next_batch()
+            fut = self.executor.submit_retrieve(
+                batch[self.keys_field], self._windows_issued)
+            self._q.append(_InFlight(batch, fut, self._windows_issued,
+                                     self.executor.commits_submitted))
+            self._windows_issued += 1
+
+    def _realize(self, e: _InFlight) -> None:
+        """Resolve the future and apply the repairs for commits the gather
+        actually missed (epochs read_epoch..): ring sources for the epochs
+        before the entry was issued (usually NONE — the commit thread
+        keeps up and read_epoch == submit_epoch, one sync per step like
+        the synchronous loop), then the epoch-labeled in-flight queue —
+        skipping entries the gather already observed — in epoch order."""
+        plan, buffer, read_epoch = e.future.result()
+        for epoch, src in self._ring:
+            if read_epoch <= epoch < e.submit_epoch:
+                buffer = self._sync_fn(src, buffer)
+                e.syncs_applied += 1
+        for epoch, src in e.pending:
+            if epoch >= read_epoch:
+                buffer = self._sync_fn(src, buffer)
+                e.syncs_applied += 1
+        e.pending.clear()
+        e.resolved = (plan, buffer, read_epoch)
+
+    def resync(self, buf_updated, sync_fn: Callable) -> None:
+        """Epoch repair at one commit: sync realized in-flight buffers now,
+        queue the source for buffers whose retrieve is still running, and
+        remember it for entries that resolve later (the epoch ring)."""
+        self._sync_fn = sync_fn
+        self._ring.append((self.executor.commits_submitted, buf_updated))
+        for e in self._q:
+            if e.resolved is None and e.future.done():
+                self._realize(e)
+            if e.resolved is not None:
+                plan, buffer, read_epoch = e.resolved
+                e.resolved = (plan, sync_fn(buf_updated, buffer), read_epoch)
+                e.syncs_applied += 1
+            else:
+                e.pending.append((self.executor.commits_submitted, buf_updated))
+
+    def pop(self) -> PrefetchEntry:
+        if not self._q:
+            self.fill(limit=1)  # exactly one: never stage past the caller's cap
+        e = self._q.popleft()
+        if e.resolved is None:
+            self._realize(e)  # re-raises stage-thread errors
+        plan, buffer, read_epoch = e.resolved
+        if self.strict:
+            # Rule-2 invariant: at pop time (before this window's
+            # predecessor commits) the buffer must have been repaired
+            # against exactly the commits its gather missed.
+            expected = self.executor.commits_submitted - read_epoch
+            assert e.syncs_applied == expected, (
+                e.window, e.syncs_applied, expected, read_epoch)
+        return PrefetchEntry(e.batch, plan, buffer)
+
+
+__all__ = [
+    "AsyncPrefetcher",
+    "StageExecutor",
+    "resolve_async_stages",
+]

@@ -38,6 +38,9 @@ with an explicit store instance.
 from __future__ import annotations
 
 import os
+import threading
+import time
+from contextlib import contextmanager
 from typing import Any, Dict, NamedTuple, Optional, Protocol, runtime_checkable
 
 import jax.numpy as jnp
@@ -47,6 +50,87 @@ from ..embedding.engine import DualBuffer, WindowPlan
 from ..embedding.table import EmbeddingTableState
 
 STORES = ("device", "host", "cached")
+
+# Per-stage wall-time counter keys every tier reports through ``metrics()``:
+# plan (stage 3 routing + host key copy), retrieve (stage 4a gather +
+# staging), commit (the stage-6 epilogue: D2H + master scatter) and the H2D
+# slice of retrieve (device_put dispatch; includes the transfer itself when
+# the pooled staging path blocks for reuse safety). On the device tier
+# these measure jit DISPATCH time only — the device work is async.
+STAGE_TIMER_KEYS = ("plan_ms", "retrieve_ms", "commit_ms", "h2d_ms")
+
+
+class StageTimers:
+    """Cumulative per-stage wall-time counters (milliseconds).
+
+    Thread-safe: with the async stage executor, plan/retrieve run on stage
+    threads while commit runs on the commit thread, so increments race.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._ms = {k: 0.0 for k in STAGE_TIMER_KEYS}
+
+    def add(self, key: str, seconds: float) -> None:
+        with self._lock:
+            self._ms[key] += seconds * 1e3
+
+    @contextmanager
+    def timed(self, key: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.add(key, time.perf_counter() - t0)
+
+    def as_dict(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._ms)
+
+
+class StagePool:
+    """Double-buffered staging-array pool for the async executor's workers.
+
+    ``HostStore.stage`` deliberately allocates FRESH numpy arrays per call:
+    ``device_put`` is async, and once the resulting buffers are donated
+    downstream nothing can observe whether the H2D copy out of the source
+    completed — reuse would be an unobservable use-after-reuse race. The
+    pool is safe ONLY because the pooled path blocks (``block_until_ready``
+    on the staged device arrays) before an array returns here, so every
+    pooled array is provably copied out. That block runs on a stage WORKER
+    thread, off the driver's critical path — which is exactly why the pool
+    is an executor-mode feature and fresh allocation stays the rule for the
+    synchronous loop. It additionally requires a backend whose
+    ``device_put`` really COPIES a numpy source: the CPU backend zero-copy
+    aliases aligned host buffers, making reuse unsafe at any blocking
+    discipline (and pointless — there is no copy to elide), so
+    ``HostStore.use_stage_pool`` probes before engaging.
+
+    Keyed by (shape, dtype): the host tier stages one fixed buffer shape,
+    the cached tier a handful of bucket-padded miss shapes. At most
+    ``slots`` arrays are retained per key (double buffering).
+    """
+
+    def __init__(self, slots: int = 2):
+        self.slots = max(int(slots), 1)
+        self._lock = threading.Lock()
+        self._free: Dict[tuple, list] = {}
+
+    def take(self, shape: tuple, dtype) -> np.ndarray:
+        key = (tuple(shape), np.dtype(dtype))
+        with self._lock:
+            bucket = self._free.get(key)
+            if bucket:
+                return bucket.pop()
+        return np.empty(shape, dtype)
+
+    def give(self, *arrays: np.ndarray) -> None:
+        with self._lock:
+            for a in arrays:
+                bucket = self._free.setdefault(
+                    (a.shape, a.dtype), [])
+                if len(bucket) < self.slots:
+                    bucket.append(a)
 
 
 class FetchPlan(NamedTuple):
@@ -80,6 +164,14 @@ class EmbeddingStore(Protocol):
     def ingest(self, table: EmbeddingTableState) -> EmbeddingTableState: ...
 
     def plan(self, keys) -> FetchPlan: ...
+
+    # plan, split for the async executor: ``route`` is the stage-3 jit
+    # DISPATCH (driver thread — preserves XLA queue order ahead of the
+    # window jit) and ``plan_from_window`` the host half (D2H key-list
+    # pull; a stage-worker wait). plan == plan_from_window(route(keys)).
+    def route(self, keys) -> Any: ...
+
+    def plan_from_window(self, window) -> FetchPlan: ...
 
     def retrieve(self, plan: FetchPlan) -> DualBuffer: ...
 

@@ -92,6 +92,15 @@ class CachedStore(HostStore):
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.admission_skips = 0
+        # Keys temporarily barred from admission (set by the async stage
+        # executor around retrieve): a staged miss row for a key belonging
+        # to a submitted-but-unapplied commit is STALE — the buffer copy
+        # gets epoch-repaired, the cache copy would not, and a checkpoint
+        # flush (or a later hit outside the repair range) could surface it.
+        # Skipping the admission keeps every cached row exactly valued;
+        # the key is simply admitted a window or two later.
+        self._admission_block: Optional[np.ndarray] = None
 
         backend = self._backend
 
@@ -126,8 +135,13 @@ class CachedStore(HostStore):
     # -- DBP stage 4a: cache-aware retrieval + admission -----------------
 
     def retrieve(self, plan: FetchPlan) -> DualBuffer:
+        with self.stage_timers.timed("retrieve_ms"):
+            return self._retrieve_body(plan)
+
+    def _retrieve_body(self, plan: FetchPlan) -> DualBuffer:
         keys = plan.host_keys
         cap = self.capacity
+        pool = self._stage_pool
         valid = keys != _SENTINEL
         safe = np.where(valid, keys, 0)
         self._freq[safe[valid]] += 1  # buffer keys are unique by construction
@@ -138,8 +152,15 @@ class CachedStore(HostStore):
         nm = int(miss_keys.shape[0])
         pm = round_up(nm, self.miss_bucket) if nm else 0
 
-        stage_rows = np.zeros((pm, self.spec.dim), self.rows.dtype)
-        stage_accum = np.zeros((pm,), np.float32)
+        if pool is not None:
+            # pooled arrays may hold stale bytes past :nm — safe: no src /
+            # pull index ever references the padding rows (zero fill comes
+            # from out-of-range gathers, not the staged padding)
+            stage_rows = pool.take((pm, self.spec.dim), self.rows.dtype)
+            stage_accum = pool.take((pm,), np.float32)
+        else:
+            stage_rows = np.zeros((pm, self.spec.dim), self.rows.dtype)
+            stage_accum = np.zeros((pm,), np.float32)
         if nm:
             stage_rows[:nm] = self.rows[miss_keys]
             stage_accum[:nm] = self.accum[miss_keys]
@@ -151,8 +172,12 @@ class CachedStore(HostStore):
 
         self.hits += int(hit.sum())
         self.misses += nm
-        stage_rows_d = jax.device_put(stage_rows)
-        stage_accum_d = jax.device_put(stage_accum)
+        with self.stage_timers.timed("h2d_ms"):
+            stage_rows_d = jax.device_put(stage_rows)
+            stage_accum_d = jax.device_put(stage_accum)
+            if pool is not None:
+                jax.block_until_ready((stage_rows_d, stage_accum_d))
+                pool.give(stage_rows, stage_accum)
         # assemble BEFORE admission scatters: it must read the pre-admission
         # cache (dispatch order makes the donated scatter safe afterwards).
         # own keys array, NOT plan.window.buffer_keys: the buffer may be
@@ -173,6 +198,10 @@ class CachedStore(HostStore):
         into the device cache in place."""
         cap = self.capacity
         want = self._freq[miss_keys] >= self.admit_threshold
+        if self._admission_block is not None and self._admission_block.size:
+            fresh = ~np.isin(miss_keys, self._admission_block)
+            self.admission_skips += int((want & ~fresh).sum())
+            want &= fresh
         cand_pos = np.flatnonzero(want)
         if not cand_pos.size:
             return
@@ -212,6 +241,10 @@ class CachedStore(HostStore):
     # -- DBP epilogue: split commit (cache scatter + compact D2H) --------
 
     def commit(self, buffer: DualBuffer, plan: Optional[FetchPlan] = None) -> None:
+        with self.stage_timers.timed("commit_ms"):
+            self._commit_body(buffer, plan)
+
+    def _commit_body(self, buffer: DualBuffer, plan: Optional[FetchPlan] = None) -> None:
         keys = plan.host_keys if plan is not None \
             else np.asarray(jax.device_get(buffer.keys))
         cap = self.capacity
@@ -241,6 +274,12 @@ class CachedStore(HostStore):
             cold = keys[host_pos]
             self.rows[cold] = rows[:nh]
             self.accum[cold] = accum[:nh]
+
+    def set_admission_block(self, keys: Optional[np.ndarray]) -> None:
+        """Bar ``keys`` from cache admission for the next retrieve (see
+        ``_admission_block``; the async executor calls this under its
+        master lock with the union key list of unapplied commits)."""
+        self._admission_block = keys
 
     def _admit(self, admit_keys: np.ndarray, slot_ids: np.ndarray) -> None:
         self._slot_of_key[admit_keys] = slot_ids.astype(np.int32)
@@ -326,6 +365,7 @@ class CachedStore(HostStore):
             "cache_hits": float(self.hits),
             "cache_misses": float(self.misses),
             "cache_evictions": float(self.evictions),
+            "cache_admission_skips": float(self.admission_skips),
             "cache_rows_used": float(int((self._key_of_slot >= 0).sum())),
             "cache_capacity": float(self.capacity),
         })

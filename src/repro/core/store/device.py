@@ -14,7 +14,7 @@ import jax
 
 from ..embedding.engine import DualBuffer
 from ..embedding.table import EmbeddingTableState
-from .base import FetchPlan, placeholder_table
+from .base import FetchPlan, StageTimers, placeholder_table
 
 
 class DeviceStore:
@@ -29,6 +29,7 @@ class DeviceStore:
                                donate_argnums=(0,) if donate else ())
         self.table: Optional[EmbeddingTableState] = None
         self.owns_master = False
+        self.stage_timers = StageTimers()
 
     # -- lifecycle -------------------------------------------------------
 
@@ -49,16 +50,29 @@ class DeviceStore:
 
     # -- DBP stages ------------------------------------------------------
 
+    def route(self, keys):
+        """Stage-3 routing dispatch (see HostStore.route — the device tier
+        has no host half, so ``plan_from_window`` is just the wrapper)."""
+        with self.stage_timers.timed("plan_ms"):
+            return self._route(keys)
+
+    def plan_from_window(self, window) -> FetchPlan:
+        return FetchPlan(window, None)
+
     def plan(self, keys) -> FetchPlan:
-        return FetchPlan(self._route(keys), None)
+        return self.plan_from_window(self.route(keys))
 
     def retrieve(self, plan: FetchPlan) -> DualBuffer:
-        return self._retrieve(self.table, plan.window)
+        with self.stage_timers.timed("retrieve_ms"):
+            return self._retrieve(self.table, plan.window)
 
     def commit(self, buffer: DualBuffer, plan: FetchPlan) -> None:
-        self.table = self._commit(self.table, buffer)
+        with self.stage_timers.timed("commit_ms"):
+            self.table = self._commit(self.table, buffer)
 
     # -- metrics ---------------------------------------------------------
 
     def metrics(self) -> Dict[str, float]:
-        return {}  # no host<->device master traffic on this tier
+        # no host<->device master traffic on this tier; the stage timers
+        # measure jit DISPATCH time only (the work itself is async)
+        return dict(self.stage_timers.as_dict())

@@ -28,7 +28,7 @@ import numpy as np
 from ..embedding.engine import DualBuffer
 from ..embedding.routing import SENTINEL
 from ..embedding.table import EmbeddingTableState, MegaTableSpec
-from .base import FetchPlan, placeholder_table
+from .base import FetchPlan, StagePool, StageTimers, placeholder_table
 
 _SENTINEL = int(SENTINEL)
 
@@ -66,6 +66,43 @@ class HostStore:
         self.h2d_bytes = 0
         self.d2h_bytes = 0
         self.owns_master = False
+        self.stage_timers = StageTimers()
+        # Reusable staging arrays — None (fresh allocations, the safe
+        # default) until the async stage executor enables pooling; see
+        # StagePool for why only the executor may.
+        self._stage_pool: Optional[StagePool] = None
+
+    def use_stage_pool(self, slots: int = 2) -> bool:
+        """Enable double-buffered staging reuse (async-executor mode only:
+        the pooled path blocks on the H2D copy before reusing a source
+        array, which is acceptable on a worker thread, never the driver).
+
+        Engages ONLY where ``device_put`` provably COPIES out of a numpy
+        source. The CPU backend zero-copies aligned host buffers — the
+        "device" array aliases the numpy memory, so reuse would rewrite
+        live buffers no matter how long we block (observed, not
+        hypothetical) — and with no copy there is nothing to elide anyway.
+        A put-mutate-read probe guards non-CPU backends with surprising
+        aliasing semantics. Returns True when pooling engaged.
+        """
+        if jax.default_backend() == "cpu":
+            return False
+        put = (lambda x: jax.device_put(x, self.device_sharding)) \
+            if self.device_sharding is not None else jax.device_put
+        probe = np.full((64, self.spec.dim), 1.0, self.rows.dtype)
+        dev = put(probe)
+        jax.block_until_ready(dev)
+        probe.fill(2.0)
+        if not bool(np.all(np.asarray(jax.device_get(dev)) == 1.0)):
+            return False  # aliasing semantics: keep fresh allocations
+        self._stage_pool = StagePool(slots)
+        return True
+
+    def clear_stage_pool(self) -> None:
+        """Back to fresh allocations (the driver calls this when a run's
+        executor shuts down: a later SYNC run on the same store must not
+        inherit the pooled path's driver-thread block_until_ready)."""
+        self._stage_pool = None
 
     @classmethod
     def from_device_table(cls, spec: MegaTableSpec, table, **kwargs) -> "HostStore":
@@ -88,10 +125,20 @@ class HostStore:
         return placeholder_table(table)
 
     def export_table(self) -> EmbeddingTableState:
-        """Materialize the master for checkpoints / run end (non-destructive)."""
+        """Materialize the master for checkpoints / run end (non-destructive).
+
+        Returns a SNAPSHOT, not a view: on CPU ``jnp.asarray`` zero-copy
+        aliases the live numpy master, so without the copy an "exported"
+        table would keep mutating as later commits / evictions / flushes
+        land — invisible in the synchronous loop (nothing mutates before
+        the checkpoint callback returns) but a real corruption under the
+        async executor, where in-flight retrieves may evict concurrently.
+        """
         import jax.numpy as jnp
 
-        return EmbeddingTableState(jnp.asarray(self.rows), jnp.asarray(self.accum))
+        return EmbeddingTableState(
+            jnp.asarray(np.array(self.rows, copy=True)),
+            jnp.asarray(np.array(self.accum, copy=True)))
 
     def release(self) -> EmbeddingTableState:
         table = self.export_table()
@@ -100,10 +147,24 @@ class HostStore:
 
     # -- DBP stage 3: route + host key copy ------------------------------
 
-    def plan(self, keys) -> FetchPlan:
+    def route(self, keys):
+        """Stage-3 routing DISPATCH only (async jit call, returns device
+        futures). Split from ``plan`` so the async executor can issue it on
+        the DRIVER thread before the window jit — keeping the XLA queue
+        order the synchronous loop gets for free — while the D2H wait
+        (``plan_from_window``) runs on a stage worker."""
         assert self._route is not None, "HostStore built without step fns"
-        window = self._route(keys)
-        return FetchPlan(window, np.asarray(jax.device_get(window.buffer_keys)))
+        with self.stage_timers.timed("plan_ms"):
+            return self._route(keys)
+
+    def plan_from_window(self, window) -> FetchPlan:
+        """Stage-3 host half: pull the owner-side union key list D2H."""
+        with self.stage_timers.timed("plan_ms"):
+            host_keys = np.asarray(jax.device_get(window.buffer_keys))
+        return FetchPlan(window, host_keys)
+
+    def plan(self, keys) -> FetchPlan:
+        return self.plan_from_window(self.route(keys))
 
     # -- DBP stage 4a: host-side gather + async H2D ----------------------
 
@@ -119,10 +180,20 @@ class HostStore:
         (a real pinned-pool needs transfer-completion events JAX does not
         expose for host sources). The allocation is a few hundred KB per
         step; ownership transfer is the only safe contract.
+
+        The async stage executor relaxes this with :class:`StagePool`
+        double buffering: its worker threads can afford to block until the
+        H2D copy completes (``block_until_ready``), which makes reuse
+        observable and therefore safe — see ``use_stage_pool``.
         """
+        pool = self._stage_pool
         k = buffer_keys.shape[0]
-        stage_rows = np.zeros((k, self.spec.dim), self.rows.dtype)
-        stage_accum = np.zeros((k,), np.float32)
+        if pool is not None:
+            stage_rows = pool.take((k, self.spec.dim), self.rows.dtype)
+            stage_accum = pool.take((k,), np.float32)
+        else:
+            stage_rows = np.zeros((k, self.spec.dim), self.rows.dtype)
+            stage_accum = np.zeros((k,), np.float32)
         valid = buffer_keys != _SENTINEL
         idx = np.where(valid, buffer_keys, 0)
         np.take(self.rows, idx, axis=0, out=stage_rows)
@@ -132,8 +203,15 @@ class HostStore:
         self.h2d_bytes += stage_rows.nbytes + stage_accum.nbytes
         put = (lambda x: jax.device_put(x, self.device_sharding)) \
             if self.device_sharding is not None else jax.device_put
-        return DualBuffer(keys=put(buffer_keys.astype(np.int32)),
-                          rows=put(stage_rows), accum=put(stage_accum))
+        with self.stage_timers.timed("h2d_ms"):
+            buf = DualBuffer(keys=put(buffer_keys.astype(np.int32)),
+                             rows=put(stage_rows), accum=put(stage_accum))
+            if pool is not None:
+                # prove the copy out of the pooled sources completed, then
+                # hand the arrays back for the next stage's reuse
+                jax.block_until_ready((buf.rows, buf.accum))
+                pool.give(stage_rows, stage_accum)
+        return buf
 
     def retrieve(self, plan: FetchPlan) -> DualBuffer:
         # The buffer gets its OWN keys array (one small int32 H2D) rather
@@ -142,25 +220,28 @@ class HostStore:
         # the plan (still carried into the next window jit) holding a
         # donated array — alive today only via pjit's passthrough
         # forwarding, i.e. a landmine.
-        return self.stage(plan.host_keys)
+        with self.stage_timers.timed("retrieve_ms"):
+            return self.stage(plan.host_keys)
 
     # -- DBP epilogue: D2H + host scatter --------------------------------
 
     def commit(self, buffer: DualBuffer, plan: Optional[FetchPlan] = None) -> None:
-        keys = plan.host_keys if plan is not None \
-            else np.asarray(jax.device_get(buffer.keys))
-        rows = np.asarray(jax.device_get(buffer.rows))
-        accum = np.asarray(jax.device_get(buffer.accum))
-        self.d2h_bytes += rows.nbytes + accum.nbytes
-        valid = keys != _SENTINEL
-        self.rows[keys[valid]] = rows[valid]
-        self.accum[keys[valid]] = accum[valid]
+        with self.stage_timers.timed("commit_ms"):
+            keys = plan.host_keys if plan is not None \
+                else np.asarray(jax.device_get(buffer.keys))
+            rows = np.asarray(jax.device_get(buffer.rows))
+            accum = np.asarray(jax.device_get(buffer.accum))
+            self.d2h_bytes += rows.nbytes + accum.nbytes
+            valid = keys != _SENTINEL
+            self.rows[keys[valid]] = rows[valid]
+            self.accum[keys[valid]] = accum[valid]
 
     # -- metrics / introspection -----------------------------------------
 
     def metrics(self) -> Dict[str, float]:
         return {"h2d_bytes": float(self.h2d_bytes),
-                "d2h_bytes": float(self.d2h_bytes)}
+                "d2h_bytes": float(self.d2h_bytes),
+                **self.stage_timers.as_dict()}
 
     def memory_bytes(self) -> int:
         return self.rows.nbytes + self.accum.nbytes

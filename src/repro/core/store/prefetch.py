@@ -58,7 +58,11 @@ class Prefetcher:
 
     def pop(self) -> PrefetchEntry:
         if not self._q:
-            self.fill()
+            # Fetch exactly ONE window, not a full depth's worth: an
+            # uncapped fill here could route/stage lookahead windows past
+            # the end of a finite run (the driver caps fill(), but pop's
+            # fallback used to bypass the cap).
+            self.fill(limit=1)
         return self._q.popleft()
 
     def resync(self, buf_updated: DualBuffer, sync_fn: Callable) -> None:

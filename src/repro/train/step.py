@@ -36,6 +36,17 @@ in a second jit where the donated table has a single consumer, so the
 scatter really is in place. The fused fns remain the composition of the two
 phases (identical math, one dispatch) for the dry-run and for TPU runs that
 want XLA to overlap the writeback with stage 3/4 of the next batch.
+
+Async-executor ordering note (core/store/async_exec.py): when the driver
+runs host stages on background threads, ``buf_updated`` outlives the step
+that produced it — it is read by the driver's sync jits (stage 4b and the
+deferred epoch repairs) AND by the commit job on the commit thread,
+potentially concurrently. That is safe precisely because no step fn and no
+driver jit ever takes ``buf_updated`` donated (``sync_buffers`` donates
+only the PREFETCH buffer; ``commit_writeback`` donates only the table);
+keep it that way when adding step variants. Likewise the window jit must
+never donate the ``plan`` leaves — the store's commit job may still read
+``plan.host_keys``-adjacent state when the window for step t+1 dispatches.
 """
 from __future__ import annotations
 

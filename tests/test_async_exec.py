@@ -1,0 +1,308 @@
+"""Async host-stage executor: bit-exact with the synchronous loop.
+
+The StageExecutor (core/store/async_exec.py) moves plan/retrieve onto
+stage worker threads and the commit epilogue onto a commit thread; the
+commit epoch fence + deferred sync repair must keep the trajectory
+bit-for-bit identical to the synchronous driver on every storage tier,
+at every lookahead depth, including when a commit races an in-flight
+retrieve (forced deterministically here via the executor's barrier hooks).
+"""
+import os
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from test_hierarchical import STEPS, make_driver_with_store
+
+from repro.core.store import Prefetcher, resolve_async_stages
+from repro.core.store.async_exec import StageExecutor
+
+TIERS = ("device", "host", "cached")
+
+
+def run_tier(tier, *, steps=STEPS, async_on=False, lookahead=1,
+             mode="nestpipe", workers=1, hooks=None, **kw):
+    driver_kw = {}
+    if async_on:
+        driver_kw = {"async_stages": True, "stage_workers": workers,
+                     "stage_hooks": hooks}
+    driver, state, store, _ = make_driver_with_store(
+        tier, lookahead=lookahead, mode=mode, driver_kw=driver_kw, **kw)
+    state, stats = driver.run(state, steps)
+    return state, stats, store
+
+
+# ---------------------------------------------------------------------------
+# the tentpole invariant: async stages replay the sync loop bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lookahead", [1, 3])
+def test_async_stages_bit_exact_every_tier(lookahead):
+    """losses AND the full master replay identically with the executor on,
+    across all three tiers and lookahead k in {1, 3}."""
+    ref_state, ref_stats, _ = run_tier("device")
+    for tier in TIERS:
+        state, stats, _ = run_tier(tier, async_on=True, lookahead=lookahead)
+        np.testing.assert_array_equal(stats.losses, ref_stats.losses)
+        np.testing.assert_array_equal(np.asarray(state.table.rows),
+                                      np.asarray(ref_state.table.rows))
+        np.testing.assert_array_equal(np.asarray(state.table.accum),
+                                      np.asarray(ref_state.table.accum))
+        assert stats.async_stages
+
+
+def test_async_stages_matches_sync_traffic():
+    """Same windows staged, same commits applied: the byte counters agree
+    with the synchronous loop once the run has drained."""
+    _, s_sync, st_sync = run_tier("host")
+    _, s_async, st_async = run_tier("host", async_on=True)
+    assert st_async.h2d_bytes == st_sync.h2d_bytes
+    assert st_async.d2h_bytes == st_sync.d2h_bytes
+
+
+def test_staleness_baseline_rides_the_executor():
+    """mode=async (no dual-buffer sync — the accuracy baseline) must give
+    the same stale trajectory through the executor as through the
+    synchronous loop: async_stages changes WHERE stages run, never what
+    they compute."""
+    for tier in TIERS:
+        _, stats_sync, _ = run_tier(tier, mode="async")
+        _, stats_exec, _ = run_tier(tier, mode="async", async_on=True)
+        np.testing.assert_array_equal(stats_exec.losses, stats_sync.losses)
+
+
+def test_multi_worker_stage_pool_stays_value_exact():
+    """workers=2: retrieves may execute out of submission order; the epoch
+    fence + idempotent over-repair must keep values exact (host tier, where
+    retrieval is read-only and the guarantee is deterministic)."""
+    ref_state, ref_stats, _ = run_tier("device")
+    state, stats, _ = run_tier("host", async_on=True, lookahead=3, workers=2)
+    np.testing.assert_array_equal(stats.losses, ref_stats.losses)
+    np.testing.assert_array_equal(np.asarray(state.table.rows),
+                                  np.asarray(ref_state.table.rows))
+
+
+# ---------------------------------------------------------------------------
+# the commit-vs-retrieve race, scheduled deterministically
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tier", ["host", "cached"])
+def test_deferred_epoch_repair_under_forced_race(tier):
+    """Barrier-injected schedule: window 5's retrieve is gated until commit
+    3 has been SUBMITTED, so when commits 2 and 3 are submitted the entry's
+    future is still unresolved — the resync must defer both repairs and pop
+    must apply them in epoch order. The trajectory stays bit-exact and the
+    hook log proves the race actually happened."""
+    gate = threading.Event()
+    events = []
+
+    def on_retrieve_start(w):
+        if w == 5:
+            assert gate.wait(timeout=60), "commit 3 never submitted"
+        events.append(("retrieve", w))
+
+    def on_commit_submit(epoch):
+        events.append(("commit_submit", epoch))
+        if epoch == 3:
+            gate.set()
+
+    hooks = {"retrieve_start": on_retrieve_start,
+             "commit_submit": on_commit_submit}
+    ref_state, ref_stats, _ = run_tier("device", steps=7)
+    state, stats, _ = run_tier(tier, steps=7, async_on=True, lookahead=3,
+                               hooks=hooks)
+    np.testing.assert_array_equal(stats.losses, ref_stats.losses)
+    np.testing.assert_array_equal(np.asarray(state.table.rows),
+                                  np.asarray(ref_state.table.rows))
+    # the forced interleaving really occurred: commits 2 and 3 were
+    # submitted before window 5's retrieve ran (its repairs were deferred)
+    r5 = events.index(("retrieve", 5))
+    assert ("commit_submit", 2) in events[:r5]
+    assert ("commit_submit", 3) in events[:r5]
+
+
+def test_checkpoint_export_drains_pending_commits():
+    """A mid-run export must reflect every submitted commit: the driver
+    drains the commit queue (under the executor lock) before export, so
+    async checkpoints equal sync checkpoints bit for bit."""
+    def run_with_ckpt(async_on):
+        exported = {}
+        driver_kw = {"async_stages": True} if async_on else {}
+        driver, state, store, _ = make_driver_with_store(
+            "cached", driver_kw=driver_kw)
+        driver.ckpt_every = 2
+        driver.on_checkpoint = \
+            lambda st, n: exported.__setitem__(n, np.asarray(st.table.rows))
+        driver.run(state, 5)
+        return exported
+
+    sync_ck = run_with_ckpt(False)
+    async_ck = run_with_ckpt(True)
+    assert sorted(sync_ck) == sorted(async_ck) == [2, 4]
+    for n in sync_ck:
+        np.testing.assert_array_equal(async_ck[n], sync_ck[n])
+
+
+# ---------------------------------------------------------------------------
+# plumbing: resolution, per-stage timers, satellite fixes
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_async_stages_precedence(monkeypatch):
+    monkeypatch.delenv("REPRO_ASYNC_STAGES", raising=False)
+    assert resolve_async_stages(None) is False
+    assert resolve_async_stages("auto") is False
+    assert resolve_async_stages("on") is True
+    assert resolve_async_stages(True) is True
+    monkeypatch.setenv("REPRO_ASYNC_STAGES", "on")
+    assert resolve_async_stages("auto") is True  # env fills the auto hole
+    assert resolve_async_stages("off") is False  # explicit arg wins
+    with pytest.raises(ValueError, match="async_stages"):
+        resolve_async_stages("sideways")
+
+
+def test_stage_timers_surface_in_metrics_and_summary():
+    for tier, async_on in (("host", False), ("cached", True)):
+        _, stats, store = run_tier(tier, async_on=async_on)
+        m = stats.store_metrics
+        for k in ("plan_ms", "retrieve_ms", "commit_ms", "h2d_ms"):
+            assert k in m and m[k] >= 0.0, (tier, k, m)
+        # real work happened in every offloadable stage
+        assert m["plan_ms"] > 0 and m["retrieve_ms"] > 0 and m["commit_ms"] > 0
+        s = stats.summary()
+        assert s["plan_ms"] == m["plan_ms"]
+        assert s["async_stages"] is async_on
+
+
+def test_serial_mode_ignores_async_stages(monkeypatch):
+    """The serial baseline has no host stages to offload; a blanket env
+    override must not break it."""
+    monkeypatch.setenv("REPRO_ASYNC_STAGES", "on")
+    driver, state, _, _ = make_driver_with_store("device", mode="serial")
+    assert driver.async_stages is False
+    _, stats = driver.run(state, 2)
+    assert len(stats.losses) == 2
+
+
+def test_prefetcher_pop_fallback_fetches_exactly_one():
+    """Satellite: pop() on an empty queue used to fill() uncapped, staging
+    depth-many windows a finite run might never consume."""
+    calls = []
+
+    class OneShotStore:
+        def plan(self, keys):
+            return ("plan", len(calls))
+
+        def retrieve(self, plan):
+            return ("buf", plan)
+
+    def next_batch():
+        calls.append(1)
+        return {"keys": np.zeros(4, np.int32)}
+
+    pf = Prefetcher(next_batch, OneShotStore(), depth=3)
+    entry = pf.pop()  # empty queue -> fallback path
+    assert entry is not None
+    assert len(calls) == 1, "pop() fallback must fetch exactly one window"
+
+
+def test_input_wait_running_sum_matches_list():
+    """Satellite: the drain reads the O(1) running sum; it must stay equal
+    to the full per-step list it replaced."""
+    _, stats, _ = run_tier("host", async_on=True)
+    assert np.isclose(stats.input_wait_total, sum(stats.input_wait_times))
+    assert len(stats.input_wait_times) > 0
+
+
+def test_stage_pool_declines_on_cpu():
+    """StagePool engages only where device_put provably copies; the CPU
+    backend zero-copy aliases numpy sources, so pooling must refuse (the
+    executor then stays on the fresh-allocation contract)."""
+    import jax
+
+    from repro.core.store import StagePool
+    from repro.core.store.host import HostStore
+
+    _, _, store = run_tier("host")
+    assert isinstance(store, HostStore)
+    engaged = store.use_stage_pool()
+    if jax.default_backend() == "cpu":
+        assert engaged is False and store._stage_pool is None
+    # the pool mechanics themselves: reuse + bounded slots
+    pool = StagePool(slots=2)
+    a = pool.take((4, 3), np.float32)
+    a[:] = 7.0
+    pool.give(a)
+    b = pool.take((4, 3), np.float32)
+    assert b is a  # reused, not reallocated
+    c = pool.take((4, 3), np.float32)
+    assert c is not a
+    pool.give(b)
+    pool.give(c)
+    pool.give(np.empty((4, 3), np.float32))  # third: dropped (slots=2)
+    assert len(pool._free[((4, 3), np.dtype(np.float32))]) == 2
+
+
+def test_executor_propagates_worker_errors():
+    """A stage-job failure must surface on the driver thread at pop, not
+    hang the run."""
+    class BoomStore:
+        def route(self, keys):
+            return "window"  # driver-side dispatch half is fine
+
+        def plan_from_window(self, window):
+            raise RuntimeError("boom in plan")  # worker-side half fails
+
+        def retrieve(self, plan):  # pragma: no cover
+            return None
+
+        def commit(self, buffer, plan):  # pragma: no cover
+            return None
+
+    ex = StageExecutor(BoomStore())
+    try:
+        fut = ex.submit_retrieve(np.zeros(2, np.int32), window=0)
+        with pytest.raises(RuntimeError, match="boom in plan"):
+            fut.result(timeout=30)
+    finally:
+        ex.shutdown()
+
+
+def test_commit_failure_unblocks_fenced_retrieves():
+    """A failed commit can never bump the epoch; fenced retrieves must
+    surface the failure instead of waiting forever, and drain() must
+    re-raise it on the driver thread."""
+    class CommitBoomStore:
+        tier = "device"  # skip the pre-lock D2H hoist (string buffers)
+
+        def route(self, keys):
+            return "window"
+
+        def plan_from_window(self, window):
+            return "plan"
+
+        def retrieve(self, plan):  # pragma: no cover
+            return "buf"
+
+        def commit(self, buffer, plan):
+            raise RuntimeError("boom in commit")
+
+    ex = StageExecutor(CommitBoomStore())
+    try:
+        cfut = ex.submit_commit("buf", "plan")
+        with pytest.raises(RuntimeError, match="boom in commit"):
+            cfut.result(timeout=30)
+        # a retrieve fenced past the failed epoch must not hang
+        rfut = ex.submit_retrieve(np.zeros(2, np.int32), window=1)
+        with pytest.raises(RuntimeError, match="commit stage failed"):
+            rfut.result(timeout=30)
+        with pytest.raises(RuntimeError, match="boom in commit"):
+            ex.drain()
+    finally:
+        ex.shutdown()

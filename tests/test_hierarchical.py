@@ -25,7 +25,8 @@ STEPS = 5
 
 
 def make_driver_with_store(store_name, *, steps_fns_out=None, lookahead=1,
-                           mode="nestpipe", donate=True, **store_kw):
+                           mode="nestpipe", donate=True, driver_kw=None,
+                           **store_kw):
     cfg, spec, stream, dense_params, loss_fn = make_setup()
     optimizer = make_optimizer(OptimizerConfig(lr=0.05, grad_clip=0.0))
     np_cfg = NestPipeConfig(fwp_microbatches=N_MICRO, bucket_slack=2.0)
@@ -41,7 +42,8 @@ def make_driver_with_store(store_name, *, steps_fns_out=None, lookahead=1,
     state = init_state(spec, dense_params, optimizer)
     driver = DBPDriver(fns, batch_iter(stream), N_MICRO, mode=mode,
                        store=store, lookahead=lookahead, donate=donate,
-                       device_fields=["keys", "dense", "labels"])
+                       device_fields=["keys", "dense", "labels"],
+                       **(driver_kw or {}))
     return driver, state, store, spec
 
 
@@ -141,6 +143,19 @@ def test_staged_buffers_are_independent():
     b2 = host.stage(keys)
     np.testing.assert_array_equal(np.asarray(b1.rows)[0], before)
     assert float(np.asarray(b2.rows)[0, 0]) == -123.0
+
+
+def test_export_table_is_a_snapshot():
+    """Regression: export_table used to return jnp.asarray(self.rows) — on
+    CPU a zero-copy ALIAS of the live numpy master, so a "checkpointed"
+    table kept mutating as later commits/evictions/flushes landed (visible
+    only under the async executor's concurrency, i.e. flaky)."""
+    spec, fns, table = _tiny_host_store()
+    host = HostStore.from_device_table(spec, table)
+    exported = np.asarray(host.export_table().rows)
+    before = np.array(exported, copy=True)
+    host.rows[:] = -7.0  # commit-like master mutation after the export
+    np.testing.assert_array_equal(exported, before)
 
 
 def test_host_traffic_accounting():
