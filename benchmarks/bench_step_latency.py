@@ -29,6 +29,22 @@ accelerators are the target regime), while an idle 2-core container
 leaves these GIL-bound cells at parity-to-slightly-worse — losses are
 identical either way, which CI asserts.
 
+Mesh axis (``--mesh-devices N``, default ``$REPRO_BENCH_MESH_DEVICES``):
+the same dlrm-cached loop run SPMD on an N-device (1, N) mesh, where
+host/cached select the SHARDED per-host master tier
+(``core/store/sharded.py``). Three cells per rep — the mesh device tier
+and the two sharded variants — interleaved within each rep with
+min-of-reps like every other store cell. The mesh cells run in a
+SUBPROCESS with their own forced host-platform device count: splitting a
+small CI box into N XLA devices slows every single-device cell (measured
+3.2x on the nestpipe cell), so forcing it process-wide would break the
+trajectory's comparability across PRs — exactly the benches-needing-a-
+different-device-count rule benchmarks/run.py documents. The sharded
+tiers are bit-exact with the same-mesh device run, so CI asserts cell
+presence and identical losses across the three cells — NEVER a
+throughput ratio (the CPU simulation round-trips shard buffers through
+numpy; real accelerators are the target regime).
+
 ``REPRO_BENCH_STEPS`` / ``REPRO_BENCH_BATCH`` / ``REPRO_BENCH_REPS``
 shrink the run for CI's perf-smoke job (trajectory-only, no thresholds).
 """
@@ -40,7 +56,7 @@ from typing import Dict, List, Optional
 
 from repro.core.store import STAGE_TIMER_KEYS, STORES
 
-from .common import emit, run_driver
+from .common import emit, make_bench_mesh, run_driver
 
 MODES = [("torchrec_serial", "serial"), ("uniemb_async", "async"),
          ("nestpipe", "nestpipe")]
@@ -82,6 +98,60 @@ def _store_cells(steps: int, global_batch: int, reps: int,
     return best
 
 
+_MESH_MARKER = "MESH_CELLS_JSON:"
+
+
+def _mesh_worker(mesh_devices: int, steps: int, global_batch: int,
+                 reps: int) -> None:
+    """Subprocess body: device tier + the two sharded variants on an
+    N-device mesh, interleaved within each rep, min-of-reps. Emits the
+    cells as one marked JSON line for the parent to re-emit."""
+    import json
+
+    mesh = make_bench_mesh(mesh_devices)
+    best: Dict[str, dict] = {}
+    for _rep in range(reps):
+        for store in ("device", "host", "cached"):
+            _, stats, _ = run_driver(
+                CACHED_ARCH, mode="nestpipe", steps=steps, n_micro=4,
+                global_batch=global_batch, store=store, mesh=mesh)
+            s = stats.summary()
+            cell = "mesh_device" if store == "device" else f"sharded_{store}"
+            if cell not in best or s["mean_step_s"] < best[cell]["mean_step_s"]:
+                best[cell] = s
+    print(_MESH_MARKER + json.dumps(best))
+
+
+def _mesh_cells(steps: int, global_batch: int, reps: int,
+                mesh_devices: int) -> Dict[str, dict]:
+    """Run :func:`_mesh_worker` in a subprocess whose XLA_FLAGS force the
+    simulated device count (must be set before JAX initializes, and must
+    NOT leak into this process's single-device cells — module doc)."""
+    import json
+    import subprocess
+    import sys
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={mesh_devices}").strip()
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_step_latency",
+         "--mesh-worker", str(mesh_devices), str(steps), str(global_batch),
+         str(reps)],
+        capture_output=True, text=True, env=env, cwd=root, timeout=3600,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"mesh-cell subprocess failed:\n{proc.stdout}\n{proc.stderr}")
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith(_MESH_MARKER)][-1]
+    return json.loads(line[len(_MESH_MARKER):])
+
+
 def main(argv: Optional[List[str]] = None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--store", action="append", choices=STORES, default=None,
@@ -95,7 +165,17 @@ def main(argv: Optional[List[str]] = None):
                    default="both",
                    help="async host-stage executor axis for the store cells "
                         "(both = interleaved sync + async twins)")
-    args = p.parse_args(argv if argv is not None else [])
+    p.add_argument("--mesh-devices", type=int,
+                   default=int(os.environ.get("REPRO_BENCH_MESH_DEVICES",
+                                              "0")),
+                   help="N>0 adds sharded-store cells on an N-device mesh "
+                        "(run in a subprocess that forces the simulated "
+                        "device count; this process stays single-device)")
+    argv = argv if argv is not None else []
+    if argv[:1] == ["--mesh-worker"]:  # subprocess entry (see _mesh_cells)
+        _mesh_worker(*(int(a) for a in argv[1:5]))
+        return
+    args = p.parse_args(argv)
     stores = args.store or list(STORES)
     async_axis = {"both": [False, True], "on": [True],
                   "off": [False]}[args.async_stages]
@@ -140,6 +220,9 @@ def main(argv: Optional[List[str]] = None):
     # min-of-reps per cell
     c_batch = global_batch * 4
     best = _store_cells(steps, c_batch, max(args.reps, 1), stores, async_axis)
+    if args.mesh_devices > 0:
+        best.update(_mesh_cells(steps, c_batch, max(args.reps, 1),
+                                args.mesh_devices))
     for cell, s in best.items():
         derived = f"final_loss={s['final_loss']:.4f}"
         if "cache_hit_rate" in s:
@@ -147,9 +230,12 @@ def main(argv: Optional[List[str]] = None):
                         f";hit_rate_steady={s.get('cache_hit_rate_steady', 0):.3f}")
         if "h2d_bytes" in s:
             derived += f";h2d_bytes={int(s['h2d_bytes'])}"
+        if "store_shards" in s:
+            derived += f";shards={s['store_shards']}"
         breakdown = _stage_breakdown(s)
         if breakdown:
             derived += ";" + breakdown
+        is_mesh = cell.startswith(("mesh_", "sharded_"))
         emit(
             f"table2_step_latency_store_{cell}",
             s["mean_step_s"] * 1e6,
@@ -158,6 +244,7 @@ def main(argv: Optional[List[str]] = None):
                     "global_batch": c_batch, "n_micro": 4,
                     "store": cell.replace("_async", ""),
                     "async_stages": cell.endswith("_async"),
+                    "mesh_devices": args.mesh_devices if is_mesh else 0,
                     "reps": args.reps, "reduced": True},
         )
 

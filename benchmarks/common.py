@@ -40,13 +40,36 @@ def run_driver(arch: str, *, mode: str, steps: int = 10, n_micro: int = 4,
                global_batch: int = 32, seq_len: int = 32,
                clustering: str = "keycentric", seed: int = 0,
                unroll: bool = True, store: str = "auto",
-               async_stages: str = "auto"):
-    """Run the real host pipeline on a reduced config; return (state, stats, wl)."""
+               async_stages: str = "auto", mesh=None):
+    """Run the real host pipeline on a reduced config; return (state, stats, wl).
+
+    ``mesh`` runs the SAME pipeline SPMD (simulated devices under
+    ``--xla_force_host_platform_device_count``) — host/cached stores then
+    select the sharded per-host master tier (core/store/sharded.py).
+    """
     sess = Session.from_arch(
         arch, mode=mode, reduced=True, global_batch=global_batch,
         seq_len=seq_len, n_micro=n_micro, clustering=clustering,
         unroll=unroll, t_chunk=32, lr=1e-3, seed=seed, store=store,
-        async_stages=async_stages,
+        async_stages=async_stages, mesh=mesh,
     )
     report = sess.bench(steps)
     return report.state, report.stats, sess.workload
+
+
+def make_bench_mesh(n_devices: int):
+    """(1, N) mesh over ("data", "model") — matches the recsys archs'
+    default parallelism (batch AND sparse over all workers)."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    have = len(jax.devices())
+    if have < n_devices:
+        raise RuntimeError(
+            f"--mesh-devices {n_devices} needs {n_devices} devices, found "
+            f"{have}; the mesh cells must run in a process whose XLA_FLAGS "
+            "force the host platform device count before JAX initializes "
+            "(bench_step_latency._mesh_cells spawns one)")
+    return Mesh(np.asarray(jax.devices()[:n_devices]).reshape(1, n_devices),
+                ("data", "model"))

@@ -2,11 +2,17 @@
 
 Prints ``name,us_per_call,derived`` CSV. CPU-scale real measurements for
 the host-pipeline effects; production-mesh numbers derive from dry-run
-artifacts (subprocessed where a different device count is needed).
+artifacts (subprocessed where a different device count is needed — the
+sharded-store mesh cells in ``bench_step_latency`` follow the same rule:
+``REPRO_BENCH_MESH_DEVICES=N`` makes them run in a child process with N
+forced devices while THIS process stays single-device, so the
+long-running trajectory cells remain comparable across PRs).
 
     PYTHONPATH=src python -m benchmarks.run [--only fig9,table2]
     PYTHONPATH=src python -m benchmarks.run --only table2 \\
         --json BENCH_step_latency.json
+    REPRO_BENCH_MESH_DEVICES=4 PYTHONPATH=src python -m benchmarks.run \\
+        --only table2 --json BENCH_step_latency.json
 
 ``--json PATH`` additionally writes every emitted measurement as a
 machine-readable ``{bench, us_per_call, derived, config}`` record so the

@@ -147,6 +147,10 @@ class Session:
         ``store`` picks the embedding storage tier for the pipelined modes
         (``"device" | "host" | "cached"``; ``"auto"`` resolves
         ``$REPRO_STORE`` then the device tier — see ``repro.core.store``).
+        With a ``mesh``, host/cached select the SHARDED tier: the DRAM
+        master row-shards per host over the workload's sparse axes, each
+        shard behind its own local host/cached slice (same names; the
+        summary reports ``store_shards``).
         ``cache_rows`` sizes the CachedStore HBM hot-cache (0 = auto) and
         ``prefetch_ahead`` sets the DBP retrieval lookahead depth k.
         ``async_stages`` moves the host-side plan/retrieve/commit stages

@@ -77,6 +77,12 @@ class DriverStrategy:
         driver_kw.setdefault("lookahead", workload.npcfg.prefetch_ahead)
         driver_kw.setdefault("async_stages", workload.npcfg.async_stages)
         driver_kw.setdefault("stage_workers", workload.npcfg.stage_workers)
+        if workload.mesh is not None:
+            # stage batches straight onto the mesh layout the jitted steps
+            # expect (a default-device put would funnel every H2D through
+            # device 0 and make XLA reshard per step)
+            driver_kw.setdefault("batch_shardings",
+                                 workload.batch_shardings())
         if "store" not in driver_kw:
             npcfg = workload.npcfg
             # The serial baseline is device-resident by definition: an
@@ -95,6 +101,7 @@ class DriverStrategy:
             driver_kw["store"] = build_store(
                 name, workload.spec, fns,
                 donate=driver_kw["donate"], mesh=workload.mesh,
+                sparse_axes=workload.sparse_axes,
                 cache_rows=npcfg.cache_rows, cache_admit=npcfg.cache_admit,
                 kernel_backend=npcfg.kernel_backend,
             )

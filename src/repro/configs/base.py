@@ -242,10 +242,16 @@ class NestPipeConfig:
     kernel_backend: str = "auto"
     # Embedding storage tier: "auto" resolves $REPRO_STORE then "device"
     # (mirrors kernel_backend); "device" | "host" | "cached" force one
-    # (see core/store for the EmbeddingStore protocol).
+    # (see core/store for the EmbeddingStore protocol). On a mesh the
+    # host/cached tiers run SHARDED: the DRAM master row-shards per host
+    # over the engine's sparse axes and each shard keeps its own local
+    # host/cached slice (core/store/sharded.py) — same names, no extra knob.
     store: str = "auto"
     # CachedStore knobs: HBM hot-cache capacity in rows (0 = padded_rows/8)
     # and the access count a key needs before it is admitted to the cache.
+    # On a mesh, cache_rows is the GLOBAL budget, split evenly across the
+    # sharded tier's per-host cache slices (each slice keeps the tier's
+    # 8-row granularity, so tiny budgets round up to 8 rows per shard).
     cache_rows: int = 0
     cache_admit: int = 1
     # DBP lookahead depth k: the Prefetcher issues plan+retrieve for step

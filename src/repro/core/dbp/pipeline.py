@@ -14,8 +14,12 @@ Orchestrates the inter-batch pipeline over a batch stream. Six stages, and
 
 Storage is a seam, not a branch: the driver talks to ONE
 :class:`~repro.core.store.EmbeddingStore` — ``plan`` / ``retrieve`` /
-``commit`` — and the device-HBM, host-DRAM and HBM-hot-cache tiers all ride
-the same loop (core/store). A :class:`~repro.core.store.Prefetcher` keeps
+``commit`` — and the device-HBM, host-DRAM, HBM-hot-cache and mesh-sharded
+tiers all ride the same loop (core/store). On a mesh the sharded tier's
+``commit`` applies every shard's scatter for the window atomically under
+the executor's master lock — the epoch fence keeps counting whole-window
+commits, and the store's per-shard ledger (``commits_applied``) records
+the per-host applications the single epoch stands in for. A :class:`~repro.core.store.Prefetcher` keeps
 ``lookahead`` batches routed+retrieved ahead of the window compute, the
 intra-driver analogue of DBP's retrieval overlap; every in-flight buffer is
 re-synced at every commit so lookahead never trades exactness (Prop. 1
@@ -148,6 +152,8 @@ class PipelineStats:
         for k in ("h2d_bytes", "d2h_bytes") + STAGE_TIMER_KEYS:
             if k in self.store_metrics:
                 out[k] = self.store_metrics[k]
+        if "shards" in self.store_metrics:  # sharded tier: per-host masters
+            out["store_shards"] = int(self.store_metrics["shards"])
         out.update(self._cache_rates())
         return out
 

@@ -6,8 +6,9 @@ from .engine import (
     GradPacket,
     LookupPlan,
     WindowPlan,
+    buffer_pspecs,
 )
-from .routing import SENTINEL
+from .routing import SENTINEL, owner_of
 from .table import (
     EmbeddingTableState,
     MegaTableSpec,

@@ -82,6 +82,15 @@ class DualBuffer(NamedTuple):
     accum: jax.Array  # (K,) rowwise adagrad state
 
 
+def buffer_pspecs(sparse_axes: Tuple[str, ...]) -> DualBuffer:
+    """PartitionSpecs of a :class:`DualBuffer` on a mesh: every leaf is
+    row-partitioned over the sparse axes (shard s's slice is the key/row
+    set it OWNS under :func:`routing.owner_of` — the layout contract the
+    sharded host tier relies on to slice per-owner key lists)."""
+    axes = sparse_axes if len(sparse_axes) > 1 else sparse_axes[0]
+    return DualBuffer(keys=P(axes), rows=P(axes, None), accum=P(axes))
+
+
 @dataclass(frozen=True)
 class EngineDims:
     l_local: int  # flattened local positions per micro-batch
@@ -209,8 +218,7 @@ class EmbeddingEngine:
 
     def _buffer_pspecs(self) -> DualBuffer:
         # Buffers vary per sparse shard; replicated over psum axes after union.
-        axes = self.sparse_axes if len(self.sparse_axes) > 1 else self.sparse_axes[0]
-        return DualBuffer(keys=P(axes), rows=P(axes, None), accum=P(axes))
+        return buffer_pspecs(self.sparse_axes)
 
     def _plan_pspecs(self) -> LookupPlan:
         s = self._local_spec()

@@ -18,6 +18,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 SENTINEL = jnp.iinfo(jnp.int32).max
 
@@ -98,6 +99,24 @@ def fixed_unique(keys: jax.Array, u_max: int) -> UniqueResult:
     )
 
 
+def owner_of(keys: jax.Array, rows_per_shard: int, num_shards: int) -> jax.Array:
+    """THE ownership hash: shard that owns each (scrambled) key.
+
+    ``owner(k) = k // rows_per_shard`` (clamped to the last shard for the
+    padding tail), sentinels -> the virtual shard ``num_shards``. Every
+    owner-partitioned structure in the system — the All2All send buckets
+    here, the per-shard slices of ``WindowPlan.buffer_keys``, and the
+    ``core.store.ShardedStore`` DRAM-master shards — uses this one function.
+    Host callers pass numpy arrays and STAY on numpy (the sharded tier
+    calls this on its retrieve/commit path; bouncing host keys through a
+    device round trip there would be exactly the host-stage latency the
+    async executor works to hide).
+    """
+    xp = jnp if isinstance(keys, jax.Array) else np
+    owner = xp.minimum(keys // rows_per_shard, num_shards - 1)
+    return xp.where(keys != SENTINEL, owner, num_shards)
+
+
 def bucket_by_owner_window(
     unique_keys: jax.Array, num_shards: int, capacity: int, rows_per_shard: int
 ) -> BucketResult:
@@ -110,8 +129,7 @@ def bucket_by_owner_window(
     """
     n, u_max = unique_keys.shape
     valid = unique_keys != SENTINEL
-    owner = jnp.minimum(unique_keys // rows_per_shard, num_shards - 1)
-    owner = jnp.where(valid, owner, num_shards)  # sentinels -> virtual shard S
+    owner = owner_of(unique_keys, rows_per_shard, num_shards)
 
     # group start of each owner within each sorted row
     shard_ids = jnp.arange(num_shards + 1)

@@ -1,12 +1,25 @@
 """Tiered embedding storage behind one ``EmbeddingStore`` protocol.
 
 See ``base.py`` for the contract and the tier overview; ``device.py`` /
-``host.py`` / ``cached.py`` for the three tiers; ``prefetch.py`` for the
-DBP-style lookahead prefetcher the driver composes on top; and
-``async_exec.py`` for the StageExecutor that moves plan/retrieve/commit
-onto background worker threads (epoch-fenced, bit-exact).
+``host.py`` / ``cached.py`` for the three single-process tiers;
+``sharded.py`` for the mesh tier (``build_store`` routes host/cached there
+whenever a mesh is given); ``prefetch.py`` for the DBP-style lookahead
+prefetcher the driver composes on top; and ``async_exec.py`` for the
+StageExecutor that moves plan/retrieve/commit onto background worker
+threads (epoch-fenced, bit-exact).
+
+The sharded tier's plan step is an OWNER EXCHANGE: the engine's fused key
+All2All (DBP stage 3, ``route_window``) already delivers every shard the
+union key list it owns under ``routing.owner_of``, laid out as shard-major
+slices of ``WindowPlan.buffer_keys`` (``embedding.engine.buffer_pspecs``).
+``ShardedStore.plan`` pulls that list D2H once, slices it per owner, and
+each shard's local host/cached tier serves exactly its slice — retrieval
+gathers locally-owned rows (plus, via the exchange, the rows remote
+requesters asked this owner for), and per-shard hot-cache admission /
+eviction never crosses a host boundary.
 """
 from .async_exec import AsyncPrefetcher, StageExecutor, resolve_async_stages
+from .sharded import ShardedStore, local_shard_spec
 from .base import (
     STAGE_TIMER_KEYS,
     STORES,
@@ -36,6 +49,8 @@ __all__ = [
     "AsyncPrefetcher",
     "StageExecutor",
     "resolve_async_stages",
+    "ShardedStore",
+    "local_shard_spec",
     "CachedStore",
     "DeviceStore",
     "HostStore",

@@ -77,6 +77,14 @@ simply get admitted a window or two later, so every cached row is exactly
 valued at all times (cache PLACEMENT may differ from the synchronous
 schedule under thread timing; row values and exports never do).
 
+The mesh-sharded tier (``core/store/sharded.py``) rides the executor
+unchanged: its ``commit`` applies one window's scatter on EVERY shard
+under the master lock, so the epoch fence counts whole-window commits (a
+retrieve can never observe a half-committed window across shards) while
+the store's per-shard ledger records the per-host applications; the
+admission block above arrives as the global pending key list and the
+store splits it per owner before handing it to each shard's cached slice.
+
 A single ``lock`` serializes every master/cache-directory access (retrieve
 bodies, commit bodies, and mid-run exports) — the overlap this module buys
 is host-work vs DEVICE compute, never torn host state. With the default

@@ -25,6 +25,11 @@ Tiers
 ``CachedStore``  ``HostStore`` plus a frequency-admitted HBM hot-cache:
                  hit rows are served from device (kernels/dispatch), only
                  misses are staged H2D, and evictions write back to DRAM.
+``ShardedStore`` the host/cached tiers on a mesh: the DRAM master
+                 row-sharded per host over ``sparse_axes``, each shard's
+                 slice behind its own local host/cached tier (selected
+                 automatically by :func:`build_store` when ``mesh`` is
+                 given — the tier NAMES stay "host"/"cached").
 
 Because the paper's consistency argument lives entirely in the buffer
 domain (sync happens between HBM buffers), swapping the master tier is
@@ -220,23 +225,35 @@ def build_store(
     *,
     donate: bool = True,
     mesh: Any = None,
+    sparse_axes: tuple = (),
     cache_rows: int = 0,
     cache_admit: int = 1,
     kernel_backend: Optional[str] = None,
 ) -> EmbeddingStore:
-    """Construct the store for a resolved tier name (see :func:`resolve_store`)."""
+    """Construct the store for a resolved tier name (see :func:`resolve_store`).
+
+    On a mesh the host/cached tiers route to :class:`ShardedStore`: the
+    DRAM master is row-sharded per host over ``sparse_axes`` (the engine's
+    ownership hashing) and each shard wraps its slice in its own local
+    host/cached tier. Genuinely unsupported combos stay loud errors — the
+    serial driver rejects every non-device store (DBPDriver / strategies),
+    and a mesh whose sparse axes don't match the spec's shard count fails
+    in the ShardedStore constructor.
+    """
     from .cached import CachedStore
     from .device import DeviceStore
     from .host import HostStore
+    from .sharded import ShardedStore
 
     tier = resolve_store(name)
     if tier == "device":
         return DeviceStore(fns, donate=donate)
     if mesh is not None:
-        raise ValueError(
-            f"store={tier!r} runs the single-process host-DRAM master; the "
-            "multi-host sharded store is a roadmap item — use store='device' "
-            "on a mesh")
+        return ShardedStore(
+            spec, fns, mesh, sparse_axes, local_tier=tier,
+            cache_rows=cache_rows, cache_admit=cache_admit,
+            donate=donate, kernel_backend=kernel_backend,
+        )
     if tier == "host":
         return HostStore(spec, fns)
     return CachedStore(

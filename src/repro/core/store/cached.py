@@ -325,8 +325,10 @@ class CachedStore(HostStore):
 
     def ingest(self, table: EmbeddingTableState) -> EmbeddingTableState:
         out = super().ingest(table)
+        # .dtype directly: jax and numpy tables both carry it, and a
+        # jnp.asarray here would copy a numpy master to device just to ask
         self.cache_rows = jnp.zeros((self.capacity, self.spec.dim),
-                                    jnp.asarray(table.rows).dtype)
+                                    table.rows.dtype)
         self.cache_accum = jnp.zeros((self.capacity,), jnp.float32)
         self._slot_of_key.fill(-1)
         self._key_of_slot.fill(-1)

@@ -168,6 +168,37 @@ class HostStore:
 
     # -- DBP stage 4a: host-side gather + async H2D ----------------------
 
+    def gather_host(self, buffer_keys: np.ndarray,
+                    out_rows: Optional[np.ndarray] = None,
+                    out_accum: Optional[np.ndarray] = None):
+        """Host half of the retrieval stage: gather master rows + adagrad
+        state for (sorted, sentinel-padded) ``buffer_keys`` into numpy
+        arrays (sentinel slots zeroed). No device work, no counters — the
+        piece :class:`~repro.core.store.sharded.ShardedStore` composes per
+        shard before its ONE global staging put. ``out_*`` reuse buffers
+        (the pooled path); fresh arrays are allocated when omitted."""
+        k = buffer_keys.shape[0]
+        rows = out_rows if out_rows is not None \
+            else np.empty((k, self.spec.dim), self.rows.dtype)
+        accum = out_accum if out_accum is not None \
+            else np.empty((k,), np.float32)
+        valid = buffer_keys != _SENTINEL
+        idx = np.where(valid, buffer_keys, 0)
+        np.take(self.rows, idx, axis=0, out=rows)
+        np.take(self.accum, idx, axis=0, out=accum)
+        rows[~valid] = 0
+        accum[~valid] = 0
+        return rows, accum
+
+    def scatter_host(self, keys: np.ndarray, rows: np.ndarray,
+                     accum: np.ndarray) -> None:
+        """Host half of the commit epilogue: scatter updated buffer rows
+        into the numpy master (sentinel slots dropped). Counter-free for
+        the same reason as :meth:`gather_host`."""
+        valid = keys != _SENTINEL
+        self.rows[keys[valid]] = rows[valid]
+        self.accum[keys[valid]] = accum[valid]
+
     def stage(self, buffer_keys: np.ndarray) -> DualBuffer:
         """Gather master rows for (sorted, sentinel-padded) ``buffer_keys``
         and stage them to the device as a fresh prefetch buffer.
@@ -194,12 +225,8 @@ class HostStore:
         else:
             stage_rows = np.zeros((k, self.spec.dim), self.rows.dtype)
             stage_accum = np.zeros((k,), np.float32)
-        valid = buffer_keys != _SENTINEL
-        idx = np.where(valid, buffer_keys, 0)
-        np.take(self.rows, idx, axis=0, out=stage_rows)
-        np.take(self.accum, idx, axis=0, out=stage_accum)
-        stage_rows[~valid] = 0
-        stage_accum[~valid] = 0
+        self.gather_host(buffer_keys, out_rows=stage_rows,
+                         out_accum=stage_accum)
         self.h2d_bytes += stage_rows.nbytes + stage_accum.nbytes
         put = (lambda x: jax.device_put(x, self.device_sharding)) \
             if self.device_sharding is not None else jax.device_put
@@ -232,9 +259,7 @@ class HostStore:
             rows = np.asarray(jax.device_get(buffer.rows))
             accum = np.asarray(jax.device_get(buffer.accum))
             self.d2h_bytes += rows.nbytes + accum.nbytes
-            valid = keys != _SENTINEL
-            self.rows[keys[valid]] = rows[valid]
-            self.accum[keys[valid]] = accum[valid]
+            self.scatter_host(keys, rows, accum)
 
     # -- metrics / introspection -----------------------------------------
 

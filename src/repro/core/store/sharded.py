@@ -1,0 +1,352 @@
+"""ShardedStore: the DRAM master row-sharded per host over ``sparse_axes``.
+
+The paper's O(1k)-worker setting keeps embedding masters DECENTRALIZED:
+every host owns the DRAM rows of its devices' table shards, and the key
+All2All (DBP stage 3) is what moves requests to owners — there is no
+parameter server. This tier brings the host/cached DRAM masters onto a
+mesh with exactly that layout (BagPipe's per-worker cache + lookahead and
+Meta's 2D sparse placement compose the same way — see PAPERS.md):
+
+owner exchange (stage 3)
+    ``plan`` dispatches the engine's fused ``route_window`` jit — the key
+    All2All across ``sparse_axes`` IS the per-owner key-list exchange: the
+    resulting ``WindowPlan.buffer_keys`` is row-partitioned over the sparse
+    axes (``embedding.engine.buffer_pspecs``) and shard ``s``'s slice holds
+    precisely the sorted union of keys ``s`` owns under
+    ``routing.owner_of`` (``k // rows_per_shard``). ``plan_from_window``
+    pulls that global key list D2H once and slices it per owner.
+local tiers behind the same protocol (stage 4a / 6)
+    Each shard wraps its DRAM slice in its own single-shard
+    :class:`~repro.core.store.HostStore` — or, for the cached variant, its
+    own :class:`~repro.core.store.CachedStore` hot-cache slice, so
+    admission, eviction and frequency state stay strictly per-host (a hot
+    key on shard 2 can never evict shard 0's rows). Sub-stores speak LOCAL
+    row ids (``k - s * rows_per_shard``); the ShardedStore is only the
+    owner-exchange coordinator on top.
+    ``retrieve`` gathers every shard's owned rows from its local tier and
+    issues ONE sharded ``device_put`` per buffer leaf (each shard's slice
+    lands on its own devices — the multi-host H2D, simulated in-process).
+    ``commit`` pulls the global buffer D2H, slices per owner and applies
+    each shard's scatter through its local tier, bumping that shard's
+    commit ledger (``commits_applied``): under the async executor ONE
+    window commit advances every shard atomically under the master lock,
+    so the epoch fence counts whole windows while the ledger exposes the
+    per-shard application the fence is standing in for on a real cluster.
+
+Value-transparency is inherited: local tiers only decide where a shard's
+bytes live, and the owner partition is a disjoint cover of the key space,
+so training through the sharded tiers replays the device-tier run on the
+same mesh bit for bit (tests/scenarios/store_multidev.py: 1/2/4 simulated
+devices, lookahead x async_stages x checkpoint-restore-at-a-different-
+shard-count).
+
+Simulation note (single process, ``--xla_force_host_platform_device_count``):
+the per-shard cached slices assemble their hit+miss buffers on device and
+this coordinator round-trips them through numpy to build the one global
+sharded buffer — a real deployment would assemble per-device. Transfer
+counters therefore follow the MODELED traffic (host variant: the full
+staged buffer; cached variant: only the misses its slices stage and the
+cold rows they pull), never the reassembly, so accounting is comparable
+across shard counts and to the single-process tiers.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from ..embedding.engine import DualBuffer, buffer_pspecs
+from ..embedding.routing import owner_of
+from ..embedding.table import EmbeddingTableState, MegaTableSpec, table_pspecs
+from .base import FetchPlan, StageTimers, placeholder_table
+from .cached import CachedStore
+from .host import _SENTINEL, HostStore
+
+LOCAL_TIERS = ("host", "cached")
+
+
+def local_shard_spec(spec: MegaTableSpec) -> MegaTableSpec:
+    """Spec of ONE shard's slice in local row-id space [0, rows_per_shard):
+    what a per-host sub-store sees. No scrambling — keys arriving here are
+    already scrambled global ids minus the shard's row offset."""
+    return MegaTableSpec(
+        table_names=("shard",),
+        table_offsets=(0,),
+        table_vocabs=(spec.rows_per_shard,),
+        dim=spec.dim,
+        padded_rows=spec.rows_per_shard,
+        num_shards=1,
+        mix_mult=1,
+        mix_add=0,
+    )
+
+
+class ShardedStore:
+    """Row-sharded DRAM master tier over per-host local tiers (module doc)."""
+
+    def __init__(
+        self,
+        spec: MegaTableSpec,
+        fns,  # train.step.StepFns (route_window); None for direct test use
+        mesh: Mesh,
+        sparse_axes,
+        *,
+        local_tier: str = "host",
+        cache_rows: int = 0,
+        cache_admit: int = 1,
+        donate: bool = True,
+        kernel_backend: Optional[str] = None,
+    ):
+        if mesh is None:
+            raise ValueError("ShardedStore needs a mesh; use HostStore/"
+                             "CachedStore for the single-process master")
+        if local_tier not in LOCAL_TIERS:
+            raise ValueError(f"unknown local tier {local_tier!r}; expected "
+                             f"one of {LOCAL_TIERS}")
+        self.sparse_axes = tuple(sparse_axes)
+        if not self.sparse_axes:
+            raise ValueError("ShardedStore needs the engine's sparse_axes "
+                             "to place shards on the mesh")
+        num_shards = 1
+        for a in self.sparse_axes:
+            num_shards *= mesh.shape[a]
+        if spec.num_shards != num_shards:
+            raise ValueError(
+                f"spec built for {spec.num_shards} shards but mesh sparse "
+                f"axes {self.sparse_axes} give {num_shards} — resolve the "
+                "workload with the same mesh the store runs on")
+        self.spec = spec
+        self.mesh = mesh
+        self.num_shards = num_shards
+        self.local_tier = local_tier
+        self.tier = f"sharded-{local_tier}"
+        self._route = jax.jit(fns.route_window) if fns is not None else None
+
+        ns = lambda p: NamedSharding(mesh, p)  # noqa: E731
+        b_specs = buffer_pspecs(self.sparse_axes)
+        self._buf_sh = DualBuffer(*(ns(p) for p in b_specs))
+        t_specs = table_pspecs(self.sparse_axes)
+        self._table_sh = EmbeddingTableState(*(ns(p) for p in t_specs))
+
+        lspec = local_shard_spec(spec)
+        rps = spec.rows_per_shard
+        zeros = lambda: np.zeros((rps, spec.dim), np.float32)  # noqa: E731
+        if local_tier == "host":
+            self.shards: List[HostStore] = [
+                HostStore(lspec, None, rows=zeros(),
+                          accum=np.zeros((rps,), np.float32))
+                for _ in range(num_shards)
+            ]
+        else:
+            # global budget split evenly; a tiny explicit budget must not
+            # round to 0 per shard (CachedStore treats <=0 as AUTO-size,
+            # which would silently blow the requested budget up S-fold)
+            per_shard = max(cache_rows // num_shards, 1) if cache_rows else 0
+            self.shards = [
+                CachedStore(lspec, None, capacity=per_shard,
+                            admit_threshold=cache_admit, donate=donate,
+                            kernel_backend=kernel_backend, rows=zeros(),
+                            accum=np.zeros((rps,), np.float32))
+                for _ in range(num_shards)
+            ]
+        self.owns_master = False
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
+        self.commits_applied = [0] * num_shards
+        self.stage_timers = StageTimers()
+
+    # -- owner partition --------------------------------------------------
+
+    def _local_slices(self, host_keys: np.ndarray) -> List[np.ndarray]:
+        """Slice the global buffer key list per owner and rebase to local
+        row ids. The engine's buffer layout guarantees slice ``s`` holds
+        exactly the keys ``routing.owner_of`` assigns to ``s`` — the
+        contract everything here stands on, so a violation raises loudly
+        (never an ``assert``: rebasing a foreign key into another shard's
+        local id space would corrupt the master silently under ``-O``)."""
+        total = host_keys.shape[0]
+        s_count = self.num_shards
+        if total % s_count:
+            raise ValueError(
+                f"buffer key list of {total} does not split over "
+                f"{s_count} shards")
+        k = total // s_count
+        rps = self.spec.rows_per_shard
+        out = []
+        for s in range(s_count):
+            hk = host_keys[s * k:(s + 1) * k]
+            valid = hk != _SENTINEL
+            owned = hk[valid]
+            if owned.size and not bool(
+                    (np.asarray(owner_of(owned, rps, s_count)) == s).all()):
+                raise ValueError(
+                    f"shard {s} buffer slice holds keys it does not own — "
+                    "buffer layout violates the owner partition")
+            out.append(np.where(valid, hk - s * rps,
+                                _SENTINEL).astype(np.int32))
+        return out
+
+    # -- DBP stage 3: owner exchange --------------------------------------
+
+    def route(self, keys):
+        """Stage-3 routing DISPATCH (driver thread; see HostStore.route).
+        The key All2All inside ``route_window`` is the per-owner key-list
+        exchange — by the time ``buffer_keys`` exists, every shard's slice
+        is its owned union."""
+        assert self._route is not None, "ShardedStore built without step fns"
+        with self.stage_timers.timed("plan_ms"):
+            return self._route(keys)
+
+    def plan_from_window(self, window) -> FetchPlan:
+        with self.stage_timers.timed("plan_ms"):
+            host_keys = np.asarray(jax.device_get(window.buffer_keys))
+        return FetchPlan(window, host_keys)
+
+    def plan(self, keys) -> FetchPlan:
+        return self.plan_from_window(self.route(keys))
+
+    # -- DBP stage 4a: per-shard gather + sharded H2D ----------------------
+
+    def retrieve(self, plan: FetchPlan) -> DualBuffer:
+        with self.stage_timers.timed("retrieve_ms"):
+            return self._retrieve_body(plan)
+
+    def _retrieve_body(self, plan: FetchPlan) -> DualBuffer:
+        locals_ = self._local_slices(plan.host_keys)
+        rows_parts, accum_parts = [], []
+        for s, lk in enumerate(locals_):
+            sub = self.shards[s]
+            if self.local_tier == "host":
+                rows_s, accum_s = sub.gather_host(lk)
+            else:
+                # the cached slice serves hits from its device cache and
+                # stages only misses (admission reuses the staged rows);
+                # the numpy round-trip is the simulation's reassembly
+                sub_buf = sub.retrieve(FetchPlan(None, lk))
+                rows_s = np.asarray(jax.device_get(sub_buf.rows))
+                accum_s = np.asarray(jax.device_get(sub_buf.accum))
+            rows_parts.append(rows_s)
+            accum_parts.append(accum_s)
+        rows = np.concatenate(rows_parts, axis=0)
+        accum = np.concatenate(accum_parts, axis=0)
+        if self.local_tier == "host":
+            # modeled H2D: the full staged buffer (HostStore accounting);
+            # the cached slices already counted their miss staging
+            self.h2d_bytes += rows.nbytes + accum.nbytes
+        with self.stage_timers.timed("h2d_ms"):
+            # ONE sharded put per leaf: shard s's slice lands on shard s's
+            # devices — the per-host H2D. Buffer owns its keys array (the
+            # same donation contract as HostStore.retrieve).
+            return DualBuffer(
+                keys=jax.device_put(plan.host_keys.astype(np.int32),
+                                    self._buf_sh.keys),
+                rows=jax.device_put(rows, self._buf_sh.rows),
+                accum=jax.device_put(accum, self._buf_sh.accum),
+            )
+
+    # -- DBP epilogue: per-shard commit ------------------------------------
+
+    def commit(self, buffer: DualBuffer, plan: Optional[FetchPlan] = None) -> None:
+        with self.stage_timers.timed("commit_ms"):
+            keys = plan.host_keys if plan is not None \
+                else np.asarray(jax.device_get(buffer.keys))
+            rows = np.asarray(jax.device_get(buffer.rows))
+            accum = np.asarray(jax.device_get(buffer.accum))
+            if self.local_tier == "host":
+                self.d2h_bytes += rows.nbytes + accum.nbytes
+            k = keys.shape[0] // self.num_shards
+            for s, lk in enumerate(self._local_slices(keys)):
+                sub = self.shards[s]
+                rows_s = rows[s * k:(s + 1) * k]
+                accum_s = accum[s * k:(s + 1) * k]
+                if self.local_tier == "host":
+                    sub.scatter_host(lk, rows_s, accum_s)
+                else:
+                    # hot rows scatter into the slice's device cache, only
+                    # cold rows reach its DRAM (its d2h counter follows)
+                    sub.commit(DualBuffer(lk, rows_s, accum_s),
+                               FetchPlan(None, lk))
+                self.commits_applied[s] += 1
+
+    def set_admission_block(self, keys: Optional[np.ndarray]) -> None:
+        """Split the executor's global pending-commit key list per owner
+        (cached slices only; see CachedStore.set_admission_block)."""
+        if self.local_tier != "cached":
+            return
+        if keys is None:
+            for sub in self.shards:
+                sub.set_admission_block(None)
+            return
+        rps = self.spec.rows_per_shard
+        valid = keys[keys != _SENTINEL]
+        owner = np.asarray(owner_of(valid, rps, self.num_shards))
+        for s, sub in enumerate(self.shards):
+            sub.set_admission_block(valid[owner == s] - s * rps)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def ingest(self, table: EmbeddingTableState) -> EmbeddingTableState:
+        rows = np.asarray(jax.device_get(table.rows))
+        accum = np.asarray(jax.device_get(table.accum))
+        rps = self.spec.rows_per_shard
+        for s, sub in enumerate(self.shards):
+            # numpy slices go straight in: HostStore.ingest copies them
+            # defensively itself (device_get passes numpy through)
+            sub.ingest(EmbeddingTableState(rows[s * rps:(s + 1) * rps],
+                                           accum[s * rps:(s + 1) * rps]))
+        self.owns_master = True
+        return placeholder_table(table)
+
+    def export_table(self) -> EmbeddingTableState:
+        """Global master snapshot re-assembled from every shard (cached
+        slices flush their hot rows first), placed back on the mesh with
+        the table sharding — identical manifest layout to every other
+        tier, so a checkpoint restores at ANY shard count."""
+        exports = [sub.export_table() for sub in self.shards]
+        rows = np.concatenate([np.asarray(e.rows) for e in exports])
+        accum = np.concatenate([np.asarray(e.accum) for e in exports])
+        return EmbeddingTableState(
+            jax.device_put(rows, self._table_sh.rows),
+            jax.device_put(accum, self._table_sh.accum),
+        )
+
+    def release(self) -> EmbeddingTableState:
+        table = self.export_table()
+        self.owns_master = False
+        return table
+
+    def flush(self) -> None:
+        if self.local_tier == "cached":
+            for sub in self.shards:
+                sub.flush()
+
+    # -- metrics -----------------------------------------------------------
+
+    def metrics(self) -> Dict[str, float]:
+        out: Dict[str, float] = {
+            "h2d_bytes": float(self.h2d_bytes
+                               + sum(s.h2d_bytes for s in self.shards)),
+            "d2h_bytes": float(self.d2h_bytes
+                               + sum(s.d2h_bytes for s in self.shards)),
+            "shards": float(self.num_shards),
+            "commits": float(sum(self.commits_applied)),
+            **self.stage_timers.as_dict(),
+        }
+        if self.local_tier == "cached":
+            for key, attr in (("cache_hits", "hits"),
+                              ("cache_misses", "misses"),
+                              ("cache_evictions", "evictions"),
+                              ("cache_admission_skips", "admission_skips"),
+                              ("cache_capacity", "capacity")):
+                out[key] = float(sum(getattr(s, attr) for s in self.shards))
+            out["cache_rows_used"] = float(sum(
+                int((s._key_of_slot >= 0).sum()) for s in self.shards))
+        return out
+
+    def memory_bytes(self) -> int:
+        return sum(s.rows.nbytes + s.accum.nbytes for s in self.shards)
+
+
+__all__ = ["ShardedStore", "local_shard_spec", "LOCAL_TIERS"]

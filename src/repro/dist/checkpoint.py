@@ -44,7 +44,8 @@ def _step_dir(ckpt_dir: str, step: int) -> str:
     return os.path.join(ckpt_dir, f"step_{int(step):08d}")
 
 
-def save_checkpoint(ckpt_dir: str, state: PyTree, step: int) -> str:
+def save_checkpoint(ckpt_dir: str, state: PyTree, step: int,
+                    store: Any = None) -> str:
     """Write ``state`` at ``step`` atomically; returns the checkpoint path.
 
     An existing checkpoint for the same step is replaced.
@@ -53,9 +54,12 @@ def save_checkpoint(ckpt_dir: str, state: PyTree, step: int) -> str:
     lives in an :class:`~repro.core.store.EmbeddingStore` and the state
     carries a zero-row placeholder; the DBP driver materializes the master
     through the protocol (``store.export_table()``) before invoking its
-    checkpoint callback, so the manifest layout is IDENTICAL across tiers
-    and a host/cached-tier checkpoint restores into a device-tier session
-    (and vice versa) bit-for-bit. Cache membership and frequency state are
+    checkpoint callback — passing ``store=`` here does the same for direct
+    callers. The manifest layout is therefore IDENTICAL across tiers: the
+    mesh-sharded tier exports its per-host shards re-assembled into the
+    one global ``(Vp, D)`` table, so a host/cached/sharded checkpoint
+    restores into a device-tier session (and vice versa, at ANY shard
+    count) bit-for-bit. Cache membership and frequency state are
     deliberately NOT part of the manifest — a restore starts with a cold
     cache, which is value-transparent. Saving a state whose table is still
     the placeholder is always a bug, so it is rejected here rather than
@@ -64,11 +68,19 @@ def save_checkpoint(ckpt_dir: str, state: PyTree, step: int) -> str:
     table = getattr(state, "table", None)
     rows = getattr(table, "rows", None)
     if rows is not None and getattr(rows, "shape", (1,))[0] == 0:
-        raise ValueError(
-            "state.table is a zero-row store placeholder — the master lives "
-            "in an EmbeddingStore; save state._replace(table="
-            "store.export_table()) (the DBP driver's checkpoint callback "
-            "already does this)")
+        if store is not None and getattr(store, "owns_master", False):
+            state = state._replace(table=store.export_table())
+        elif store is not None:
+            raise ValueError(
+                "state.table is a zero-row store placeholder but the given "
+                "store does not own a master (owns_master=False — already "
+                "released?); there is nothing to export")
+        else:
+            raise ValueError(
+                "state.table is a zero-row store placeholder — the master "
+                "lives in an EmbeddingStore; pass store= (or save state."
+                "_replace(table=store.export_table()); the DBP driver's "
+                "checkpoint callback already does this)")
     os.makedirs(ckpt_dir, exist_ok=True)
     final = _step_dir(ckpt_dir, step)
     leaves = _flatten(state)

@@ -63,6 +63,13 @@ class Workload:
     batch_shapes: Dict[str, Tuple[Tuple[int, ...], Any]]
     keys_pspec: P
 
+    @property
+    def sparse_axes(self) -> Tuple[str, ...]:
+        """Mesh axes the mega-table is row-sharded over (the engine's
+        ownership domain; also where the sharded DRAM-master tier places
+        its per-host shards — core/store/sharded.py)."""
+        return self.engine.sparse_axes
+
     # ------------------------------------------------------------------
     # training
     # ------------------------------------------------------------------

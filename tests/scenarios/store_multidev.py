@@ -1,0 +1,307 @@
+"""Multi-device scenario: the sharded DRAM-master tiers are invisible.
+
+On 1/2/4 simulated CPU devices (``--xla_force_host_platform_device_count``)
+the ShardedStore host and cached-slice variants replay the device-tier
+(DeviceStore) run ON THE SAME MESH bit for bit — identical per-step losses
+and identical exported master tables — across lookahead in {1, 3}, the
+async host-stage executor on/off, and a mid-run checkpoint written at one
+shard count and restored at a DIFFERENT one (2 -> 4 shards, and sharded ->
+single-process cached). The bit-exact baseline is always the same-mesh
+device run: different shard counts legitimately reduce in different orders
+(their loss bits may differ), but on any fixed mesh WHERE the master rows
+live must not change a single bit.
+
+Sections (argv; default = all): ``core`` (the 4-shard matrix),
+``restore`` (cross-shard-count + cross-tier checkpoints), ``sweep``
+(the 1/2-shard matrix, run by the CI multidev job).
+"""
+import os
+import sys
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=4").strip()
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    NestPipeConfig,
+    OptimizerConfig,
+    RecsysModelConfig,
+    SparseTableConfig,
+)
+from repro.core.dbp import DBPDriver
+from repro.core.embedding import (
+    EmbeddingEngine,
+    init_table_state,
+    make_mega_table_spec,
+    table_pspecs,
+)
+from repro.core.store import DeviceStore, build_store
+from repro.data.synthetic import SyntheticRecsysStream
+from repro.dist.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train import TrainState, build_step_fns, constant_lr, make_optimizer
+
+N_MICRO, BATCH, STEPS = 4, 32, 6
+AXIS = "x"
+
+
+def make_setup(num_shards, seed=0):
+    """The tiny CTR workload of tests/test_consistency.py, spec'd for S
+    shards. The mega-table pads to the same 224 rows for S in {1, 2, 4},
+    so scrambled key streams are IDENTICAL across shard counts and a
+    checkpoint from one count restores at another."""
+    tables = (
+        SparseTableConfig("cat_a", vocab_size=64, dim=8),
+        SparseTableConfig("cat_b", vocab_size=128, dim=8),
+        SparseTableConfig("cat_c", vocab_size=32, dim=8, bag_size=2),
+    )
+    cfg = RecsysModelConfig(
+        name="tiny_ctr", backbone="dlrm", tables=tables, d_model=16,
+        n_layers=2, n_heads=2, d_ff=32, seq_len=1, num_dense_features=4,
+    )
+    spec = make_mega_table_spec(tables, num_shards=num_shards)
+    stream = SyntheticRecsysStream(cfg, spec, BATCH, seed=seed)
+
+    rng = np.random.default_rng(seed + 10)
+    dense_params = {
+        "w1": jnp.asarray(rng.normal(size=(stream.f_total * spec.dim + 4, 16))
+                          * 0.1, jnp.float32),
+        "b1": jnp.zeros((16,), jnp.float32),
+        "w2": jnp.asarray(rng.normal(size=(16, 1)) * 0.1, jnp.float32),
+        "b2": jnp.zeros((1,), jnp.float32),
+    }
+
+    def loss_fn(params, emb, mb):
+        mbsz = emb.shape[0]
+        x = jnp.concatenate([emb.reshape(mbsz, -1), mb["dense"]], axis=-1)
+        h = jnp.tanh(x @ params["w1"] + params["b1"])
+        logit = (h @ params["w2"] + params["b2"])[:, 0]
+        labels = mb["labels"]
+        loss = jnp.mean(jnp.maximum(logit, 0) - logit * labels
+                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+        return loss, {"acc": jnp.mean((logit > 0) == (labels > 0.5))}
+
+    return cfg, spec, stream, dense_params, loss_fn
+
+
+def batch_iter(stream, start=0):
+    def gen():
+        step = start
+        while True:
+            b = stream.make_batch(step)
+            yield {"keys": b.keys, "dense": b.dense, "labels": b.labels,
+                   "raw_keys": b.raw_keys}
+            step += 1
+
+    return gen()
+
+
+class Case:
+    """One (shard count, mesh) workload: builds fns/state/driver on demand
+    so every store variant reuses the same jit cache."""
+
+    def __init__(self, num_shards):
+        self.S = num_shards
+        self.mesh = Mesh(np.asarray(jax.devices()[:num_shards]), (AXIS,))
+        cfg, self.spec, self.stream, dense, loss_fn = make_setup(num_shards)
+        # numpy template: a CPU device_put can zero-copy ALIAS jax arrays,
+        # and the driver donates the state — reruns need intact templates
+        self.dense = jax.tree.map(lambda x: np.array(x, copy=True), dense)
+        self.optimizer = make_optimizer(OptimizerConfig(lr=0.05, grad_clip=0.0))
+        np_cfg = NestPipeConfig(fwp_microbatches=N_MICRO,
+                                bucket_slack=2.0 * num_shards)
+        self.eng = EmbeddingEngine(self.spec, self.mesh, (AXIS,),
+                                   P(AXIS, None), np_cfg,
+                                   compute_dtype=jnp.float32)
+        self.fns = build_step_fns(self.eng, loss_fn, self.optimizer,
+                                  constant_lr(0.05), N_MICRO,
+                                  (BATCH // N_MICRO, self.stream.f_total))
+        ns = lambda p: NamedSharding(self.mesh, p)  # noqa: E731
+        self.batch_sh = {"keys": ns(P(None, AXIS, None)),
+                         "dense": ns(P(None, AXIS, None)),
+                         "labels": ns(P(None, AXIS))}
+        t_ps = table_pspecs((AXIS,))
+        self._state_sh = TrainState(
+            dense=jax.tree.map(lambda _: ns(P()), self.dense),
+            opt=jax.tree.map(lambda _: ns(P()), self.optimizer.init(self.dense)),
+            table=jax.tree.map(ns, t_ps, is_leaf=lambda x: isinstance(x, P)),
+            step=ns(P()),
+        )
+
+    def init_state(self):
+        table = init_table_state(jax.random.PRNGKey(0), self.spec, self.mesh,
+                                 (AXIS,))
+        state = TrainState(self.dense, self.optimizer.init(self.dense), table,
+                           jnp.zeros((), jnp.int32))
+        return jax.device_put(state, self._state_sh)
+
+    def make_store(self, name, **kw):
+        if name == "device":
+            return DeviceStore(self.fns)
+        return build_store(name, self.spec, self.fns, mesh=self.mesh,
+                           sparse_axes=(AXIS,), **kw)
+
+    def run(self, store_name, *, steps=STEPS, lookahead=1, async_on=False,
+            state=None, start=0, on_ckpt=None, ckpt_every=0, **store_kw):
+        store = self.make_store(store_name, **store_kw)
+        driver = DBPDriver(
+            self.fns, batch_iter(self.stream, start), N_MICRO,
+            mode="nestpipe", store=store, lookahead=lookahead,
+            batch_shardings=self.batch_sh,
+            device_fields=["keys", "dense", "labels"],
+            async_stages=async_on, stage_workers=1,
+            on_checkpoint=on_ckpt, ckpt_every=ckpt_every,
+        )
+        state = self.init_state() if state is None else state
+        state, stats = driver.run(state, steps)
+        return state, stats, store
+
+    def restore_into(self, ckpt_dir):
+        """Template-driven restore onto THIS mesh (any source shard count:
+        the manifest holds the one global table)."""
+        restored = restore_checkpoint(ckpt_dir, self.init_state())
+        return jax.device_put(restored, self._state_sh)
+
+
+def tables_equal(a, b, what):
+    np.testing.assert_array_equal(np.asarray(a.table.rows),
+                                  np.asarray(b.table.rows), err_msg=what)
+    np.testing.assert_array_equal(np.asarray(a.table.accum),
+                                  np.asarray(b.table.accum), err_msg=what)
+
+
+def run_matrix(case):
+    """Sharded host + cached-slice variants vs the same-mesh device run,
+    over lookahead x async_stages — the tentpole bit-exactness claim."""
+    S = case.S
+    ref_state, ref_stats, _ = case.run("device")
+    assert ref_stats.overflow_max == 0
+    traffic = {}
+    for tier in ("host", "cached"):
+        for lookahead in (1, 3):
+            for async_on in (False, True):
+                tag = f"S={S} {tier} k={lookahead} async={async_on}"
+                st, stats, store = case.run(tier, lookahead=lookahead,
+                                            async_on=async_on)
+                np.testing.assert_array_equal(stats.losses, ref_stats.losses,
+                                              err_msg=tag)
+                tables_equal(st, ref_state, tag)
+                m = store.metrics()
+                assert m["shards"] == float(S), tag
+                assert m["commits"] == float(S * STEPS), tag
+                assert stats.store_metrics["h2d_bytes"] == m["h2d_bytes"], tag
+                traffic[(tier, lookahead, async_on)] = (
+                    m["h2d_bytes"], m["d2h_bytes"])
+                if tier == "cached":
+                    assert m["cache_hits"] + m["cache_misses"] > 0, tag
+                    assert m["cache_hits"] > 0, tag  # the hot set is real
+                print(f"  [{tag}] bit-exact vs device: OK")
+    # same windows staged / committed with the executor on or off: the
+    # modeled transfer accounting replays exactly (host tier; the cached
+    # tier's admission-block can legally defer an admission)
+    for lookahead in (1, 3):
+        assert traffic[("host", lookahead, False)] == \
+            traffic[("host", lookahead, True)], (S, lookahead)
+    # device tier still rides lookahead on this mesh
+    _, stats_k, _ = case.run("device", lookahead=3)
+    np.testing.assert_array_equal(stats_k.losses, ref_stats.losses)
+
+
+def run_restore(tmp):
+    """Checkpoint at shard count 2, restore at shard count 4 (and into the
+    single-process cached tier): the continuation must equal the same-mesh
+    device continuation bit for bit, whatever store wrote the manifest."""
+    case2 = Case(2)
+    case4 = Case(4)
+
+    def ckpt_run(case, store_name, d):
+        saved = {}
+
+        def on_ckpt(st, n):
+            saved[n] = save_checkpoint(d, st, int(st.step))
+
+        state, stats, _ = case.run(store_name, steps=3, on_ckpt=on_ckpt,
+                                   ckpt_every=3)
+        assert sorted(saved) == [3], saved
+        return saved[3]
+
+    d_sharded = ckpt_run(case2, "host", tempfile.mkdtemp(dir=tmp))
+    d_cached = ckpt_run(case2, "cached", tempfile.mkdtemp(dir=tmp))
+    d_device = ckpt_run(case2, "device", tempfile.mkdtemp(dir=tmp))
+
+    # the three manifests are interchangeable: same-mesh exports agree
+    t_dev = restore_checkpoint(os.path.dirname(d_device), case2.init_state())
+    t_sh = restore_checkpoint(os.path.dirname(d_sharded), case2.init_state())
+    t_ca = restore_checkpoint(os.path.dirname(d_cached), case2.init_state())
+    tables_equal(t_sh, t_dev, "2-shard ckpt: sharded-host vs device")
+    tables_equal(t_ca, t_dev, "2-shard ckpt: sharded-cached vs device")
+
+    # continue at 4 shards from the 2-shard sharded checkpoint
+    base = os.path.dirname(d_sharded)
+    ref_state, ref_stats, _ = case4.run(
+        "device", steps=3, start=3, state=case4.restore_into(base))
+    for tier, src in (("host", base),
+                      ("cached", base),
+                      # device -> sharded: a device-written manifest
+                      ("host", os.path.dirname(d_device))):
+        st, stats, _ = case4.run(tier, steps=3, start=3,
+                                 state=case4.restore_into(src),
+                                 lookahead=3, async_on=True)
+        np.testing.assert_array_equal(stats.losses, ref_stats.losses,
+                                      err_msg=f"restore 2->4 {tier}")
+        tables_equal(st, ref_state, f"restore 2->4 {tier}")
+        print(f"  [restore 2->4 shards, {tier} <- {os.path.basename(src)}] OK")
+
+    # sharded -> single-process cached: restore the 2-shard manifest into a
+    # mesh-less CachedStore session and continue on the device trajectory
+    from repro.core.store import CachedStore, DeviceStore as Dev
+
+    cfg, spec1, stream1, dense1, loss1 = make_setup(1)
+    optimizer = make_optimizer(OptimizerConfig(lr=0.05, grad_clip=0.0))
+    np_cfg = NestPipeConfig(fwp_microbatches=N_MICRO, bucket_slack=2.0)
+    eng1 = EmbeddingEngine(spec1, None, ("model",), P(None, None), np_cfg,
+                           compute_dtype=jnp.float32)
+    fns1 = build_step_fns(eng1, loss1, optimizer, constant_lr(0.05), N_MICRO,
+                          (BATCH // N_MICRO, stream1.f_total))
+
+    def run1(store, state):
+        driver = DBPDriver(fns1, batch_iter(stream1, 3), N_MICRO,
+                           mode="nestpipe", store=store,
+                           device_fields=["keys", "dense", "labels"])
+        return driver.run(state, 3)
+
+    def state1():
+        table = init_table_state(jax.random.PRNGKey(0), spec1, None, ("model",))
+        st = TrainState(dense1, optimizer.init(dense1), table,
+                        jnp.zeros((), jnp.int32))
+        return restore_checkpoint(base, st)
+
+    st_dev, stats_dev = run1(Dev(fns1), state1())
+    st_cache, stats_cache = run1(CachedStore(spec1, fns1), state1())
+    np.testing.assert_array_equal(stats_cache.losses, stats_dev.losses)
+    tables_equal(st_cache, st_dev, "restore sharded -> single-process cached")
+    print("  [restore 2-shard ckpt -> single-process cached] OK")
+
+
+if __name__ == "__main__":
+    sections = sys.argv[1:] or ["core", "restore", "sweep"]
+    if "core" in sections:
+        print("[store-multidev] core: 4-shard matrix")
+        run_matrix(Case(4))
+    if "restore" in sections:
+        print("[store-multidev] restore: cross-shard-count checkpoints")
+        with tempfile.TemporaryDirectory() as tmp:
+            run_restore(tmp)
+    if "sweep" in sections:
+        for s in (1, 2):
+            print(f"[store-multidev] sweep: {s}-shard matrix")
+            run_matrix(Case(s))
+    print("STORE MULTIDEV OK")

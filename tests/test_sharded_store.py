@@ -1,0 +1,267 @@
+"""Sharded multi-host EmbeddingStore behind the one protocol.
+
+Single-device half: on a 1-device mesh the sharded tiers must (a) be what
+``build_store`` now hands out for host/cached on ANY mesh, (b) replay the
+same-mesh device run bit for bit, and (c) report counters identical to the
+single-process tiers they wrap (the S=1 sharded-cached slice IS a
+CachedStore over the whole table). Multi-device half: the
+``tests/scenarios/store_multidev.py`` subprocess forces 4 simulated CPU
+devices and proves the 4-shard matrix (lookahead x async_stages) plus
+checkpoint restore ACROSS shard counts — the 1/2-shard sweep is the
+``multidev``-marked variant run by CI's dedicated job.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from test_consistency import batch_iter, make_setup
+
+from repro.configs.base import NestPipeConfig, OptimizerConfig
+from repro.core.dbp import DBPDriver
+from repro.core.embedding import EmbeddingEngine, init_table_state, table_pspecs
+from repro.core.store import (
+    DeviceStore,
+    FetchPlan,
+    ShardedStore,
+    build_store,
+    local_shard_spec,
+)
+from repro.train import TrainState, build_step_fns, constant_lr, make_optimizer
+
+N_MICRO = 4
+BATCH = 32
+STEPS = 5
+AXIS = "x"
+
+
+def mesh1() -> Mesh:
+    return Mesh(np.asarray(jax.devices()[:1]), (AXIS,))
+
+
+class MeshCase:
+    """The tiny CTR workload of test_consistency on a 1-device mesh."""
+
+    def __init__(self):
+        self.mesh = mesh1()
+        cfg, self.spec, self.stream, dense, loss_fn = make_setup()
+        self.dense = jax.tree.map(lambda x: np.array(x, copy=True), dense)
+        self.optimizer = make_optimizer(OptimizerConfig(lr=0.05, grad_clip=0.0))
+        np_cfg = NestPipeConfig(fwp_microbatches=N_MICRO, bucket_slack=2.0)
+        self.eng = EmbeddingEngine(self.spec, self.mesh, (AXIS,),
+                                   P(AXIS, None), np_cfg,
+                                   compute_dtype=jnp.float32)
+        self.fns = build_step_fns(self.eng, loss_fn, self.optimizer,
+                                  constant_lr(0.05), N_MICRO,
+                                  (BATCH // N_MICRO, self.stream.f_total))
+        ns = lambda p: NamedSharding(self.mesh, p)  # noqa: E731
+        self.batch_sh = {"keys": ns(P(None, AXIS, None)),
+                         "dense": ns(P(None, AXIS, None)),
+                         "labels": ns(P(None, AXIS))}
+        t_ps = table_pspecs((AXIS,))
+        self.table_sh = jax.tree.map(ns, t_ps,
+                                     is_leaf=lambda x: isinstance(x, P))
+
+    def init_state(self):
+        table = init_table_state(jax.random.PRNGKey(0), self.spec, self.mesh,
+                                 (AXIS,))
+        return TrainState(
+            jax.tree.map(jnp.asarray, self.dense),
+            self.optimizer.init(self.dense), table, jnp.zeros((), jnp.int32))
+
+    def make_store(self, name, **kw):
+        if name == "device":
+            return DeviceStore(self.fns)
+        return build_store(name, self.spec, self.fns, mesh=self.mesh,
+                           sparse_axes=(AXIS,), **kw)
+
+    def run(self, store_name, *, steps=STEPS, lookahead=1, async_on=False,
+            **store_kw):
+        store = self.make_store(store_name, **store_kw)
+        driver = DBPDriver(
+            self.fns, batch_iter(self.stream), N_MICRO, mode="nestpipe",
+            store=store, lookahead=lookahead, batch_shardings=self.batch_sh,
+            device_fields=["keys", "dense", "labels"], async_stages=async_on)
+        state, stats = driver.run(self.init_state(), steps)
+        return state, stats, store
+
+
+@pytest.fixture(scope="module")
+def case():
+    return MeshCase()
+
+
+# ---------------------------------------------------------------------------
+# selection: build_store routes host/cached to the sharded tier on a mesh
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_routing_and_local_spec(case):
+    st = case.make_store("host")
+    assert isinstance(st, ShardedStore)
+    assert st.tier == "sharded-host" and st.num_shards == 1
+    st = case.make_store("cached", cache_rows=64)
+    assert st.tier == "sharded-cached"
+    assert st.shards[0].capacity == 64  # global budget / 1 shard
+    lspec = local_shard_spec(case.spec)
+    assert lspec.padded_rows == case.spec.rows_per_shard
+    assert lspec.num_shards == 1 and lspec.mix_mult == 1  # local ids, unmixed
+
+
+def test_serial_mode_rejects_sharded_store(case):
+    with pytest.raises(ValueError, match="serial"):
+        DBPDriver(case.fns, batch_iter(case.stream), N_MICRO, mode="serial",
+                  store=case.make_store("host"))
+
+
+# ---------------------------------------------------------------------------
+# the S=1 invariants (the S>1 matrix lives in scenarios/store_multidev.py)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_tiers_replay_device_run_on_mesh(case):
+    """Same mesh, three masters homes, one trajectory — and the summary
+    carries the shard count."""
+    state_d, stats_d, _ = case.run("device")
+    for tier in ("host", "cached"):
+        state_s, stats_s, store = case.run(tier)
+        np.testing.assert_array_equal(stats_s.losses, stats_d.losses)
+        np.testing.assert_array_equal(np.asarray(state_s.table.rows),
+                                      np.asarray(state_d.table.rows))
+        np.testing.assert_array_equal(np.asarray(state_s.table.accum),
+                                      np.asarray(state_d.table.accum))
+        assert stats_s.summary()["store_shards"] == 1
+        assert stats_s.summary()["store"] == f"sharded-{tier}"
+
+
+def test_sharded_cached_slice_counts_like_single_process(case):
+    """The S=1 cached slice IS the single-process CachedStore over the
+    whole table: hit/miss/eviction/traffic accounting must agree exactly
+    with a mesh-less cached run over the same stream (cache accounting is
+    key-set driven, so this holds bit-for-bit, not approximately)."""
+    from test_hierarchical import run_store
+
+    _, _, flat_store = run_store("cached")
+    _, _, sharded = case.run("cached")
+    sub = sharded.shards[0]
+    assert (sub.hits, sub.misses, sub.evictions) == \
+        (flat_store.hits, flat_store.misses, flat_store.evictions)
+    assert sub.h2d_bytes == flat_store.h2d_bytes
+    assert sub.d2h_bytes == flat_store.d2h_bytes
+
+
+def test_sharded_export_is_a_snapshot(case):
+    """Mutating a shard's master after export must not reach the exported
+    table (same contract as HostStore.export_table — load-bearing under
+    the async executor's concurrency)."""
+    store = case.make_store("host")
+    table = init_table_state(jax.random.PRNGKey(1), case.spec, case.mesh,
+                             (AXIS,))
+    store.ingest(table)
+    exported = np.asarray(store.export_table().rows)
+    before = np.array(exported, copy=True)
+    store.shards[0].rows[:] = -11.0
+    np.testing.assert_array_equal(exported, before)
+    assert float(np.asarray(store.export_table().rows)[0, 0]) == -11.0
+
+
+def test_local_slice_and_admission_block_rebase(case):
+    """Owner slicing rebases global scrambled ids to local row ids and the
+    executor's global admission block splits per shard."""
+    store = case.make_store("cached")
+    sent = np.iinfo(np.int32).max
+    keys = np.array([3, 7, 40, sent], np.int32)
+    (lk,) = store._local_slices(keys)
+    np.testing.assert_array_equal(lk, keys)  # S=1: local == global
+    store.set_admission_block(np.array([5, sent, 9], np.int32))
+    np.testing.assert_array_equal(store.shards[0]._admission_block, [5, 9])
+    store.set_admission_block(None)
+    assert store.shards[0]._admission_block is None
+
+
+def test_sharded_retrieve_commit_roundtrip(case):
+    """Direct protocol use (no driver): retrieve stages owned rows into a
+    mesh-sharded buffer, commit scatters them back through the shard."""
+    store = case.make_store("host")
+    table = init_table_state(jax.random.PRNGKey(2), case.spec, case.mesh,
+                             (AXIS,))
+    rows_before = np.asarray(table.rows)
+    store.ingest(table)
+    sent = np.iinfo(np.int32).max
+    keys = np.full((16,), sent, np.int32)
+    keys[:4] = [2, 9, 11, 30]
+    buf = store.retrieve(FetchPlan(None, keys))
+    np.testing.assert_array_equal(np.asarray(buf.rows)[:4],
+                                  rows_before[[2, 9, 11, 30]])
+    assert np.asarray(buf.rows)[4:].sum() == 0.0  # sentinel rows zeroed
+    new_rows = np.asarray(buf.rows).copy()
+    new_rows[:4] += 1.5
+    store.commit(buf._replace(rows=jnp.asarray(new_rows)),
+                 FetchPlan(None, keys))
+    out = np.asarray(store.export_table().rows)
+    np.testing.assert_array_equal(out[[2, 9, 11, 30]],
+                                  rows_before[[2, 9, 11, 30]] + 1.5)
+    assert store.commits_applied == [1]
+
+
+def test_save_checkpoint_store_kwarg(case, tmp_path):
+    """Direct callers can hand the live store to save_checkpoint: the
+    placeholder table is exported through the protocol instead of being
+    rejected."""
+    from repro.dist.checkpoint import restore_checkpoint, save_checkpoint
+
+    store = case.make_store("host")
+    state = case.init_state()
+    mid = state._replace(table=store.ingest(state.table))
+    d = str(tmp_path / "s")
+    with pytest.raises(ValueError, match="placeholder"):
+        save_checkpoint(d, mid, 0)
+    save_checkpoint(d, mid, 0, store=store)
+    out = restore_checkpoint(d, case.init_state())
+    np.testing.assert_array_equal(np.asarray(out.table.rows),
+                                  np.asarray(store.export_table().rows))
+
+
+# ---------------------------------------------------------------------------
+# the multi-device proof (subprocess; 4 forced CPU devices)
+# ---------------------------------------------------------------------------
+
+SCEN = os.path.join(os.path.dirname(__file__), "scenarios")
+
+
+def run_scenario(*sections, timeout=560) -> str:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # scenario forces its own device count
+    proc = subprocess.run(
+        [sys.executable, os.path.join(SCEN, "store_multidev.py"), *sections],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert proc.returncode == 0, \
+        f"store_multidev {sections} failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_store_multidev_core_and_restore():
+    """Acceptance: on 4 simulated devices the sharded host/cached tiers
+    replay the device run bit-exactly for lookahead {1,3} x async {on,off},
+    and a 2-shard checkpoint restores at 4 shards (and into the
+    single-process cached tier) onto the exact device trajectory."""
+    out = run_scenario("core", "restore")
+    assert "STORE MULTIDEV OK" in out
+    assert "restore 2->4 shards, cached" in out
+
+
+@pytest.mark.multidev
+def test_store_multidev_sweep():
+    """The 1/2-shard matrices (CI multidev job)."""
+    out = run_scenario("sweep")
+    assert "STORE MULTIDEV OK" in out
+    assert "[S=2 cached k=3 async=True] bit-exact vs device: OK" in out

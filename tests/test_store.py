@@ -69,10 +69,36 @@ def test_serial_mode_store_handling(monkeypatch):
     assert rep.summary["store"] == "device"
 
 
-def test_build_store_rejects_mesh_for_host_tiers():
+def test_build_store_routes_host_tiers_to_sharded_on_mesh():
+    """A mesh no longer rejects the DRAM tiers: host/cached route to the
+    sharded tier (per-host masters over sparse_axes); only genuinely
+    unsupported combos stay loud (missing sparse axes, shard mismatch)."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core.store import ShardedStore
+
     sess = make_session()
-    with pytest.raises(ValueError, match="multi-host"):
-        build_store("host", sess.workload.spec, sess.fns, mesh=object())
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("x",))
+    st = build_store("host", sess.workload.spec, sess.fns, mesh=mesh,
+                     sparse_axes=("x",))
+    assert isinstance(st, ShardedStore) and st.tier == "sharded-host"
+    st = build_store("cached", sess.workload.spec, sess.fns, mesh=mesh,
+                     sparse_axes=("x",))
+    assert st.tier == "sharded-cached"
+    assert len(st.shards) == 1
+    # the device tier keeps its engine-sharded master on a mesh
+    assert build_store("device", sess.workload.spec, sess.fns,
+                       mesh=mesh, sparse_axes=("x",)).tier == "device"
+    with pytest.raises(ValueError, match="sparse_axes"):
+        build_store("host", sess.workload.spec, sess.fns, mesh=mesh)
+    # spec built for a different shard count than the mesh provides
+    from repro.core.embedding import make_mega_table_spec
+
+    spec4 = make_mega_table_spec(None, vocab_size=64, dim=8, num_shards=4)
+    with pytest.raises(ValueError, match="shards"):
+        build_store("host", spec4, sess.fns, mesh=mesh, sparse_axes=("x",))
 
 
 def test_placeholder_table_is_zero_row():
