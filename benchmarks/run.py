@@ -32,12 +32,14 @@ from . import (
     bench_microbatch,
     bench_model_scale,
     bench_scaling,
+    bench_serve,
     bench_stage_breakdown,
     bench_step_latency,
 )
 
 BENCHES = {
     "table2": bench_step_latency.main,  # step latency + DBP/FWP ablation
+    "serve": bench_serve.main,  # zipf serving QPS + latency (repro.serve)
     "fig6": bench_consistency.main,  # consistency curves
     "table3": bench_scaling.main,  # scaling 8->256 workers
     "fig9": bench_microbatch.main,  # micro-batch sensitivity

@@ -40,11 +40,13 @@ to (NestPipe's pitch): if your strategy pipelines, it is responsible for its
 own staleness story; the consistency benchmarks compare every registered
 mode against ``serial``.
 """
-from .session import ServeReport, Session, TrainReport
+from .session import EmbedServeReport, ServeReport, Session, TrainReport
 from .strategies import (
     DriverStrategy,
+    InferenceStrategy,
     Strategy,
     available_strategies,
+    build_workload_store,
     get_strategy,
     register_strategy,
 )
@@ -54,6 +56,9 @@ __all__ = [
     "Session",
     "TrainReport",
     "ServeReport",
+    "EmbedServeReport",
+    "InferenceStrategy",
+    "build_workload_store",
     "Strategy",
     "DriverStrategy",
     "register_strategy",

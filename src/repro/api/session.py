@@ -52,6 +52,15 @@ class ServeReport:
     summary: Dict[str, Any] = field(default_factory=dict)
 
 
+@dataclass
+class EmbedServeReport:
+    """Per-request results (rid order) + latency/cache summary from an
+    embedding-serving run (:meth:`Session.serve_embeddings`)."""
+
+    results: np.ndarray  # (n, F, D) embeddings or (n,) dlrm logits
+    summary: Dict[str, Any] = field(default_factory=dict)
+
+
 class Session:
     """A training/serving session over one resolved workload.
 
@@ -330,12 +339,25 @@ class Session:
     def serve(self, *, batch: int = 4, prompt_len: int = 16, gen: int = 8,
               seed: Optional[int] = None) -> ServeReport:
         """Batched prefill + greedy KV-cache decode through the embedding
-        engine. Reuses this session's trained dense params + master table
-        when training has run; otherwise serves from a fresh init."""
+        engine (the LLM-arch serving path).
+
+        There are two serving paths, split by arch kind:
+
+        - **LLM archs** (``kind != "recsys"``) — THIS method: resolve a
+          decode-shaped workload and run prefill + greedy KV-cache decode,
+          reusing the session's trained dense params + master table when
+          the specs match (fresh init otherwise).
+        - **Recsys archs** (``dlrm-*``) — :meth:`serve_embeddings`: a
+          request-level embedding inference path through ``repro.serve``
+          (read-only FrozenStoreView over the configured store tier,
+          window-coalescing batcher, embedding or dlrm head).
+
+        Calling the wrong one raises with a pointer to the other.
+        """
         if self.workload.arch.kind == "recsys":
             raise ValueError(
                 f"{self.workload.arch.name} is a recsys arch: no KV-cache "
-                "decode path to serve (use .train()/.bench())")
+                "decode path to serve (use .serve_embeddings())")
         if self.workload.mesh is not None:
             raise ValueError(
                 "serve() runs the CPU-scale single-device decode path; a "
@@ -432,3 +454,135 @@ class Session:
             "sample_tokens": out[0, :8].tolist(),
         }
         return ServeReport(tokens=out, summary=summary)
+
+    def serve_embeddings(
+        self,
+        *,
+        num_requests: int = 256,
+        max_batch: int = 32,
+        max_wait_ms: float = 2.0,
+        qps: Optional[float] = None,
+        zipf_a: Optional[float] = None,
+        head: str = "embedding",
+        store: Optional[str] = None,
+        check_exact: bool = False,
+        seed: Optional[int] = None,
+    ) -> EmbedServeReport:
+        """Serve a zipf embedding-request stream (the recsys serving path).
+
+        Resolves a serve-shaped workload under the ``'serve'`` strategy
+        (``fwp_microbatches=1``, no dual-buffer pipelining), builds the
+        session's configured store tier (``store`` overrides; mesh-aware
+        via ShardedStore), ingests the trained master table (fresh init if
+        the session never trained or the specs differ), freezes it behind
+        a :class:`~repro.serve.FrozenStoreView`, and pumps ``num_requests``
+        synthetic zipf requests through a window-coalescing
+        :class:`~repro.serve.ServeRouter`.
+
+        ``qps=None`` runs closed-loop (sustained-throughput mode);
+        a positive ``qps`` paces arrivals open-loop so p50/p99 reflect the
+        max-wait/max-batch policy. ``head`` is ``"embedding"`` (raw (F, D)
+        rows per request) or ``"dlrm"`` (full dense forward, one logit per
+        request). ``check_exact`` recomputes every result from the master
+        table via ``lookup_from_master`` and reports
+        ``exact``/``max_abs_diff`` (serving is bit-exact by construction).
+        """
+        from ..serve import build_router, run_closed_loop, run_open_loop, \
+            synthetic_requests
+
+        if self.workload.arch.kind != "recsys":
+            raise ValueError(
+                f"{self.workload.arch.name} is not a recsys arch: "
+                "serve_embeddings() serves per-request embedding lookups "
+                "(use .serve() for the KV-cache decode path)")
+        seed = self.seed if seed is None else seed
+        strategy = get_strategy("serve")
+        npcfg = self.workload.npcfg
+        if store is not None and store != "auto":
+            npcfg = dataclasses.replace(npcfg, store=store)
+        npcfg = strategy.configure(npcfg)
+        wl = resolve(
+            self.workload.arch.name, mesh=self.workload.mesh,
+            mode=self.workload.mode, npcfg=npcfg, reduced=self.reduced,
+            shape_override=ShapeConfig(
+                "api-serve-emb", kind="train",
+                seq_len=self.workload.shape.seq_len, global_batch=max_batch),
+        )
+        engine = wl.engine
+        spec_matches = (
+            wl.spec.padded_rows == self.workload.spec.padded_rows
+            and wl.spec.dim == self.workload.spec.dim
+            and wl.spec.num_shards == self.workload.spec.num_shards
+        )
+        if self._state is not None and spec_matches:
+            params, table = self._state.dense, self._state.table
+        else:
+            params = wl.bundle.init_params(jax.random.PRNGKey(seed))
+            table = init_table_state(jax.random.PRNGKey(1), wl.spec, None,
+                                     engine.sparse_axes)
+
+        fns, _ = wl.step_fns(self.opt_cfg)
+        view = strategy.build_view(fns, wl, table)
+        router = build_router(wl, view, params=params, head=head,
+                              max_wait_ms=max_wait_ms)
+        requests = synthetic_requests(wl, num_requests, zipf_a=zipf_a,
+                                      seed=seed)
+        if qps is None:
+            summary = run_closed_loop(router, requests)
+        else:
+            summary = run_open_loop(router, requests, qps)
+
+        results = np.stack([router.results[r] for r in range(num_requests)])
+        summary.update({
+            "arch": self.workload.arch.name, "store": view.tier,
+            "head": head, "max_batch": max_batch,
+            "max_wait_ms": max_wait_ms,
+        })
+        if check_exact:
+            diff = self._serve_ground_truth_diff(
+                wl, params, table, requests, results, head)
+            summary["max_abs_diff"] = float(diff)
+            summary["exact"] = int(diff == 0.0)
+        return EmbedServeReport(results=results, summary=summary)
+
+    @staticmethod
+    def _serve_ground_truth_diff(wl, params, table, requests, results,
+                                 head) -> float:
+        """Max |served - lookup_from_master ground truth| over every
+        request, chunked at the serve batch shape."""
+        from ..models.dlrm import dlrm_forward
+
+        engine = wl.engine
+        cdtype = getattr(engine, "compute_dtype", jnp.float32)
+        cfg = wl.bundle.cfg
+        b = wl.batch_shapes["keys"][0][1]
+
+        # Ground truth mirrors the router's two-jit head split (lookup jit
+        # + standalone dlrm jit): identical standalone HLO on bit-identical
+        # embeddings keeps even the dlrm logits exactly comparable.
+        @jax.jit
+        def emb_ref(table, keys):
+            emb, _ = engine.lookup_from_master(table, keys)
+            return emb.astype(cdtype)
+
+        dlrm_ref = jax.jit(lambda params, emb, dense: dlrm_forward(
+            params, cfg, emb.astype(jnp.float32), dense))
+
+        def ref_fn(table, keys, dense):
+            emb = emb_ref(table, keys)
+            if head == "dlrm":
+                return dlrm_ref(params, emb, dense)
+            return emb
+
+        n = len(requests)
+        diff = 0.0
+        for lo in range(0, n, b):
+            idx = [min(lo + i, n - 1) for i in range(b)]  # pad by repeat
+            keys = np.stack([requests[i][0] for i in idx])
+            dense = np.stack([requests[i][1] for i in idx])
+            ref = np.asarray(jax.device_get(
+                ref_fn(table, jnp.asarray(keys), jnp.asarray(dense))))
+            got = results[idx]
+            diff = max(diff, float(np.max(np.abs(
+                got.astype(np.float64) - ref.astype(np.float64)))))
+        return diff

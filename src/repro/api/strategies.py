@@ -23,6 +23,7 @@ from typing import Dict, Protocol, Tuple, runtime_checkable
 from ..configs.base import NestPipeConfig
 from ..core.dbp import DBPDriver
 from ..core.store import build_store
+from ..serve import FrozenStoreView
 
 
 @runtime_checkable
@@ -44,6 +45,38 @@ class Strategy(Protocol):
     def configure(self, npcfg: NestPipeConfig) -> NestPipeConfig: ...
 
     def build_driver(self, fns, stream, workload, **driver_kw): ...
+
+
+def build_workload_store(workload, fns, *, donate: bool = True,
+                         serial: bool = False):
+    """Build the EmbeddingStore a resolved workload's config asks for.
+
+    One construction seam for both halves of the codebase: training
+    drivers (DriverStrategy) and serving replicas (InferenceStrategy)
+    resolve ``npcfg.store`` / ``$REPRO_STORE`` / mesh-awareness through
+    the exact same call, so a serving replica always gets the tier the
+    training run would have used.
+    """
+    npcfg = workload.npcfg
+    # The serial baseline is device-resident by definition: an EXPLICIT
+    # non-device store in the config is a loud error, while the blunt
+    # $REPRO_STORE env override (useful for whole-suite sweeps that
+    # include serial cells) falls back to the device tier here.
+    name = npcfg.store
+    if serial:
+        if name not in ("auto", "device"):
+            raise ValueError(
+                f"mode 'serial' is the device-resident baseline; "
+                f"store={name!r} needs a pipelined mode "
+                "(nestpipe | async)")
+        name = "device"
+    return build_store(
+        name, workload.spec, fns,
+        donate=donate, mesh=workload.mesh,
+        sparse_axes=workload.sparse_axes,
+        cache_rows=npcfg.cache_rows, cache_admit=npcfg.cache_admit,
+        kernel_backend=npcfg.kernel_backend,
+    )
 
 
 @dataclass(frozen=True)
@@ -84,29 +117,44 @@ class DriverStrategy:
             driver_kw.setdefault("batch_shardings",
                                  workload.batch_shardings())
         if "store" not in driver_kw:
-            npcfg = workload.npcfg
-            # The serial baseline is device-resident by definition: an
-            # EXPLICIT non-device store in the config is a loud error,
-            # while the blunt $REPRO_STORE env override (useful for
-            # whole-suite sweeps that include serial cells) falls back to
-            # the device tier here.
-            name = npcfg.store
-            if self.driver_mode == "serial":
-                if name not in ("auto", "device"):
-                    raise ValueError(
-                        f"mode 'serial' is the device-resident baseline; "
-                        f"store={name!r} needs a pipelined mode "
-                        "(nestpipe | async)")
-                name = "device"
-            driver_kw["store"] = build_store(
-                name, workload.spec, fns,
-                donate=driver_kw["donate"], mesh=workload.mesh,
-                sparse_axes=workload.sparse_axes,
-                cache_rows=npcfg.cache_rows, cache_admit=npcfg.cache_admit,
-                kernel_backend=npcfg.kernel_backend,
-            )
+            driver_kw["store"] = build_workload_store(
+                workload, fns, donate=driver_kw["donate"],
+                serial=self.driver_mode == "serial")
         return DBPDriver(fns, stream, workload.n_micro,
                          mode=self.driver_mode, **driver_kw)
+
+
+@dataclass(frozen=True)
+class InferenceStrategy:
+    """Read-only serving: the DBP data path with the epilogue cut off.
+
+    ``configure`` pins the two switches serving requires: one micro-batch
+    per window (a request window maps to exactly one lookup plan — the
+    router jits that shape once) and no dual-buffer pipelining (there is
+    no batch t+1 to overlap against; the request queue plays that role
+    at the batcher level instead).
+
+    There is no driver: serving does not step an optimizer. Use
+    ``build_view`` to freeze an ingested store and drive it through
+    ``Session.serve_embeddings()`` / ``repro.serve.ServeRouter``.
+    """
+
+    name: str = "serve"
+
+    def configure(self, npcfg: NestPipeConfig) -> NestPipeConfig:
+        return dataclasses.replace(npcfg, fwp_microbatches=1, dbp=False)
+
+    def build_driver(self, fns, stream, workload, **driver_kw):
+        raise ValueError(
+            "mode 'serve' is inference-only — there is no training driver; "
+            "drive it through Session.serve_embeddings()")
+
+    def build_view(self, fns, workload, table) -> FrozenStoreView:
+        """Build the workload's store tier, ingest the (trained) master
+        table into it, and freeze it behind the read-only view."""
+        store = build_workload_store(workload, fns, donate=False)
+        store.ingest(table)
+        return FrozenStoreView(store)
 
 
 _STRATEGIES: Dict[str, Strategy] = {}
@@ -137,3 +185,5 @@ def available_strategies() -> Tuple[str, ...]:
 register_strategy(DriverStrategy("nestpipe", "nestpipe"))
 register_strategy(DriverStrategy("async", "async"))
 register_strategy(DriverStrategy("serial", "serial", dbp=False))
+# Inference (read-only serving) — see repro.serve.
+register_strategy(InferenceStrategy())

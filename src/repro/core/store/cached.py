@@ -101,6 +101,10 @@ class CachedStore(HostStore):
         # Skipping the admission keeps every cached row exactly valued;
         # the key is simply admitted a window or two later.
         self._admission_block: Optional[np.ndarray] = None
+        # Oracle allow-list (read-serving mode, see set_admission_allow):
+        # when set it REPLACES the frequency threshold — a missed key is
+        # admitted iff it lies within the visible request horizon.
+        self._admission_allow: Optional[np.ndarray] = None
 
         backend = self._backend
 
@@ -197,7 +201,13 @@ class CachedStore(HostStore):
         H2D): assign slots (evicting if needed) and scatter the staged rows
         into the device cache in place."""
         cap = self.capacity
-        want = self._freq[miss_keys] >= self.admit_threshold
+        if self._admission_allow is not None:
+            # Oracle mode (serving): admit exactly the within-horizon keys,
+            # no frequency threshold (BagPipe's insight — when the access
+            # stream is visible ahead of time, the horizon IS the policy).
+            want = np.isin(miss_keys, self._admission_allow)
+        else:
+            want = self._freq[miss_keys] >= self.admit_threshold
         if self._admission_block is not None and self._admission_block.size:
             fresh = ~np.isin(miss_keys, self._admission_block)
             self.admission_skips += int((want & ~fresh).sum())
@@ -280,6 +290,17 @@ class CachedStore(HostStore):
         ``_admission_block``; the async executor calls this under its
         master lock with the union key list of unapplied commits)."""
         self._admission_block = keys
+
+    def set_admission_allow(self, keys: Optional[np.ndarray]) -> None:
+        """Switch admission to within-horizon oracle mode: a missed key is
+        admitted iff it appears in ``keys`` — the union of keys visible in
+        the serving request queue (the BagPipe-style oracle window;
+        ``repro.serve.FrozenStoreView.set_read_horizon`` sets this before
+        every coalesced retrieve). Replaces the frequency threshold while
+        set; ``None`` restores training-batch frequency admission.
+        Eviction stays frequency-ranked — ``_freq`` counts per-retrieve on
+        this path too, so it IS the request popularity under serving."""
+        self._admission_allow = keys
 
     def _admit(self, admit_keys: np.ndarray, slot_ids: np.ndarray) -> None:
         self._slot_of_key[admit_keys] = slot_ids.astype(np.int32)

@@ -285,6 +285,22 @@ class ShardedStore:
         for s, sub in enumerate(self.shards):
             sub.set_admission_block(valid[owner == s] - s * rps)
 
+    def set_admission_allow(self, keys: Optional[np.ndarray]) -> None:
+        """Split the serving oracle window per owner and rebase to local
+        row ids (cached slices only; see CachedStore.set_admission_allow
+        — per-shard admission never crosses a host boundary)."""
+        if self.local_tier != "cached":
+            return
+        if keys is None:
+            for sub in self.shards:
+                sub.set_admission_allow(None)
+            return
+        rps = self.spec.rows_per_shard
+        valid = keys[keys != _SENTINEL]
+        owner = np.asarray(owner_of(valid, rps, self.num_shards))
+        for s, sub in enumerate(self.shards):
+            sub.set_admission_allow(valid[owner == s] - s * rps)
+
     # -- lifecycle ---------------------------------------------------------
 
     def ingest(self, table: EmbeddingTableState) -> EmbeddingTableState:

@@ -1,0 +1,31 @@
+"""repro.serve — high-QPS embedding inference over frozen store views.
+
+The inference half of the codebase: a read-only view over any
+EmbeddingStore tier (``view``), a window-coalescing request batcher
+(``batcher``), the dispatch router with pluggable heads (``router``),
+and zipf load generation with closed/open-loop drivers (``loadgen``).
+
+Layering rule: nothing in this package imports ``repro.api`` — the api
+layer (Session.serve_embeddings, the 'serve' strategy) builds stores
+and workloads and hands them down here pre-constructed.
+"""
+from .batcher import CoalescedWindow, LatencyLog, ServeRequest, WindowBatcher
+from .loadgen import run_closed_loop, run_open_loop, synthetic_requests
+from .router import HEADS, ServeRouter, build_router
+from .view import COMMIT_METRIC_KEYS, FrozenStoreView, ReadOnlyStoreError
+
+__all__ = [
+    "CoalescedWindow",
+    "LatencyLog",
+    "ServeRequest",
+    "WindowBatcher",
+    "run_closed_loop",
+    "run_open_loop",
+    "synthetic_requests",
+    "HEADS",
+    "ServeRouter",
+    "build_router",
+    "COMMIT_METRIC_KEYS",
+    "FrozenStoreView",
+    "ReadOnlyStoreError",
+]

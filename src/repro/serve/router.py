@@ -1,0 +1,189 @@
+"""ServeRouter: dispatch coalesced windows through a frozen store.
+
+One window trip is the DBP data path with the epilogue cut off:
+
+    plan (stage 3 routing)  ->  retrieve (stage 4a, DRAM->HBM)
+                            ->  head lookup (stage 5 FWP forward)
+
+and nothing else — no commit, no gradient, no buffer rotation. The
+router owns the jitted head, the oracle-horizon handoff to the frozen
+view, and the de-interleave of per-request results out of the coalesced
+window. Two heads are pluggable:
+
+- ``embedding``: returns the raw (F, D) embedding rows per request —
+  what a downstream ranker would consume;
+- ``dlrm``: runs the full dlrm dense forward (pooling + interaction +
+  top MLP) and returns one logit per request.
+
+This module must stay importable without ``repro.api`` (the api layer
+imports *us*); store/workload construction lives in
+``api/strategies.build_workload_store`` and is handed in pre-built.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.store.base import FetchPlan
+from ..models.dlrm import dlrm_forward
+from .batcher import CoalescedWindow, WindowBatcher
+from .view import FrozenStoreView
+
+HEADS = ("embedding", "dlrm")
+
+
+class ServeRouter:
+    """Pumps windows from a :class:`WindowBatcher` through a
+    :class:`FrozenStoreView` and de-interleaves per-request results."""
+
+    def __init__(
+        self,
+        engine,
+        view: FrozenStoreView,
+        batcher: WindowBatcher,
+        *,
+        head: str = "embedding",
+        params: Optional[Any] = None,
+        model_cfg: Optional[Any] = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if head not in HEADS:
+            raise ValueError(f"unknown head {head!r}; expected one of {HEADS}")
+        if head == "dlrm" and (params is None or model_cfg is None):
+            raise ValueError("head='dlrm' needs params and model_cfg")
+        self.engine = engine
+        self.view = view
+        self.batcher = batcher
+        self.head = head
+        self.params = params
+        self.model_cfg = model_cfg
+        self.clock = clock
+        self.results: Dict[int, np.ndarray] = {}
+        self.windows_served = 0
+        self._head_fn = None  # jit built lazily on first window
+
+    # -- head -------------------------------------------------------------
+
+    def _build_head(self, window: CoalescedWindow):
+        """Jit the head for this window shape. The dlrm dense forward is a
+        SEPARATE jit from the buffer lookup on purpose: fusing them lets
+        XLA reorder the interaction einsum against the gather and drift
+        the logits ~1e-7 off the master-table ground truth, while two jits
+        keep both serving and verification on identical standalone HLO —
+        bit-exact end to end."""
+        b, f = window.keys.shape
+        eng = self.engine
+        cdtype = getattr(eng, "compute_dtype", jnp.float32)
+
+        def _emb(buffer, plans):
+            plan0 = jax.tree.map(lambda x: x[0], plans)
+            emb = eng.lookup_from_buffer(buffer, plan0, (b, f), 1)
+            return emb.astype(cdtype)
+
+        emb_fn = jax.jit(_emb)
+        if self.head == "embedding":
+            return emb_fn, None
+
+        cfg = self.model_cfg
+        dlrm_fn = jax.jit(lambda params, emb, dense: dlrm_forward(
+            params, cfg, emb.astype(jnp.float32), dense))
+        return emb_fn, dlrm_fn
+
+    # -- dispatch ---------------------------------------------------------
+
+    def submit(self, keys: np.ndarray, dense: Optional[np.ndarray] = None) -> int:
+        return self.batcher.submit(keys, dense)
+
+    def _dispatch(self, window: CoalescedWindow) -> None:
+        # Oracle horizon = this window's keys + everything still queued:
+        # the cached tier admits exactly the keys it will see again.
+        horizon = np.union1d(np.unique(window.keys),
+                             self.batcher.pending_keys()).astype(np.int32)
+        self.view.set_read_horizon(horizon)
+
+        plan: FetchPlan = self.view.plan(window.keys[None])
+        buffer = self.view.retrieve(plan)
+        if self._head_fn is None:
+            self._head_fn = self._build_head(window)
+        emb_fn, dlrm_fn = self._head_fn
+        out = emb_fn(buffer, plan.window.plans)
+        if dlrm_fn is not None:
+            out = dlrm_fn(self.params, out, jnp.asarray(window.dense))
+        out_np = np.asarray(jax.device_get(out))  # blocks: result is real
+
+        ovf = int(jax.device_get(self.engine.overflow_metric(plan.window)))
+        if ovf > 0:
+            raise RuntimeError(
+                f"serve window overflowed the routing buffer (overflow={ovf}) "
+                "— raise fwp_buffer_slack or shrink max_batch")
+
+        t = self.clock()
+        for i, req in enumerate(window.requests):  # padding rows dropped
+            self.results[req.rid] = out_np[i]
+            self.batcher.log.done(req.rid, t)
+        self.windows_served += 1
+
+    def pump(self, force: bool = False) -> int:
+        """Serve every due window (all of them, if ``force``). Returns the
+        number of windows dispatched."""
+        n = 0
+        while True:
+            window = self.batcher.next_window(force=force)
+            if window is None:
+                return n
+            self._dispatch(window)
+            n += 1
+
+    def drain(self) -> None:
+        """Flush the queue to empty, ignoring the wait policy."""
+        self.pump(force=True)
+
+    def take(self, rid: int) -> np.ndarray:
+        """Pop the result for ``rid`` (KeyError if not yet served)."""
+        return self.results.pop(rid)
+
+    # -- metrics ----------------------------------------------------------
+
+    def metrics(self) -> Dict[str, float]:
+        out = dict(self.batcher.log.summary())
+        out["windows"] = float(self.windows_served)
+        if self.windows_served:
+            out["window_fill"] = round(
+                self.batcher.rows_dispatched
+                / (self.windows_served * self.batcher.max_batch), 4)
+        sm = self.view.metrics()
+        out.update(sm)
+        hits, misses = sm.get("cache_hits", 0.0), sm.get("cache_misses", 0.0)
+        if hits + misses > 0:
+            out["cache_hit_rate"] = round(hits / (hits + misses), 4)
+        return out
+
+
+def build_router(
+    workload,
+    view: FrozenStoreView,
+    *,
+    params: Optional[Any] = None,
+    head: str = "embedding",
+    max_wait_ms: float = 2.0,
+    clustering: bool = True,
+    clock: Callable[[], float] = time.perf_counter,
+) -> ServeRouter:
+    """Wire a router to a serve-resolved workload (n_micro must be 1: one
+    request window maps to exactly one lookup plan)."""
+    (n, b, f) = workload.batch_shapes["keys"][0]
+    if n != 1:
+        raise ValueError(
+            f"serving needs fwp_microbatches=1, got a window of {n} "
+            "(resolve the workload through the 'serve' strategy)")
+    batcher = WindowBatcher(b, max_wait_ms, clock=clock, clustering=clustering)
+    return ServeRouter(
+        workload.engine, view, batcher, head=head, params=params,
+        model_cfg=workload.bundle.cfg, clock=clock)
+
+
+__all__ = ["ServeRouter", "build_router", "HEADS"]

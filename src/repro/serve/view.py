@@ -1,0 +1,134 @@
+"""FrozenStoreView: a read-only view over any EmbeddingStore tier.
+
+Serving is the training data path minus the epilogue: requests are routed
+(DBP stage 3), rows are retrieved into a dual buffer (stage 4a), and the
+FWP lookup serves embeddings out of that buffer — but nothing is ever
+written back. This view freezes an already-``ingest``-ed store behind the
+same :class:`~repro.core.store.EmbeddingStore` read surface:
+
+- ``plan`` / ``route`` / ``plan_from_window`` / ``retrieve`` delegate to
+  the wrapped tier unchanged, so served bytes are exactly what training
+  retrieval would produce for the same keys (bit-exactness is
+  test-asserted across device/host/cached/sharded).
+- every mutation path — ``commit``, ``ingest``, ``release``,
+  ``export_table`` (the checkpoint write), ``scatter_host`` — raises
+  :class:`ReadOnlyStoreError` loudly. Checkpointing a serving replica is
+  a category error: export from the OWNING training store/session, then
+  ingest into a fresh replica.
+- ``flush`` is a no-op: there is nothing to reconcile when the master
+  never changes (the cached tier's eviction writeback rewrites identical
+  bytes, so the DRAM master is value-invariant under reads).
+- ``metrics`` snapshots are read-path well-formed: commit-stage fields
+  (``commit_ms``, ``commits``) would report spurious zero epochs for a
+  stage that structurally does not exist here, so they are dropped
+  rather than reported as zeros. ``d2h_bytes`` survives — cache
+  evictions DO move bytes D2H on a pure read path.
+
+Read-tuned cache admission: :meth:`set_read_horizon` forwards the request
+queue's visible key horizon to the wrapped cached tier
+(``set_admission_allow``), switching admission from training-batch
+frequency to a BagPipe-style within-horizon oracle — see
+``core/store/cached.py``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from ..core.embedding.engine import DualBuffer
+from ..core.store.base import FetchPlan
+
+# Commit-stage metric fields that have no read-path meaning: reporting
+# them as zeros from a view that structurally cannot commit is the
+# "spurious zero commit epochs" bug this view exists to fix.
+COMMIT_METRIC_KEYS = ("commit_ms", "commits")
+
+
+class ReadOnlyStoreError(RuntimeError):
+    """A mutation was attempted through a FrozenStoreView."""
+
+
+class FrozenStoreView:
+    """Read-only :class:`EmbeddingStore` facade over an ingested tier."""
+
+    def __init__(self, store):
+        if not getattr(store, "owns_master", False):
+            raise ValueError(
+                "FrozenStoreView wraps an INGESTED store (ingest the "
+                "master table first, then freeze)")
+        self._store = store
+        self.tier = f"frozen-{store.tier}"
+        self.reads = 0
+
+    @property
+    def store(self):
+        """The wrapped (mutable) tier — for introspection only."""
+        return self._store
+
+    @property
+    def owns_master(self) -> bool:
+        return self._store.owns_master
+
+    # -- read path: straight delegation ----------------------------------
+
+    def route(self, keys) -> Any:
+        return self._store.route(keys)
+
+    def plan_from_window(self, window) -> FetchPlan:
+        return self._store.plan_from_window(window)
+
+    def plan(self, keys) -> FetchPlan:
+        return self._store.plan(keys)
+
+    def retrieve(self, plan: FetchPlan) -> DualBuffer:
+        self.reads += 1
+        return self._store.retrieve(plan)
+
+    # -- read-tuned cache admission --------------------------------------
+
+    def set_read_horizon(self, keys: Optional[np.ndarray]) -> None:
+        """Hand the cached tier the oracle window: the union of keys
+        visible in the request queue (plus the window being dispatched).
+        No-op on tiers without an admission policy (device/host)."""
+        setter = getattr(self._store, "set_admission_allow", None)
+        if setter is not None:
+            setter(keys)
+
+    # -- mutation paths: rejected loudly ---------------------------------
+
+    def _reject(self, op: str):
+        raise ReadOnlyStoreError(
+            f"{op} on a FrozenStoreView({self._store.tier}): serving "
+            "replicas are read-only — export/checkpoint from the owning "
+            "training store, never through a frozen view")
+
+    def commit(self, buffer: DualBuffer, plan: Optional[FetchPlan] = None) -> None:
+        self._reject("commit")
+
+    def ingest(self, table):
+        self._reject("ingest")
+
+    def release(self):
+        self._reject("release")
+
+    def export_table(self):
+        self._reject("export_table (checkpoint write)")
+
+    def scatter_host(self, keys, rows, accum) -> None:
+        self._reject("scatter_host")
+
+    def flush(self) -> None:
+        """No-op: a frozen master has nothing to reconcile."""
+
+    # -- metrics ----------------------------------------------------------
+
+    def metrics(self) -> Dict[str, float]:
+        out = {k: v for k, v in self._store.metrics().items()
+               if k not in COMMIT_METRIC_KEYS}
+        out["read_only"] = 1.0
+        out["reads"] = float(self.reads)
+        return out
+
+
+__all__ = ["FrozenStoreView", "ReadOnlyStoreError", "COMMIT_METRIC_KEYS"]

@@ -1,0 +1,199 @@
+"""Serving exactness + frozen-view semantics (repro.serve).
+
+- served rows are bit-identical to a training-side master-table lookup of
+  the same keys, on every store tier (device/host/cached and the S=1
+  sharded tier on a 1-device mesh), for both heads;
+- the frozen view rejects every mutation path loudly and its metrics are
+  read-path well-formed (no spurious zero commit epochs);
+- a restore-then-serve roundtrip matches serving straight off the trained
+  session (the post-training export IS what the checkpoint holds);
+- the master table is value-invariant under serving.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+from jax.sharding import Mesh
+
+from repro.api import Session
+from repro.serve import COMMIT_METRIC_KEYS, FrozenStoreView, ReadOnlyStoreError
+
+ARCH = "dlrm-cached"  # steep zipf: exercises the hot-cache admission path
+
+
+def make_session(store="cached", *, seed=0, mesh=None, ckpt_dir="",
+                 ckpt_every=0):
+    return Session.from_arch(
+        ARCH, mode="nestpipe", reduced=True, global_batch=16, seq_len=8,
+        n_micro=4, store=store, lr=1e-2, seed=seed, data_seed=0, mesh=mesh,
+        ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)
+
+
+# ---------------------------------------------------------------------------
+# exactness: served == lookup_from_master, every tier, both heads
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("store", ["device", "host", "cached"])
+def test_served_rows_bit_exact_per_tier(store):
+    sess = make_session(store)
+    sess.train(steps=2)
+    rep = sess.serve_embeddings(num_requests=40, max_batch=8, store=store,
+                                check_exact=True)
+    assert rep.summary["exact"] == 1
+    assert rep.summary["max_abs_diff"] == 0.0
+    assert rep.summary["store"] == f"frozen-{store}"
+    assert rep.results.shape[0] == 40
+    assert rep.summary["requests_done"] == 40.0
+
+
+def test_dlrm_head_bit_exact():
+    sess = make_session("cached")
+    sess.train(steps=2)
+    rep = sess.serve_embeddings(num_requests=24, max_batch=8, head="dlrm",
+                                check_exact=True)
+    assert rep.summary["exact"] == 1 and rep.summary["max_abs_diff"] == 0.0
+    assert rep.results.shape == (24,)  # one logit per request
+
+
+def test_sharded_s1_bit_exact():
+    """host/cached on a 1-device mesh route to the SHARDED tier; serving
+    through it must still replay the master bit for bit."""
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    sess = make_session("cached", mesh=mesh)
+    sess.train(steps=2)
+    rep = sess.serve_embeddings(num_requests=32, max_batch=16,
+                                check_exact=True)
+    assert rep.summary["store"] == "frozen-sharded-cached"
+    assert rep.summary["exact"] == 1 and rep.summary["max_abs_diff"] == 0.0
+
+
+def test_open_loop_matches_closed_loop_results():
+    """Arrival pacing changes window formation, never the served values."""
+    sess = make_session("cached")
+    sess.train(steps=2)
+    a = sess.serve_embeddings(num_requests=24, max_batch=8, seed=3)
+    b = sess.serve_embeddings(num_requests=24, max_batch=8, seed=3,
+                              qps=2000.0)
+    np.testing.assert_array_equal(a.results, b.results)
+
+
+def test_untrained_session_serves_fresh_init_exactly():
+    rep = make_session("host").serve_embeddings(
+        num_requests=16, max_batch=8, check_exact=True)
+    assert rep.summary["exact"] == 1
+
+
+# ---------------------------------------------------------------------------
+# read-tuned cache + read-path metrics
+# ---------------------------------------------------------------------------
+
+
+def test_cached_tier_serves_hits_and_clean_metrics():
+    sess = make_session("cached")
+    sess.train(steps=2)
+    rep = sess.serve_embeddings(num_requests=64, max_batch=16)
+    s = rep.summary
+    # oracle admission admits within-horizon keys -> zipf repeats hit
+    assert s["cache_hits"] > 0 and s["cache_hit_rate"] > 0
+    assert s["read_only"] == 1.0 and s["reads"] == s["windows"]
+    # read-path well-formed: no spurious zero commit epochs
+    for k in COMMIT_METRIC_KEYS:
+        assert k not in s, (k, sorted(s))
+    assert "plan_ms" in s and "retrieve_ms" in s  # read stages still timed
+
+
+def test_master_table_value_invariant_under_serving():
+    sess = make_session("device")
+    sess.train(steps=2)
+    before = np.array(jax.device_get(sess.state.table.rows), copy=True)
+    sess.serve_embeddings(num_requests=32, max_batch=8)
+    after = np.asarray(jax.device_get(sess.state.table.rows))
+    np.testing.assert_array_equal(before, after)
+
+
+# ---------------------------------------------------------------------------
+# frozen view: every mutation path rejected loudly
+# ---------------------------------------------------------------------------
+
+
+class _FakeStore:
+    tier = "host"
+    owns_master = True
+
+    def metrics(self):
+        return {"commit_ms": 1.0, "commits": 2.0, "plan_ms": 3.0,
+                "d2h_bytes": 4.0}
+
+
+def test_frozen_view_rejects_all_mutations():
+    view = FrozenStoreView(_FakeStore())
+    assert view.tier == "frozen-host"
+    for op, call in [
+        ("commit", lambda: view.commit(None, None)),
+        ("ingest", lambda: view.ingest(None)),
+        ("release", lambda: view.release()),
+        ("export_table", lambda: view.export_table()),
+        ("scatter_host", lambda: view.scatter_host(None, None, None)),
+    ]:
+        with pytest.raises(ReadOnlyStoreError, match="read-only"):
+            call()
+    view.flush()  # no-op, must NOT raise
+
+
+def test_frozen_view_requires_ingested_store():
+    class _Empty:
+        owns_master = False
+        tier = "device"
+
+    with pytest.raises(ValueError, match="INGESTED"):
+        FrozenStoreView(_Empty())
+
+
+def test_frozen_view_metrics_drop_commit_fields_only():
+    m = FrozenStoreView(_FakeStore()).metrics()
+    assert "commit_ms" not in m and "commits" not in m
+    assert m["plan_ms"] == 3.0
+    assert m["d2h_bytes"] == 4.0  # evictions DO move bytes D2H on reads
+    assert m["read_only"] == 1.0 and m["reads"] == 0.0
+
+
+def test_serve_strategy_has_no_training_driver():
+    from repro.api import get_strategy
+
+    with pytest.raises(ValueError, match="inference-only"):
+        get_strategy("serve").build_driver(None, None, None)
+
+
+def test_llm_and_recsys_paths_reject_each_other():
+    sess = make_session("device")
+    with pytest.raises(ValueError, match="serve_embeddings"):
+        sess.serve()
+
+
+# ---------------------------------------------------------------------------
+# restore-then-serve roundtrip
+# ---------------------------------------------------------------------------
+
+
+def test_restore_then_serve_matches_post_training_serve(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    a = make_session("cached", ckpt_dir=ckpt)
+    a.train(steps=3)
+    a.save()
+    served_a = a.serve_embeddings(num_requests=24, max_batch=8, seed=5,
+                                  check_exact=True)
+    assert served_a.summary["exact"] == 1
+
+    b = make_session("cached", seed=11, ckpt_dir=ckpt)  # different init seed
+    b.restore()
+    served_b = b.serve_embeddings(num_requests=24, max_batch=8, seed=5,
+                                  check_exact=True)
+    assert served_b.summary["exact"] == 1
+    np.testing.assert_array_equal(served_a.results, served_b.results)

@@ -1,0 +1,196 @@
+"""WindowBatcher scheduling under a scripted fake clock.
+
+Every assert is deterministic: time only moves when the test advances the
+injected clock, so max-wait/max-batch boundaries are tested exactly (no
+wall-time, no sleeps)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.serve import LatencyLog, WindowBatcher
+
+F = 4  # keys per request
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance_ms(self, ms: float) -> None:
+        self.t += ms / 1e3
+
+
+def keys_of(v, f=F):
+    return np.full((f,), v, np.int32)
+
+
+def make(max_batch=4, max_wait_ms=2.0, **kw):
+    clock = FakeClock()
+    return WindowBatcher(max_batch, max_wait_ms, clock=clock, **kw), clock
+
+
+# ---------------------------------------------------------------------------
+# max-batch boundary
+# ---------------------------------------------------------------------------
+
+
+def test_fills_close_a_window_immediately():
+    b, clock = make(max_batch=4)
+    for i in range(3):
+        b.submit(keys_of(i))
+    assert not b.ready()  # 3 < max_batch and no time has passed
+    assert b.next_window() is None
+    b.submit(keys_of(3))
+    assert b.ready()  # full window, zero wait
+    w = b.next_window()
+    assert [r.rid for r in w.requests] == [0, 1, 2, 3]
+    assert b.pending() == 0 and b.next_window() is None
+
+
+def test_overfull_queue_drains_in_windows():
+    b, clock = make(max_batch=2, clustering=False)
+    for i in range(5):
+        b.submit(keys_of(i))
+    got = []
+    while (w := b.next_window()) is not None:
+        got.append([r.rid for r in w.requests])
+    assert got == [[0, 1], [2, 3]]  # 5th waits for the policy...
+    clock.advance_ms(2.0)
+    assert [r.rid for r in b.next_window().requests] == [4]  # ...then drains
+
+
+# ---------------------------------------------------------------------------
+# max-wait boundary (>= triggers, exactly at the bound)
+# ---------------------------------------------------------------------------
+
+
+def test_max_wait_boundary_is_inclusive():
+    b, clock = make(max_batch=4, max_wait_ms=2.0)
+    b.submit(keys_of(0))
+    clock.advance_ms(1.999)
+    assert not b.ready()
+    clock.advance_ms(0.001)  # exactly 2.0 ms of age
+    assert b.ready()
+    w = b.next_window()
+    assert [r.rid for r in w.requests] == [0]
+
+
+def test_wait_clock_measures_oldest_request():
+    b, clock = make(max_batch=4, max_wait_ms=2.0)
+    b.submit(keys_of(0))
+    clock.advance_ms(1.5)
+    b.submit(keys_of(1))  # young request must not reset the deadline
+    clock.advance_ms(0.5)
+    assert b.ready()  # oldest aged 2.0 ms
+    assert [r.rid for r in b.next_window().requests] == [0, 1]
+
+
+def test_force_drains_partial_window_regardless_of_policy():
+    b, clock = make(max_batch=4, max_wait_ms=1e9)
+    b.submit(keys_of(0))
+    assert b.next_window() is None
+    w = b.next_window(force=True)
+    assert [r.rid for r in w.requests] == [0]
+    assert b.next_window(force=True) is None  # empty queue stays None
+
+
+# ---------------------------------------------------------------------------
+# window contents: padding + de-interleaving + intake validation
+# ---------------------------------------------------------------------------
+
+
+def test_rows_match_their_requests_and_padding_repeats_row0():
+    b, clock = make(max_batch=4)
+    b.submit(keys_of(7), dense=np.asarray([1.0, 2.0]))
+    b.submit(keys_of(9), dense=np.asarray([3.0, 4.0]))
+    w = b.next_window(force=True)
+    assert w.keys.shape == (4, F) and w.dense.shape == (4, 2)
+    for i, r in enumerate(w.requests):  # row i belongs to request i
+        np.testing.assert_array_equal(w.keys[i], r.keys)
+    np.testing.assert_array_equal(w.dense[1], [3.0, 4.0])
+    # padded rows repeat row 0: no NEW unique keys enter the plan
+    np.testing.assert_array_equal(w.keys[2], w.keys[0])
+    np.testing.assert_array_equal(w.keys[3], w.keys[0])
+    assert set(np.unique(w.keys)) == {7, 9}
+
+
+def test_mismatched_key_shape_rejected():
+    b, clock = make()
+    b.submit(keys_of(0))
+    with pytest.raises(ValueError, match="key shape"):
+        b.submit(np.zeros((F + 1,), np.int32))
+
+
+def test_pending_keys_is_sorted_union_of_queue():
+    b, clock = make(max_batch=8)
+    assert b.pending_keys().size == 0
+    b.submit(np.asarray([5, 3, 5, 1], np.int32))
+    b.submit(np.asarray([9, 3, 2, 2], np.int32))
+    np.testing.assert_array_equal(b.pending_keys(), [1, 2, 3, 5, 9])
+
+
+# ---------------------------------------------------------------------------
+# clustering: key-similar requests coalesce, the oldest never starves
+# ---------------------------------------------------------------------------
+
+
+def test_clustering_selects_key_similar_window_with_oldest():
+    b, clock = make(max_batch=2, clustering=True)
+    # oldest shares keys with rid 3; rids 1/2 share with each other
+    b.submit(np.asarray([10, 11, 12, 13], np.int32))  # rid 0 (oldest)
+    b.submit(np.asarray([50, 51, 52, 53], np.int32))  # rid 1
+    b.submit(np.asarray([50, 51, 52, 54], np.int32))  # rid 2
+    b.submit(np.asarray([10, 11, 12, 14], np.int32))  # rid 3
+    w = b.next_window()
+    rids = [r.rid for r in w.requests]
+    assert 0 in rids  # head of line always drains
+    assert rids == [0, 3]  # its key-cluster partner rides along
+    w2 = b.next_window()
+    assert [r.rid for r in w2.requests] == [1, 2]
+
+
+def test_fifo_when_clustering_disabled():
+    b, clock = make(max_batch=2, clustering=False)
+    b.submit(np.asarray([10, 11, 12, 13], np.int32))
+    b.submit(np.asarray([50, 51, 52, 53], np.int32))
+    b.submit(np.asarray([10, 11, 12, 14], np.int32))
+    b.submit(np.asarray([50, 51, 52, 54], np.int32))
+    assert [r.rid for r in b.next_window().requests] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# latency bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_latency_log_percentiles_from_scripted_times():
+    log = LatencyLog()
+    for rid, (t_in, t_disp, t_out) in enumerate(
+            [(0.0, 0.002, 0.004), (0.001, 0.002, 0.004), (0.0, 0.01, 0.02)]):
+        log.arrive(rid, t_in)
+        log.dispatch(rid, t_disp)
+        log.done(rid, t_out)
+    np.testing.assert_allclose(log.latencies_ms(), [4.0, 3.0, 20.0])
+    s = log.summary()
+    assert s["requests_done"] == 3.0
+    assert s["latency_p50_ms"] == 4.0
+    assert s["latency_max_ms"] == 20.0
+    assert s["wait_mean_ms"] == round((2.0 + 1.0 + 10.0) / 3, 4)
+
+
+def test_batcher_records_arrival_and_dispatch_on_fake_clock():
+    b, clock = make(max_batch=2)
+    b.submit(keys_of(0))
+    clock.advance_ms(3.0)
+    b.submit(keys_of(1))
+    b.next_window()  # full -> dispatched at t=3ms
+    waits = b.log.waits_ms()
+    np.testing.assert_allclose(waits, [3.0, 0.0])
+    assert b.windows_formed == 1 and b.rows_dispatched == 2
