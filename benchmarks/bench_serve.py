@@ -6,7 +6,11 @@ table behind a FrozenStoreView (``repro.serve``): the closed-loop cell
 open-loop cell (``serve_p99``) paces arrivals at half the measured
 closed-loop rate so p50/p99 reflect the max-wait/max-batch coalescing
 policy rather than raw device speed. A device-tier closed-loop twin
-(``serve_qps_store_device``) pins the cache's contribution.
+(``serve_qps_store_device``) pins the cache's contribution, and a cached
+``sparse_comm="pack"`` twin (``serve_qps_zipf_pack``) runs the read path
+through the lossless sparse-comm codec — still ``exact=1``, with the
+wire/idx/h2d byte ledger on the record so the read-path savings are a
+trajectory number (core/store/comm.py).
 
 Every cell runs with ``check_exact=True`` — served results are recomputed
 from the master table via ``lookup_from_master`` and the derived field
@@ -35,10 +39,11 @@ ARCH = "dlrm-cached"  # steep zipf: the hot-cache serving regime
 
 
 def _serve_once(sess: Session, *, requests: int, max_batch: int,
-                store: str, qps: Optional[float] = None) -> Dict[str, float]:
+                store: str, qps: Optional[float] = None,
+                sparse_comm: Optional[str] = None) -> Dict[str, float]:
     rep = sess.serve_embeddings(
         num_requests=requests, max_batch=max_batch, store=store,
-        qps=qps, check_exact=True)
+        qps=qps, sparse_comm=sparse_comm, check_exact=True)
     return rep.summary
 
 
@@ -69,19 +74,28 @@ def main(argv: Optional[List[str]] = None):
                 "max_batch": max_batch, "train_steps": steps,
                 "reps": reps, "reduced": True}
 
-    # closed loop (sustained throughput), cached + device twin, interleaved
-    closed: Dict[str, List[Dict[str, float]]] = {"cached": [], "device": []}
+    # closed loop (sustained throughput): cached + device twin + a cached
+    # pack twin (sparse-comm read path — bit-exact, smaller wire), all
+    # interleaved within each rep
+    closed: Dict[str, List[Dict[str, float]]] = {
+        "cached": [], "device": [], "cached_pack": []}
     for _rep in range(reps):
-        for store in ("cached", "device"):
-            closed[store].append(_serve_once(
-                sess, requests=n, max_batch=max_batch, store=store))
+        for cell, store, comm in (("cached", "cached", None),
+                                  ("device", "device", None),
+                                  ("cached_pack", "cached", "pack")):
+            closed[cell].append(_serve_once(
+                sess, requests=n, max_batch=max_batch, store=store,
+                sparse_comm=comm))
     best = _min_by(closed["cached"], "wall_s")
     emit(
         "serve_qps_zipf",
         best["wall_s"] * 1e6 / n,  # us per request, sustained
         f"qps={best['qps']};hit_rate={best['cache_hit_rate']:.3f};"
         f"exact={best['exact']};max_abs_diff={best['max_abs_diff']};"
-        f"windows={int(best['windows'])};window_fill={best['window_fill']}",
+        f"windows={int(best['windows'])};window_fill={best['window_fill']};"
+        f"wire_bytes={int(best.get('wire_bytes', 0))};"
+        f"idx_bytes={int(best.get('idx_bytes', 0))};"
+        f"h2d_bytes={int(best.get('h2d_bytes', 0))}",
         config=base_cfg,
     )
     bdev = _min_by(closed["device"], "wall_s")
@@ -91,6 +105,17 @@ def main(argv: Optional[List[str]] = None):
         f"qps={bdev['qps']};exact={bdev['exact']};"
         f"max_abs_diff={bdev['max_abs_diff']}",
         config={**base_cfg, "store": "device"},
+    )
+    bpack = _min_by(closed["cached_pack"], "wall_s")
+    emit(
+        "serve_qps_zipf_pack",
+        bpack["wall_s"] * 1e6 / n,
+        f"qps={bpack['qps']};exact={bpack['exact']};"
+        f"max_abs_diff={bpack['max_abs_diff']};"
+        f"wire_bytes={int(bpack.get('wire_bytes', 0))};"
+        f"idx_bytes={int(bpack.get('idx_bytes', 0))};"
+        f"h2d_bytes={int(bpack.get('h2d_bytes', 0))}",
+        config={**base_cfg, "sparse_comm": "pack"},
     )
 
     # open loop at half the measured sustained rate: latency under a

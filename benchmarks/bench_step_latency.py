@@ -45,6 +45,18 @@ presence and identical losses across the three cells — NEVER a
 throughput ratio (the CPU simulation round-trips shard buffers through
 numpy; real accelerators are the target regime).
 
+Sparse-comm axis (``--sparse-comm``): the dlrm-cached NestPipe loop under
+each sparse-path compression mode (``core/store/comm.py``), interleaved
+within each rep with min-of-reps like every other store cell
+(``table2_step_latency_comm_{off,pack,int8}``). Each cell records the
+modeled byte ledger (wire/h2d/d2h/idx); the ``pack`` cell additionally
+records ``losses_equal_off`` (the lossless contract, compared step-exact
+against the ``off`` cell's loss trajectory) and the ``int8`` cell records
+``max_loss_dev`` + ``lossy=1`` (explicitly approximate, loss-parity on
+the record). CI asserts the byte savings and the exactness flags — NEVER
+a latency ratio (same rule as the mesh cells: CPU-modeled traffic, real
+accelerators are the target regime).
+
 ``REPRO_BENCH_STEPS`` / ``REPRO_BENCH_BATCH`` / ``REPRO_BENCH_REPS``
 shrink the run for CI's perf-smoke job (trajectory-only, no thresholds).
 """
@@ -54,7 +66,7 @@ import argparse
 import os
 from typing import Dict, List, Optional
 
-from repro.core.store import STAGE_TIMER_KEYS, STORES
+from repro.core.store import SPARSE_COMMS, STAGE_TIMER_KEYS, STORES
 
 from .common import emit, make_bench_mesh, run_driver
 
@@ -96,6 +108,26 @@ def _store_cells(steps: int, global_batch: int, reps: int,
                 if cell not in best or s["mean_step_s"] < best[cell]["mean_step_s"]:
                     best[cell] = s
     return best
+
+
+def _comm_cells(steps: int, global_batch: int, reps: int,
+                modes: List[str]):
+    """Interleaved sparse-comm A/B on the cached tier, min-of-reps per
+    cell. Also returns each mode's step-exact loss trajectory (runs are
+    same-seed deterministic, so the trajectory is rep-invariant) for the
+    pack/int8 exactness records."""
+    best: Dict[str, dict] = {}
+    losses: Dict[str, List[float]] = {}
+    for _rep in range(reps):
+        for mode in modes:  # interleave: one cell per mode per rep
+            _, stats, _ = run_driver(
+                CACHED_ARCH, mode="nestpipe", steps=steps, n_micro=4,
+                global_batch=global_batch, store="cached", sparse_comm=mode)
+            s = stats.summary()
+            losses[mode] = [float(x) for x in stats.losses]
+            if mode not in best or s["mean_step_s"] < best[mode]["mean_step_s"]:
+                best[mode] = s
+    return best, losses
 
 
 _MESH_MARKER = "MESH_CELLS_JSON:"
@@ -165,6 +197,10 @@ def main(argv: Optional[List[str]] = None):
                    default="both",
                    help="async host-stage executor axis for the store cells "
                         "(both = interleaved sync + async twins)")
+    p.add_argument("--sparse-comm", action="append", choices=SPARSE_COMMS,
+                   default=None,
+                   help="sparse-path compression modes for the cached-tier "
+                        "comm cells (repeatable; default: all three)")
     p.add_argument("--mesh-devices", type=int,
                    default=int(os.environ.get("REPRO_BENCH_MESH_DEVICES",
                                               "0")),
@@ -246,6 +282,41 @@ def main(argv: Optional[List[str]] = None):
                     "async_stages": cell.endswith("_async"),
                     "mesh_devices": args.mesh_devices if is_mesh else 0,
                     "reps": args.reps, "reduced": True},
+        )
+
+    # sparse-comm cells: the cached-tier loop under each compression mode,
+    # interleaved within reps; pack carries the lossless contract on the
+    # record, int8 its loss-parity deviation
+    comm_modes = args.sparse_comm or list(SPARSE_COMMS)
+    comm_best, comm_losses = _comm_cells(steps, c_batch, max(args.reps, 1),
+                                         comm_modes)
+    for mode in comm_modes:
+        s = comm_best[mode]
+        derived = f"final_loss={s['final_loss']:.4f}"
+        for k in ("wire_bytes", "h2d_bytes", "d2h_bytes", "idx_bytes"):
+            if k in s:
+                derived += f";{k}={int(s[k])}"
+        if "cache_hit_rate" in s:
+            derived += f";hit_rate={s['cache_hit_rate']:.3f}"
+        if mode == "pack" and "off" in comm_losses:
+            derived += (";losses_equal_off="
+                        f"{int(comm_losses['pack'] == comm_losses['off'])}")
+        if mode == "int8":
+            derived += ";lossy=1"
+            if "off" in comm_losses:
+                dev = max((abs(a - b) for a, b in zip(comm_losses["int8"],
+                                                      comm_losses["off"])),
+                          default=0.0)
+                derived += f";max_loss_dev={dev:.6f}"
+            derived += (f";rows_synced={int(s.get('comm_rows_synced', 0))}"
+                        f";rows_deferred={int(s.get('comm_rows_deferred', 0))}")
+        emit(
+            f"table2_step_latency_comm_{mode}",
+            s["mean_step_s"] * 1e6,
+            derived,
+            config={"arch": CACHED_ARCH, "mode": "nestpipe", "steps": steps,
+                    "global_batch": c_batch, "n_micro": 4, "store": "cached",
+                    "sparse_comm": mode, "reps": args.reps, "reduced": True},
         )
 
 

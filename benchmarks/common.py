@@ -40,6 +40,7 @@ def run_driver(arch: str, *, mode: str, steps: int = 10, n_micro: int = 4,
                global_batch: int = 32, seq_len: int = 32,
                clustering: str = "keycentric", seed: int = 0,
                unroll: bool = True, store: str = "auto",
+               sparse_comm: str = "auto",
                async_stages: str = "auto", mesh=None):
     """Run the real host pipeline on a reduced config; return (state, stats, wl).
 
@@ -51,7 +52,7 @@ def run_driver(arch: str, *, mode: str, steps: int = 10, n_micro: int = 4,
         arch, mode=mode, reduced=True, global_batch=global_batch,
         seq_len=seq_len, n_micro=n_micro, clustering=clustering,
         unroll=unroll, t_chunk=32, lr=1e-3, seed=seed, store=store,
-        async_stages=async_stages, mesh=mesh,
+        sparse_comm=sparse_comm, async_stages=async_stages, mesh=mesh,
     )
     report = sess.bench(steps)
     return report.state, report.stats, sess.workload

@@ -129,6 +129,7 @@ class Session:
         store: str = "auto",
         cache_rows: int = 0,
         prefetch_ahead: int = 1,
+        sparse_comm: str = "auto",
         async_stages: str = "auto",
         stage_workers: int = 1,
         npcfg: Optional[NestPipeConfig] = None,
@@ -167,6 +168,12 @@ class Session:
         executor in ``repro.core.store.async_exec``; ``"auto"`` resolves
         ``$REPRO_ASYNC_STAGES`` then off) and ``stage_workers`` sizes its
         plan/retrieve pool.
+        ``sparse_comm`` selects sparse-path compression for the host-side
+        tiers (``"off" | "pack" | "int8"``; ``"auto"`` resolves
+        ``$REPRO_SPARSE_COMM`` then off — ``repro.core.store.comm``).
+        ``pack`` is lossless and replays ``off`` bit for bit; ``int8`` is
+        explicitly approximate (quantized rows + frequency-aware selective
+        sync with error feedback).
         """
         strategy = get_strategy(mode)  # fail fast on unknown modes
         npcfg = npcfg or NestPipeConfig(
@@ -182,6 +189,8 @@ class Session:
             overlay["cache_rows"] = cache_rows
         if prefetch_ahead != 1:
             overlay["prefetch_ahead"] = prefetch_ahead
+        if sparse_comm != "auto":
+            overlay["sparse_comm"] = sparse_comm
         if async_stages != "auto":
             overlay["async_stages"] = async_stages
         if stage_workers != 1:
@@ -465,6 +474,7 @@ class Session:
         zipf_a: Optional[float] = None,
         head: str = "embedding",
         store: Optional[str] = None,
+        sparse_comm: Optional[str] = None,
         check_exact: bool = False,
         seed: Optional[int] = None,
     ) -> EmbedServeReport:
@@ -486,6 +496,9 @@ class Session:
         request). ``check_exact`` recomputes every result from the master
         table via ``lookup_from_master`` and reports
         ``exact``/``max_abs_diff`` (serving is bit-exact by construction).
+        ``sparse_comm`` overrides the session's sparse-path compression for
+        the read path (``"pack"`` keeps serving bit-exact — the view's
+        ``metrics()`` surfaces ``wire_bytes``/``idx_bytes`` savings).
         """
         from ..serve import build_router, run_closed_loop, run_open_loop, \
             synthetic_requests
@@ -500,6 +513,8 @@ class Session:
         npcfg = self.workload.npcfg
         if store is not None and store != "auto":
             npcfg = dataclasses.replace(npcfg, store=store)
+        if sparse_comm is not None and sparse_comm != "auto":
+            npcfg = dataclasses.replace(npcfg, sparse_comm=sparse_comm)
         npcfg = strategy.configure(npcfg)
         wl = resolve(
             self.workload.arch.name, mesh=self.workload.mesh,
@@ -535,6 +550,7 @@ class Session:
         results = np.stack([router.results[r] for r in range(num_requests)])
         summary.update({
             "arch": self.workload.arch.name, "store": view.tier,
+            "sparse_comm": view.sparse_comm,
             "head": head, "max_batch": max_batch,
             "max_wait_ms": max_wait_ms,
         })

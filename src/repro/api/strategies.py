@@ -76,6 +76,7 @@ def build_workload_store(workload, fns, *, donate: bool = True,
         sparse_axes=workload.sparse_axes,
         cache_rows=npcfg.cache_rows, cache_admit=npcfg.cache_admit,
         kernel_backend=npcfg.kernel_backend,
+        sparse_comm=npcfg.sparse_comm,
     )
 
 

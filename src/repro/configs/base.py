@@ -254,6 +254,13 @@ class NestPipeConfig:
     # 8-row granularity, so tiny budgets round up to 8 rows per shard).
     cache_rows: int = 0
     cache_admit: int = 1
+    # Sparse-path compression (core/store/comm.py): "auto" resolves
+    # $REPRO_SPARSE_COMM then "off". "pack" is lossless (bit-packed delta
+    # key exchange + narrowed staging pads, replays "off" bit for bit);
+    # "int8" is EXPLICITLY APPROXIMATE (per-row int8 staged rows + error-
+    # feedback selective sync of commit deltas — loss-parity benched,
+    # never silently lossy). Device tier has no host path: always "off".
+    sparse_comm: str = "auto"
     # DBP lookahead depth k: the Prefetcher issues plan+retrieve for step
     # t+k while step t computes (k=1 is the paper's dual-buffer setting).
     prefetch_ahead: int = 1

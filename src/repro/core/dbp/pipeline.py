@@ -111,6 +111,7 @@ class PipelineStats:
     straggler_steps: List[int] = field(default_factory=list)
     overflow_max: int = 0
     store_tier: str = "device"
+    sparse_comm: str = "off"
     async_stages: bool = False
     # cumulative store counters at the last drain / after the warm-up drain
     store_metrics: Dict[str, float] = field(default_factory=dict)
@@ -147,9 +148,11 @@ class PipelineStats:
             "final_loss": self.losses[-1] if self.losses else float("nan"),
             "overflow_max": self.overflow_max,
             "store": self.store_tier,
+            "sparse_comm": self.sparse_comm,
             "async_stages": self.async_stages,
         }
-        for k in ("h2d_bytes", "d2h_bytes") + STAGE_TIMER_KEYS:
+        for k in ("h2d_bytes", "d2h_bytes", "wire_bytes", "idx_bytes",
+                  "comm_rows_synced", "comm_rows_deferred") + STAGE_TIMER_KEYS:
             if k in self.store_metrics:
                 out[k] = self.store_metrics[k]
         if "shards" in self.store_metrics:  # sharded tier: per-host masters
@@ -316,6 +319,7 @@ class DBPDriver:
     def run(self, state: TrainState, num_steps: int) -> (TrainState, PipelineStats):
         stats = PipelineStats()
         stats.store_tier = self.store.tier
+        stats.sparse_comm = getattr(self.store, "sparse_comm", "off")
         drain = _MetricsDrain(stats, self.straggler_factor, store=self.store)
         try:
             if self.mode == "serial":

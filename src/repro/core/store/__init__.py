@@ -32,11 +32,16 @@ from .base import (
     resolve_store,
 )
 from .cached import CachedStore
+from .comm import PACK_PAD, SPARSE_COMMS, SparseComm, resolve_sparse_comm
 from .device import DeviceStore
 from .host import HostStore
 from .prefetch import Prefetcher, PrefetchEntry
 
 __all__ = [
+    "PACK_PAD",
+    "SPARSE_COMMS",
+    "SparseComm",
+    "resolve_sparse_comm",
     "STAGE_TIMER_KEYS",
     "STORES",
     "EmbeddingStore",

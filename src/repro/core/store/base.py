@@ -229,6 +229,7 @@ def build_store(
     cache_rows: int = 0,
     cache_admit: int = 1,
     kernel_backend: Optional[str] = None,
+    sparse_comm: Optional[str] = None,
 ) -> EmbeddingStore:
     """Construct the store for a resolved tier name (see :func:`resolve_store`).
 
@@ -239,24 +240,32 @@ def build_store(
     serial driver rejects every non-device store (DBPDriver / strategies),
     and a mesh whose sparse axes don't match the spec's shard count fails
     in the ShardedStore constructor.
+
+    ``sparse_comm`` selects the sparse-path compression mode (comm.py);
+    the device tier has no host exchange to compress, so it resolves the
+    mode only to reject bad names and stays ``"off"``.
     """
     from .cached import CachedStore
+    from .comm import SparseComm, resolve_sparse_comm
     from .device import DeviceStore
     from .host import HostStore
     from .sharded import ShardedStore
 
     tier = resolve_store(name)
     if tier == "device":
+        resolve_sparse_comm(sparse_comm)  # validate even where it's a no-op
         return DeviceStore(fns, donate=donate)
     if mesh is not None:
         return ShardedStore(
             spec, fns, mesh, sparse_axes, local_tier=tier,
             cache_rows=cache_rows, cache_admit=cache_admit,
             donate=donate, kernel_backend=kernel_backend,
+            sparse_comm=sparse_comm,
         )
     if tier == "host":
-        return HostStore(spec, fns)
+        return HostStore(spec, fns, comm=SparseComm(sparse_comm))
     return CachedStore(
         spec, fns, capacity=cache_rows, admit_threshold=cache_admit,
         donate=donate, kernel_backend=kernel_backend,
+        comm=SparseComm(sparse_comm),
     )

@@ -110,7 +110,9 @@ class CachedStore(HostStore):
 
         def _assemble(cache_rows, cache_accum, miss_rows, miss_accum, src, keys):
             # hit rows from the device cache, miss rows from the H2D stage;
-            # out-of-range src (sentinel slots) yields zero rows.
+            # out-of-range src (sentinel slots) yields zero rows. src may
+            # arrive in the sparse-comm packed dtype (uint8/16) — cast back.
+            src = src.astype(jnp.int32)
             rows_src = jnp.concatenate([cache_rows, miss_rows], axis=0)
             acc_src = jnp.concatenate([cache_accum, miss_accum], axis=0)
             rows = dispatch.gather_rows(rows_src, src, backend=backend)
@@ -120,11 +122,13 @@ class CachedStore(HostStore):
         def _pull(rows, accum, idx):
             # compact device-side gather (eviction / host-resident pull);
             # idx >= len(rows) pads with zero rows.
+            idx = idx.astype(jnp.int32)
             return (dispatch.gather_rows(rows, idx, backend=backend),
                     jnp.take(accum, idx, mode="fill", fill_value=0.0))
 
         def _scatter(cache_rows, cache_accum, buf_rows, buf_accum, slots):
             # in-place hot-row commit: slots == capacity are dropped.
+            slots = slots.astype(jnp.int32)
             rows = cache_rows.at[slots].set(buf_rows.astype(cache_rows.dtype),
                                             mode="drop")
             accum = cache_accum.at[slots].set(buf_accum, mode="drop")
@@ -154,7 +158,9 @@ class CachedStore(HostStore):
         miss = valid & ~hit
         miss_keys = safe[miss]
         nm = int(miss_keys.shape[0])
-        pm = round_up(nm, self.miss_bucket) if nm else 0
+        # pack/int8 narrow the miss staging to the 8-row occupied prefix
+        # (off keeps the 64-row bucket) — see comm.pad_rows
+        pm = self.comm.pad_rows(nm, self.miss_bucket)
 
         if pool is not None:
             # pooled arrays may hold stale bytes past :nm — safe: no src /
@@ -168,11 +174,14 @@ class CachedStore(HostStore):
         if nm:
             stage_rows[:nm] = self.rows[miss_keys]
             stage_accum[:nm] = self.accum[miss_keys]
-        self.h2d_bytes += stage_rows.nbytes + stage_accum.nbytes
+        # off/pack: raw payload bytes; int8: quantize staged miss rows in
+        # place (per-row int8 + fp32 scale — the modeled compressed wire)
+        self.h2d_bytes += self.comm.stage_payload(stage_rows, stage_accum)
 
         src = np.full(keys.shape[0], cap + pm, np.int32)  # sentinel -> zero row
         src[hit] = slots[hit]
         src[miss] = cap + np.arange(nm, dtype=np.int32)
+        src = self.comm.pack_index(src, cap + pm)  # minimal dtype under pack
 
         self.hits += int(hit.sum())
         self.misses += nm
@@ -237,10 +246,12 @@ class CachedStore(HostStore):
             return
         # staged-row index i corresponds to miss position i (stage order)
         na = len(admitted_pos)
-        idx = np.full(round_up(na, self.miss_bucket), pm, np.int32)
+        idx = np.full(self.comm.pad_rows(na, self.miss_bucket), pm, np.int32)
         idx[:na] = np.asarray(admitted_pos, np.int32)
         slots = np.full(idx.shape[0], cap, np.int32)  # pad -> dropped
         slots[:na] = np.asarray(admitted_slot, np.int32)
+        idx = self.comm.pack_index(idx, pm)
+        slots = self.comm.pack_index(slots, cap)
         rows_d, accum_d = self._pull(stage_rows_d, stage_accum_d,
                                      jax.device_put(idx))
         self.cache_rows, self.cache_accum = self._scatter(
@@ -273,17 +284,25 @@ class CachedStore(HostStore):
         host_pos = np.flatnonzero(valid & (slots < 0))
         nh = int(host_pos.size)
         if nh:
-            ph = round_up(nh, self.miss_bucket)
+            ph = self.comm.pad_rows(nh, self.miss_bucket)
             idx = np.full(ph, buffer.rows.shape[0], np.int32)
             idx[:nh] = host_pos
+            idx = self.comm.pack_index(idx, buffer.rows.shape[0])
             rows_d, accum_d = self._pull(buffer.rows, buffer.accum,
                                          jax.device_put(idx))
             rows = np.asarray(jax.device_get(rows_d))
             accum = np.asarray(jax.device_get(accum_d))
-            self.d2h_bytes += rows.nbytes + accum.nbytes
             cold = keys[host_pos]
-            self.rows[cold] = rows[:nh]
-            self.accum[cold] = accum[:nh]
+            if self.comm.lossy:
+                # int8: the cold (host-resident) rows are exactly the
+                # infrequent set selective sync targets; cache-hot rows
+                # live on device and moved no bytes above
+                self.d2h_bytes += self.comm.writeback(
+                    cold, rows[:nh], accum[:nh], self.rows, self.accum)
+            else:
+                self.d2h_bytes += rows.nbytes + accum.nbytes
+                self.rows[cold] = rows[:nh]
+                self.accum[cold] = accum[:nh]
 
     def set_admission_block(self, keys: Optional[np.ndarray]) -> None:
         """Bar ``keys`` from cache admission for the next retrieve (see
@@ -327,9 +346,13 @@ class CachedStore(HostStore):
             return evictable[:0]
         vslots, vkeys = evictable[:n], vkeys[:n]
         # eviction writeback: pull current hot rows D2H, scatter to master
-        pv = round_up(n, self.miss_bucket)
+        # FULL PRECISION in every mode (a spill of the authoritative cache
+        # copy, not a per-window sync — see comm.py's exactness boundary);
+        # pack still narrows the pad and packs the index vector
+        pv = self.comm.pad_rows(n, self.miss_bucket)
         idx = np.full(pv, self.capacity, np.int32)
         idx[:n] = vslots
+        idx = self.comm.pack_index(idx, self.capacity)
         rows_d, accum_d = self._pull(self.cache_rows, self.cache_accum,
                                      jax.device_put(idx))
         rows = np.asarray(jax.device_get(rows_d))
@@ -362,9 +385,11 @@ class CachedStore(HostStore):
         n = int(used.size)
         if not n:
             return
-        pv = round_up(n, self.miss_bucket)
+        # full precision in every mode (checkpoint path — comm.py boundary)
+        pv = self.comm.pad_rows(n, self.miss_bucket)
         idx = np.full(pv, self.capacity, np.int32)
         idx[:n] = used
+        idx = self.comm.pack_index(idx, self.capacity)
         rows_d, accum_d = self._pull(self.cache_rows, self.cache_accum,
                                      jax.device_put(idx))
         rows = np.asarray(jax.device_get(rows_d))

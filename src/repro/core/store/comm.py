@@ -1,0 +1,249 @@
+"""SparseComm: per-store compression policy for the sparse data path.
+
+Three modes, selected via ``NestPipeConfig.sparse_comm`` /
+``$REPRO_SPARSE_COMM`` / ``Session.from_arch(sparse_comm=...)`` (the same
+arg > env > default resolution as ``store`` and ``kernel_backend``):
+
+``off``
+    Today's path, byte for byte. Counters still run (``wire_bytes`` counts
+    the raw key-exchange payload) so every mode's compression ratio is a
+    recorded trajectory number, not a claim.
+``pack`` — LOSSLESS, bit-exact
+    The sorted-unique key payloads of the stage-3 All2All D2H pull and the
+    sharded owner exchange are delta-encoded into minimal-width bit-packed
+    integers (``dist.compressed.pack_sorted_keys``) and round-tripped
+    through the codec, and the cached tier's bucket-padded H2D/D2H staging
+    narrows from the 64-row miss bucket to the 8-row occupied prefix with
+    packed (minimal-dtype) index vectors. Values are never touched: every
+    ``pack`` run replays the ``off`` run bit for bit (losses AND exported
+    tables — tests/test_sparse_comm.py), only the byte counters shrink.
+``int8`` — EXPLICITLY APPROXIMATE, never silently lossy
+    Staged embedding rows quantize to per-row symmetric int8 (+fp32 scale)
+    on the way H2D, and commit write-back deltas quantize the same way with
+    an error-feedback residual folded into the row's next sync. On top,
+    frequency-aware selective synchronization ("Stochastic Communication
+    Avoidance for Recommendation Systems", PAPERS.md): a row past
+    ``hot_threshold`` commits syncs every window; colder rows sync
+    stochastically with probability proportional to their frequency
+    (clamped at ``min_sync_p``), a skipped sync deferring its whole delta
+    into the residual so no update is ever dropped, only delayed. Key
+    payloads stay pack-exact (indices must be lossless) and the pad
+    narrowing is inherited from ``pack``. The bench records loss parity
+    against ``off`` (``max_loss_dev``) and every summary labels the mode.
+
+Counters (``counters()``; merged into each store's ``metrics()``):
+``wire_bytes`` the key-exchange payload per mode; ``idx_bytes`` the staged
+index vectors (the cached tier's assemble/pull indices); ``rows_synced`` /
+``rows_deferred`` the int8 selective-sync ledger. Like every store
+counter, these follow the MODELED traffic (see ShardedStore's docstring),
+so they are comparable across tiers and shard counts.
+
+Exactness boundary: eviction writeback and checkpoint ``flush`` stay
+full-precision in every mode — they are spills of the authoritative cache
+copy, not the per-window sync this mode trades off, and a checkpoint must
+never absorb quantization error beyond what training already saw.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, Optional
+
+import numpy as np
+
+from ...dist.compressed import (
+    min_index_dtype,
+    pack_sorted_keys,
+    quantize_rows_np,
+    unpack_sorted_keys,
+)
+from ..embedding.routing import SENTINEL
+
+_SENTINEL = int(SENTINEL)
+
+SPARSE_COMMS = ("off", "pack", "int8")
+
+# Staging pad granularity under pack/int8: the occupied prefix rounded to 8
+# rows (vs the off path's 64-row miss bucket) — small enough to cut padding
+# waste, coarse enough to keep the assemble jit at O(log K) shapes.
+PACK_PAD = 8
+
+
+def resolve_sparse_comm(mode: Optional[str] = None) -> str:
+    """Resolve a sparse-comm mode: explicit arg > $REPRO_SPARSE_COMM >
+    "off" — the ``resolve_store`` / ``kernel_backend`` resolution order."""
+    for cand in (mode, os.environ.get("REPRO_SPARSE_COMM")):
+        if cand and cand != "auto":
+            if cand not in SPARSE_COMMS:
+                raise ValueError(
+                    f"unknown sparse_comm mode {cand!r}; expected one of "
+                    f"{SPARSE_COMMS} or 'auto'")
+            return cand
+    return "off"
+
+
+class SparseComm:
+    """One store's sparse-path compression policy + byte ledger.
+
+    Thread-safety matches the stores' own counters: ``exchange_keys`` /
+    staging run on the driver or a stage-worker thread, ``writeback`` only
+    on the (ordered) commit thread, so the int8 residual/frequency state is
+    single-threaded by construction; the byte counters use a lock like
+    :class:`StageTimers`.
+    """
+
+    def __init__(self, mode: Optional[str] = None, *,
+                 hot_threshold: int = 4, min_sync_p: float = 0.1,
+                 seed: int = 0):
+        self.mode = resolve_sparse_comm(mode)
+        self.lossy = self.mode == "int8"
+        self.hot_threshold = max(int(hot_threshold), 1)
+        self.min_sync_p = float(min(max(min_sync_p, 0.0), 1.0))
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
+        self.wire_bytes = 0
+        self.idx_bytes = 0
+        self.rows_synced = 0
+        self.rows_deferred = 0
+        # int8 error-feedback + frequency state, lazily sized to the master
+        # (dense arrays — right at harness scale, same note as CachedStore's
+        # slot/frequency maps; a production deployment would hash-map them)
+        self._residual: Optional[np.ndarray] = None
+        self._freq: Optional[np.ndarray] = None
+
+    # -- key exchange (stage-3 D2H pull / sharded owner exchange) ---------
+
+    def exchange_keys(self, host_keys: np.ndarray,
+                      num_slices: int = 1) -> np.ndarray:
+        """Carry the owner-side union key list through the mode's wire
+        codec and count its modeled payload bytes.
+
+        ``pack``/``int8`` genuinely round-trip through the bit-packed delta
+        codec (the unpacked result is what the store plans from — the codec
+        is ON the path, not beside it), per ``num_slices`` equal slices:
+        the sharded layout is shard-major with sentinel padding at each
+        slice END, so slices are individually nondecreasing but the
+        concatenation is not.
+
+        Each slice's sentinel suffix is ELIDED from the wire (only its
+        count travels, modeled inside the packed header): sentinels sort
+        last, so a slice is exactly ``sorted valid prefix + SENTINEL * m``
+        and the suffix reconstructs losslessly. Without the elision the
+        valid->SENTINEL jump would force ~31-bit delta widths and the
+        "compressed" payload could exceed raw int32 keys."""
+        if self.mode == "off":
+            with self._lock:
+                self.wire_bytes += int(host_keys.nbytes)
+            return host_keys
+        n = host_keys.shape[0]
+        if num_slices > 1 and n % num_slices:
+            raise ValueError(f"key list of {n} does not split over "
+                             f"{num_slices} slices")
+        k = n // max(num_slices, 1)
+        parts, payload = [], 0
+        for s in range(max(num_slices, 1)):
+            sl = host_keys[s * k:(s + 1) * k]
+            nv = int(np.searchsorted(sl, _SENTINEL))  # first sentinel slot
+            packed = pack_sorted_keys(sl[:nv])
+            payload += packed.nbytes
+            part = np.full(sl.shape, _SENTINEL, host_keys.dtype)
+            part[:nv] = unpack_sorted_keys(packed, host_keys.dtype)
+            parts.append(part)
+        with self._lock:
+            self.wire_bytes += payload
+        return np.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    # -- staging (H2D/D2H pad + index vectors + int8 rows) ----------------
+
+    def pad_rows(self, n: int, bucket: int) -> int:
+        """Staging pad for ``n`` occupied rows: the store's bucket under
+        ``off``, the 8-row occupied prefix under pack/int8."""
+        if n <= 0:
+            return 0
+        pad = bucket if self.mode == "off" else min(PACK_PAD, bucket)
+        return -(-n // pad) * pad
+
+    def pack_index(self, idx: np.ndarray, max_val: int) -> np.ndarray:
+        """Index vector for a staged gather, in the mode's wire dtype
+        (int32 under ``off``, the minimal unsigned dtype that holds
+        ``max_val`` under pack/int8 — the device-side jits cast back).
+        Counts the vector into ``idx_bytes``."""
+        if self.mode != "off":
+            idx = idx.astype(min_index_dtype(max_val))
+        with self._lock:
+            self.idx_bytes += int(idx.nbytes)
+        return idx
+
+    def stage_payload(self, rows: np.ndarray, accum: np.ndarray) -> int:
+        """Apply the mode's staging transform to host arrays about to go
+        H2D (int8: per-row quantize->dequantize IN PLACE, so the device
+        sees exactly the bytes the compressed wire would deliver) and
+        return the modeled H2D payload bytes."""
+        if self.mode != "int8":
+            return int(rows.nbytes) + int(accum.nbytes)
+        q, scales, _ = quantize_rows_np(rows)
+        rows[:] = q.astype(np.float32) * scales[:, None]
+        return int(q.nbytes) + int(scales.nbytes) + int(accum.nbytes)
+
+    # -- int8 commit: selective sync + quantized deltas -------------------
+
+    def _ensure_state(self, padded_rows: int, dim: int) -> None:
+        if self._residual is None:
+            self._residual = np.zeros((padded_rows, dim), np.float32)
+            self._freq = np.zeros(padded_rows, np.int64)
+
+    def writeback(self, keys: np.ndarray, rows: np.ndarray,
+                  accum: np.ndarray, master_rows: np.ndarray,
+                  master_accum: np.ndarray) -> int:
+        """int8 commit epilogue for ``keys`` (valid, unique local row ids):
+        frequency-aware selective sync of per-row-quantized write-back
+        deltas into the numpy master (mutated in place). Returns the
+        modeled D2H payload bytes (synced int8 rows + scales + adagrad
+        state; deferred rows move nothing).
+
+        A synced row applies ``dequantize(quantize(delta + residual))`` and
+        keeps the fresh quantization error as its residual; a deferred row
+        banks the WHOLE payload, so the update is delayed, never lost. The
+        adagrad accum is absolute (not a delta) — it catches up exactly at
+        the row's next sync."""
+        self._ensure_state(master_rows.shape[0], master_rows.shape[1])
+        n = int(keys.shape[0])
+        if not n:
+            return 0
+        # commit-count frequency: every accessed row commits each window,
+        # so this is the access frequency the selective-sync paper keys on
+        self._freq[keys] += 1
+        f = self._freq[keys]
+        p = np.clip(f / self.hot_threshold, self.min_sync_p, 1.0)
+        sync = (f >= self.hot_threshold) | (self._rng.random(n) < p)
+        payload = (np.asarray(rows, np.float32) - master_rows[keys]
+                   + self._residual[keys])
+        ks = keys[sync]
+        nbytes = 0
+        if ks.size:
+            q, scales, err = quantize_rows_np(payload[sync])
+            master_rows[ks] += q.astype(np.float32) * scales[:, None]
+            master_accum[ks] = accum[sync]
+            self._residual[ks] = err
+            nbytes = int(q.nbytes) + int(scales.nbytes) + int(ks.size * 4)
+        kd = keys[~sync]
+        if kd.size:
+            self._residual[kd] = payload[~sync]
+        with self._lock:
+            self.rows_synced += int(ks.size)
+            self.rows_deferred += int(kd.size)
+        return nbytes
+
+    # -- introspection -----------------------------------------------------
+
+    def counters(self) -> Dict[str, float]:
+        with self._lock:
+            out = {"wire_bytes": float(self.wire_bytes),
+                   "idx_bytes": float(self.idx_bytes)}
+            if self.lossy:
+                out["comm_rows_synced"] = float(self.rows_synced)
+                out["comm_rows_deferred"] = float(self.rows_deferred)
+        return out
+
+
+__all__ = ["SPARSE_COMMS", "PACK_PAD", "SparseComm", "resolve_sparse_comm"]

@@ -21,6 +21,8 @@ class DeviceStore:
     """HBM-resident master (the current device tier, behind the protocol)."""
 
     tier = "device"
+    # no host-side sparse exchange to compress — always today's path
+    sparse_comm = "off"
 
     def __init__(self, fns, *, donate: bool = True):
         self._route = jax.jit(fns.route_window)

@@ -29,6 +29,7 @@ from ..embedding.engine import DualBuffer
 from ..embedding.routing import SENTINEL
 from ..embedding.table import EmbeddingTableState, MegaTableSpec
 from .base import FetchPlan, StagePool, StageTimers, placeholder_table
+from .comm import SparseComm
 
 _SENTINEL = int(SENTINEL)
 
@@ -49,6 +50,7 @@ class HostStore:
         scale: float = 0.01,
         dtype=np.float32,
         device_sharding=None,
+        comm: Optional[SparseComm] = None,
     ):
         self.spec = spec
         self._route = jax.jit(fns.route_window) if fns is not None else None
@@ -63,6 +65,10 @@ class HostStore:
         self.rows = rows
         self.accum = accum
         self.device_sharding = device_sharding
+        # sparse-path compression policy (core/store/comm.py): defaults to
+        # the resolved $REPRO_SPARSE_COMM mode ("off" when unset)
+        self.comm = comm if comm is not None else SparseComm()
+        self.sparse_comm = self.comm.mode
         self.h2d_bytes = 0
         self.d2h_bytes = 0
         self.owns_master = False
@@ -158,9 +164,12 @@ class HostStore:
             return self._route(keys)
 
     def plan_from_window(self, window) -> FetchPlan:
-        """Stage-3 host half: pull the owner-side union key list D2H."""
+        """Stage-3 host half: pull the owner-side union key list D2H,
+        carried through the sparse-comm wire codec (pack: bit-packed delta
+        round-trip; off: counted raw — see core/store/comm.py)."""
         with self.stage_timers.timed("plan_ms"):
             host_keys = np.asarray(jax.device_get(window.buffer_keys))
+            host_keys = self.comm.exchange_keys(host_keys)
         return FetchPlan(window, host_keys)
 
     def plan(self, keys) -> FetchPlan:
@@ -227,7 +236,9 @@ class HostStore:
             stage_accum = np.zeros((k,), np.float32)
         self.gather_host(buffer_keys, out_rows=stage_rows,
                          out_accum=stage_accum)
-        self.h2d_bytes += stage_rows.nbytes + stage_accum.nbytes
+        # off/pack: raw payload bytes; int8: quantize the staged rows in
+        # place (per-row int8 + fp32 scale — the modeled compressed wire)
+        self.h2d_bytes += self.comm.stage_payload(stage_rows, stage_accum)
         put = (lambda x: jax.device_put(x, self.device_sharding)) \
             if self.device_sharding is not None else jax.device_put
         with self.stage_timers.timed("h2d_ms"):
@@ -258,14 +269,23 @@ class HostStore:
                 else np.asarray(jax.device_get(buffer.keys))
             rows = np.asarray(jax.device_get(buffer.rows))
             accum = np.asarray(jax.device_get(buffer.accum))
-            self.d2h_bytes += rows.nbytes + accum.nbytes
-            self.scatter_host(keys, rows, accum)
+            if self.comm.lossy:
+                # int8: selective sync of quantized write-back deltas with
+                # error feedback (comm.writeback mutates the master)
+                valid = keys != _SENTINEL
+                self.d2h_bytes += self.comm.writeback(
+                    keys[valid], rows[valid], accum[valid],
+                    self.rows, self.accum)
+            else:
+                self.d2h_bytes += rows.nbytes + accum.nbytes
+                self.scatter_host(keys, rows, accum)
 
     # -- metrics / introspection -----------------------------------------
 
     def metrics(self) -> Dict[str, float]:
         return {"h2d_bytes": float(self.h2d_bytes),
                 "d2h_bytes": float(self.d2h_bytes),
+                **self.comm.counters(),
                 **self.stage_timers.as_dict()}
 
     def memory_bytes(self) -> int:

@@ -62,6 +62,7 @@ from ..embedding.routing import owner_of
 from ..embedding.table import EmbeddingTableState, MegaTableSpec, table_pspecs
 from .base import FetchPlan, StageTimers, placeholder_table
 from .cached import CachedStore
+from .comm import SparseComm, resolve_sparse_comm
 from .host import _SENTINEL, HostStore
 
 LOCAL_TIERS = ("host", "cached")
@@ -98,6 +99,7 @@ class ShardedStore:
         cache_admit: int = 1,
         donate: bool = True,
         kernel_backend: Optional[str] = None,
+        sparse_comm: Optional[str] = None,
     ):
         if mesh is None:
             raise ValueError("ShardedStore needs a mesh; use HostStore/"
@@ -123,6 +125,13 @@ class ShardedStore:
         self.local_tier = local_tier
         self.tier = f"sharded-{local_tier}"
         self._route = jax.jit(fns.route_window) if fns is not None else None
+        # coordinator comm: owner-exchange wire codec + (host tier) the
+        # global staging transform; sub-stores carry their own instances
+        # (per-shard int8 residual/frequency state in LOCAL id space, with
+        # per-shard rng seeds so the selective-sync lotteries are
+        # independent — as they would be on real per-host processes)
+        self.sparse_comm = resolve_sparse_comm(sparse_comm)
+        self.comm = SparseComm(self.sparse_comm)
 
         ns = lambda p: NamedSharding(mesh, p)  # noqa: E731
         b_specs = buffer_pspecs(self.sparse_axes)
@@ -136,8 +145,9 @@ class ShardedStore:
         if local_tier == "host":
             self.shards: List[HostStore] = [
                 HostStore(lspec, None, rows=zeros(),
-                          accum=np.zeros((rps,), np.float32))
-                for _ in range(num_shards)
+                          accum=np.zeros((rps,), np.float32),
+                          comm=SparseComm(self.sparse_comm, seed=s))
+                for s in range(num_shards)
             ]
         else:
             # global budget split evenly; a tiny explicit budget must not
@@ -148,8 +158,9 @@ class ShardedStore:
                 CachedStore(lspec, None, capacity=per_shard,
                             admit_threshold=cache_admit, donate=donate,
                             kernel_backend=kernel_backend, rows=zeros(),
-                            accum=np.zeros((rps,), np.float32))
-                for _ in range(num_shards)
+                            accum=np.zeros((rps,), np.float32),
+                            comm=SparseComm(self.sparse_comm, seed=s))
+                for s in range(num_shards)
             ]
         self.owns_master = False
         self.h2d_bytes = 0
@@ -200,8 +211,15 @@ class ShardedStore:
             return self._route(keys)
 
     def plan_from_window(self, window) -> FetchPlan:
+        """The owner exchange, carried through the sparse-comm wire codec
+        PER SHARD SLICE (each slice is sorted with sentinel padding at its
+        own tail, so slices are individually nondecreasing but the global
+        concatenation is not — the pack codec runs per owner, exactly as
+        the real exchange would ship per-host messages)."""
         with self.stage_timers.timed("plan_ms"):
             host_keys = np.asarray(jax.device_get(window.buffer_keys))
+            host_keys = self.comm.exchange_keys(host_keys,
+                                                num_slices=self.num_shards)
         return FetchPlan(window, host_keys)
 
     def plan(self, keys) -> FetchPlan:
@@ -232,9 +250,11 @@ class ShardedStore:
         rows = np.concatenate(rows_parts, axis=0)
         accum = np.concatenate(accum_parts, axis=0)
         if self.local_tier == "host":
-            # modeled H2D: the full staged buffer (HostStore accounting);
-            # the cached slices already counted their miss staging
-            self.h2d_bytes += rows.nbytes + accum.nbytes
+            # modeled H2D: the full staged buffer (HostStore accounting),
+            # through the coordinator comm's staging transform (int8:
+            # per-row quantize in place); the cached slices already
+            # counted — and transformed — their own miss staging
+            self.h2d_bytes += self.comm.stage_payload(rows, accum)
         with self.stage_timers.timed("h2d_ms"):
             # ONE sharded put per leaf: shard s's slice lands on shard s's
             # devices — the per-host H2D. Buffer owns its keys array (the
@@ -254,7 +274,7 @@ class ShardedStore:
                 else np.asarray(jax.device_get(buffer.keys))
             rows = np.asarray(jax.device_get(buffer.rows))
             accum = np.asarray(jax.device_get(buffer.accum))
-            if self.local_tier == "host":
+            if self.local_tier == "host" and not self.comm.lossy:
                 self.d2h_bytes += rows.nbytes + accum.nbytes
             k = keys.shape[0] // self.num_shards
             for s, lk in enumerate(self._local_slices(keys)):
@@ -262,7 +282,15 @@ class ShardedStore:
                 rows_s = rows[s * k:(s + 1) * k]
                 accum_s = accum[s * k:(s + 1) * k]
                 if self.local_tier == "host":
-                    sub.scatter_host(lk, rows_s, accum_s)
+                    if sub.comm.lossy:
+                        # int8: each shard's selective sync runs in its own
+                        # local id space (its comm's residual/freq state)
+                        lv = lk != _SENTINEL
+                        sub.d2h_bytes += sub.comm.writeback(
+                            lk[lv], rows_s[lv], accum_s[lv],
+                            sub.rows, sub.accum)
+                    else:
+                        sub.scatter_host(lk, rows_s, accum_s)
                 else:
                     # hot rows scatter into the slice's device cache, only
                     # cold rows reach its DRAM (its d2h counter follows)
@@ -350,6 +378,11 @@ class ShardedStore:
             "commits": float(sum(self.commits_applied)),
             **self.stage_timers.as_dict(),
         }
+        # comm ledger: coordinator (owner exchange) + every shard's slice
+        comms = [self.comm] + [s.comm for s in self.shards]
+        for c in comms:
+            for key, v in c.counters().items():
+                out[key] = out.get(key, 0.0) + v
         if self.local_tier == "cached":
             for key, attr in (("cache_hits", "hits"),
                               ("cache_misses", "misses"),

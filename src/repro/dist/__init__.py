@@ -2,14 +2,28 @@
 (preemption / straggler / transient-failure policies), and compressed
 collectives. Owned by ``repro.api.Session``; importable standalone."""
 from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from .compressed import ring_allreduce_quant
+from .compressed import (
+    PackedKeys,
+    dequantize_rows_np,
+    pack_sorted_keys,
+    quantize_rows_np,
+    ring_allreduce_quant,
+    ring_allreduce_quant_tree,
+    unpack_sorted_keys,
+)
 from .fault import PreemptionGuard, StepWatchdog, retry_step
 
 __all__ = [
     "latest_step",
     "restore_checkpoint",
     "save_checkpoint",
+    "PackedKeys",
+    "pack_sorted_keys",
+    "unpack_sorted_keys",
+    "quantize_rows_np",
+    "dequantize_rows_np",
     "ring_allreduce_quant",
+    "ring_allreduce_quant_tree",
     "PreemptionGuard",
     "StepWatchdog",
     "retry_step",

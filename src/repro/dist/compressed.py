@@ -1,25 +1,49 @@
-"""Compressed collectives: int8 ring AllReduce with error feedback.
+"""Compression codecs for the sparse data path + int8 ring AllReduce.
 
-``ring_allreduce_quant`` runs the classic two-phase ring (reduce-scatter then
-all-gather) over a named mesh axis, quantizing every hop's payload to int8
-with a per-chunk fp32 scale — an 8x wire-byte reduction for the dense-grad
-AllReduce that dominates replicated-dense recsys training (paper §III's
-hybrid layout keeps dense params replicated across all workers).
+Two families live here, both serving the paper's bottleneck — data movement
+on the embedding path at O(1k) workers:
 
-Error feedback: the quantization error this device introduced on its own
-sends is returned as a same-shaped residual so callers can fold it into the
-next step's gradient (momentum-style error feedback keeps SGD unbiased in
-the long run). On a 1-device ring the op is the exact identity and the
-residual is zero.
+Collectives (jax, inside ``shard_map``)
+    ``ring_allreduce_quant`` — the classic two-phase ring (reduce-scatter
+    then all-gather) with every hop's payload quantized to int8 + a per-
+    chunk fp32 scale (8x wire bytes on the dense-grad AllReduce that
+    dominates replicated-dense recsys training, paper §III). Error
+    feedback: the quantization error this device introduced on its own
+    sends comes back as a same-shaped residual to fold into the next
+    step's gradient. Accepts ANY array shape (ravelled internally) and
+    ``ring_allreduce_quant_tree`` lifts it over a whole pytree of leaves.
 
-Must be called inside ``shard_map`` with ``axis_name`` bound.
+Host-side codecs (numpy, used by ``core/store/comm.SparseComm``)
+    ``pack_sorted_keys`` / ``unpack_sorted_keys`` — LOSSLESS bit-packed
+    delta coding for sorted nondecreasing key lists (the stage-3 All2All
+    payload and the sharded owner exchange are sorted-unique by
+    construction, sentinel-padded at the tail): store the first key plus
+    ``n-1`` deltas at the minimal bit width that holds the largest delta.
+    Exact for any nondecreasing int array — the ``pack`` sparse-comm mode
+    stands on this.
+    ``quantize_rows_np`` / ``dequantize_rows_np`` — per-row symmetric int8
+    with an fp32 scale per row (scale = max|row|/127), the numpy twin of
+    the ring's ``_quantize`` machinery. Round-trip error is bounded by
+    scale/2 per element and returned explicitly so callers can carry it
+    as an error-feedback residual (the ``int8`` sparse-comm mode).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# Modeled per-message header for a packed key payload: count + first key +
+# bit width (the real exchange would ship these as 8B + 8B + 1B; 16 rounds
+# up to alignment). Byte accounting, not a serialized format.
+PACK_HEADER_BYTES = 16
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization (jax — ring hops)
+# ---------------------------------------------------------------------------
 
 
 def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -35,13 +59,112 @@ def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale[0]
 
 
-def ring_allreduce_quant(v: jax.Array, axis_name: str
-                         ) -> Tuple[jax.Array, jax.Array]:
-    """AllReduce (sum) of 1-D ``v`` over ``axis_name`` with int8-quantized
-    ring hops. Returns ``(summed, residual)`` where ``residual`` holds the
-    local quantization error (error-feedback term), same shape as ``v``."""
-    if v.ndim != 1:
-        raise ValueError(f"ring_allreduce_quant expects 1-D input, got {v.shape}")
+# ---------------------------------------------------------------------------
+# int8 quantization (numpy — per-row, for the store staging/commit path)
+# ---------------------------------------------------------------------------
+
+
+def quantize_rows_np(rows: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-row symmetric int8: returns ``(q, scales, error)`` with
+    ``q`` int8 of ``rows.shape``, ``scales`` fp32 of shape ``(n,)`` and
+    ``error = rows - dequantize(q, scales)`` (|error| <= scale/2 per
+    element — the scale is exactly max|row|/127, so nothing clips and the
+    only loss is rounding). An all-zero row quantizes exactly."""
+    rows = np.asarray(rows, np.float32)
+    if rows.ndim != 2:
+        raise ValueError(f"quantize_rows_np expects (n, d) rows, got "
+                         f"{rows.shape}")
+    scales = np.abs(rows).max(axis=1) / 127.0
+    scales = np.maximum(scales, 1e-30).astype(np.float32)
+    q = np.clip(np.rint(rows / scales[:, None]), -127, 127).astype(np.int8)
+    deq = q.astype(np.float32) * scales[:, None]
+    return q, scales, rows - deq
+
+
+def dequantize_rows_np(q: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    return q.astype(np.float32) * np.asarray(scales, np.float32)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# lossless bit-packed delta coding for sorted key lists
+# ---------------------------------------------------------------------------
+
+
+class PackedKeys(NamedTuple):
+    """A sorted nondecreasing int list as first-key + bit-packed deltas."""
+
+    data: np.ndarray  # uint8, ceil((n-1)*width/8) bytes of packed deltas
+    n: int  # element count
+    first: int  # keys[0]
+    width: int  # bits per delta (minimal for the largest delta; >= 1)
+
+    @property
+    def nbytes(self) -> int:
+        """Modeled wire bytes: packed payload + per-message header."""
+        return int(self.data.nbytes) + PACK_HEADER_BYTES
+
+
+def pack_sorted_keys(keys: np.ndarray) -> PackedKeys:
+    """Delta-encode a sorted NONDECREASING integer array into minimal-width
+    bit-packed form. Raises on a decreasing pair — the caller's contract is
+    a sorted list (buffer key lists are sorted-unique with the int32-max
+    sentinel padding the tail, which sorts last, so each slice is
+    nondecreasing end to end)."""
+    keys = np.asarray(keys)
+    if keys.ndim != 1:
+        raise ValueError(f"pack_sorted_keys expects a 1-D array, got "
+                         f"{keys.shape}")
+    n = int(keys.shape[0])
+    if n == 0:
+        return PackedKeys(np.zeros(0, np.uint8), 0, 0, 0)
+    k64 = keys.astype(np.int64)
+    first = int(k64[0])
+    if n == 1:
+        return PackedKeys(np.zeros(0, np.uint8), 1, first, 0)
+    deltas = np.diff(k64)
+    if (deltas < 0).any():
+        raise ValueError("pack_sorted_keys needs a nondecreasing array")
+    width = max(int(deltas.max()).bit_length(), 1)
+    shifts = np.arange(width, dtype=np.uint64)
+    bits = ((deltas[:, None].astype(np.uint64) >> shifts) & 1).astype(np.uint8)
+    data = np.packbits(bits.reshape(-1))
+    return PackedKeys(data, n, first, width)
+
+
+def unpack_sorted_keys(packed: PackedKeys, dtype=np.int64) -> np.ndarray:
+    """Exact inverse of :func:`pack_sorted_keys`."""
+    if packed.n == 0:
+        return np.zeros(0, dtype)
+    if packed.n == 1:
+        return np.full(1, packed.first, dtype)
+    nbits = (packed.n - 1) * packed.width
+    bits = np.unpackbits(packed.data)[:nbits].reshape(packed.n - 1,
+                                                      packed.width)
+    shifts = np.arange(packed.width, dtype=np.int64)
+    deltas = (bits.astype(np.int64) << shifts).sum(axis=1)
+    out = np.empty(packed.n, np.int64)
+    out[0] = packed.first
+    np.cumsum(deltas, out=out[1:])
+    out[1:] += packed.first
+    return out.astype(dtype)
+
+
+def min_index_dtype(max_val: int) -> np.dtype:
+    """Smallest unsigned dtype that holds indices in [0, max_val]."""
+    for dt in (np.uint8, np.uint16, np.uint32):
+        if max_val <= np.iinfo(dt).max:
+            return np.dtype(dt)
+    return np.dtype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# int8 ring AllReduce (error feedback)
+# ---------------------------------------------------------------------------
+
+
+def _ring_allreduce_quant_1d(v: jax.Array, axis_name: str
+                             ) -> Tuple[jax.Array, jax.Array]:
     n = jax.lax.psum(1, axis_name)  # static ring size
     if n == 1:
         return v, jnp.zeros_like(v)
@@ -92,3 +215,28 @@ def ring_allreduce_quant(v: jax.Array, axis_name: str
             out, _dequantize(q, scale), (jnp.mod(idx - s, n) * c,))
 
     return out[:length].astype(v.dtype), residual[:length].astype(v.dtype)
+
+
+def ring_allreduce_quant(v: jax.Array, axis_name: str
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """AllReduce (sum) of ``v`` over ``axis_name`` with int8-quantized ring
+    hops. Any array shape: non-1-D inputs are ravelled for the ring and the
+    result (and residual) reshaped back. Returns ``(summed, residual)``
+    where ``residual`` holds the local quantization error (error-feedback
+    term), same shape as ``v``."""
+    if v.ndim == 1:
+        return _ring_allreduce_quant_1d(v, axis_name)
+    out, res = _ring_allreduce_quant_1d(v.reshape(-1), axis_name)
+    return out.reshape(v.shape), res.reshape(v.shape)
+
+
+def ring_allreduce_quant_tree(tree, axis_name: str):
+    """Pytree lift of :func:`ring_allreduce_quant`: AllReduce every leaf
+    (any shape) and return ``(summed_tree, residual_tree)`` with the input
+    structure — dense-grad callers pass their whole grad pytree without
+    flattening by hand."""
+    leaves, treedef = jax.tree.flatten(tree)
+    pairs = [ring_allreduce_quant(leaf, axis_name) for leaf in leaves]
+    summed = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    residual = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return summed, residual

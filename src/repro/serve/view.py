@@ -59,6 +59,10 @@ class FrozenStoreView:
                 "master table first, then freeze)")
         self._store = store
         self.tier = f"frozen-{store.tier}"
+        # sparse-path compression mode label (core/store/comm.py): the
+        # read path inherits the wrapped tier's mode — "pack" keeps reads
+        # bit-exact while metrics() surfaces wire_bytes/idx_bytes savings.
+        self.sparse_comm = getattr(store, "sparse_comm", "off")
         self.reads = 0
 
     @property

@@ -13,7 +13,9 @@ live must not change a single bit.
 
 Sections (argv; default = all): ``core`` (the 4-shard matrix),
 ``restore`` (cross-shard-count + cross-tier checkpoints), ``sweep``
-(the 1/2-shard matrix, run by the CI multidev job).
+(the 1/2-shard matrix, run by the CI multidev job), ``comm`` (the
+sparse-comm modes on the 4-shard mesh: pack bit-exact vs off across
+tiers and async on/off, int8 ledger + loss parity).
 """
 import os
 import sys
@@ -291,8 +293,37 @@ def run_restore(tmp):
     print("  [restore 2-shard ckpt -> single-process cached] OK")
 
 
+def run_comm(case):
+    """Sparse-comm modes on a real multi-shard mesh: ``pack`` replays the
+    same-mesh ``off`` run bit for bit (per-slice owner-exchange packing,
+    narrowed staging) across host/cached x async on/off with the wire
+    ledger strictly active; ``int8`` runs end to end with the selective-
+    sync ledger and stays loss-close (explicitly approximate)."""
+    S = case.S
+    for tier in ("host", "cached"):
+        ref_state, ref_stats, ref_store = case.run(tier)
+        for async_on in (False, True):
+            tag = f"S={S} {tier} pack async={async_on}"
+            st, stats, store = case.run(tier, async_on=async_on,
+                                        sparse_comm="pack")
+            assert store.sparse_comm == "pack", tag
+            np.testing.assert_array_equal(stats.losses, ref_stats.losses,
+                                          err_msg=tag)
+            tables_equal(st, ref_state, tag)
+            m, m_ref = store.metrics(), ref_store.metrics()
+            assert 0 < m["wire_bytes"] <= m_ref["wire_bytes"], tag
+            print(f"  [{tag}] bit-exact vs off: OK")
+    _, stats_q, store_q = case.run("host", sparse_comm="int8")
+    _, stats_o, _ = case.run("host")
+    dev = max(abs(a - b) for a, b in zip(stats_q.losses, stats_o.losses))
+    mq = store_q.metrics()
+    assert mq["comm_rows_synced"] + mq["comm_rows_deferred"] > 0
+    assert dev < 0.05, (dev, stats_q.losses)
+    print(f"  [S={S} host int8] ledger active, max_loss_dev={dev:.5f}: OK")
+
+
 if __name__ == "__main__":
-    sections = sys.argv[1:] or ["core", "restore", "sweep"]
+    sections = sys.argv[1:] or ["core", "restore", "sweep", "comm"]
     if "core" in sections:
         print("[store-multidev] core: 4-shard matrix")
         run_matrix(Case(4))
@@ -304,4 +335,7 @@ if __name__ == "__main__":
         for s in (1, 2):
             print(f"[store-multidev] sweep: {s}-shard matrix")
             run_matrix(Case(s))
+    if "comm" in sections:
+        print("[store-multidev] comm: sparse-comm modes, 4-shard mesh")
+        run_comm(Case(4))
     print("STORE MULTIDEV OK")

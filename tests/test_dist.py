@@ -118,3 +118,47 @@ def test_ring_allreduce_quant_single_axis():
                                  check_vma=False))(x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x))
     np.testing.assert_allclose(np.asarray(res), 0.0)
+
+
+def test_ring_allreduce_quant_arbitrary_shapes():
+    """Non-1-D leaves ravel through the ring and reshape back: shape and
+    (1-device) values preserved exactly, residual zero."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.compat import shard_map
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("d",))
+    rng = np.random.default_rng(1)
+    for shape in ((4, 5), (2, 3, 7), (1, 1), (6,)):
+        x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        f = lambda v: ring_allreduce_quant(v, "d")
+        out, res = jax.jit(shard_map(f, mesh=mesh, in_specs=P(),
+                                     out_specs=(P(), P()),
+                                     check_vma=False))(x)
+        assert out.shape == shape and res.shape == shape
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x))
+        np.testing.assert_allclose(np.asarray(res), 0.0)
+
+
+def test_ring_allreduce_quant_tree():
+    """Pytree lift: every leaf reduced, structure preserved on both the
+    summed tree and the residual tree."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.dist import ring_allreduce_quant_tree
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("d",))
+    rng = np.random.default_rng(2)
+    tree = {"w": jnp.asarray(rng.normal(size=(3, 4)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(4,)), jnp.float32),
+            "blocks": [jnp.asarray(rng.normal(size=(2, 2, 2)), jnp.float32)]}
+
+    def f(t):
+        return ring_allreduce_quant_tree(t, "d")
+
+    summed, resid = jax.jit(shard_map(
+        f, mesh=mesh, in_specs=P(), out_specs=(P(), P()),
+        check_vma=False))(tree)
+    assert jax.tree.structure(summed) == jax.tree.structure(tree)
+    assert jax.tree.structure(resid) == jax.tree.structure(tree)
+    for leaf, orig in zip(jax.tree.leaves(summed), jax.tree.leaves(tree)):
+        np.testing.assert_allclose(np.asarray(leaf), np.asarray(orig))
+    for leaf in jax.tree.leaves(resid):
+        np.testing.assert_allclose(np.asarray(leaf), 0.0)

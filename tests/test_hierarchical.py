@@ -36,7 +36,7 @@ def make_driver_with_store(store_name, *, steps_fns_out=None, lookahead=1,
                          (BATCH // N_MICRO, stream.f_total))
     store = {
         "device": lambda: DeviceStore(fns, donate=donate),
-        "host": lambda: HostStore(spec, fns),
+        "host": lambda: HostStore(spec, fns, **store_kw),
         "cached": lambda: CachedStore(spec, fns, donate=donate, **store_kw),
     }[store_name]()
     state = init_state(spec, dense_params, optimizer)

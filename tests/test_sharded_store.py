@@ -265,3 +265,13 @@ def test_store_multidev_sweep():
     out = run_scenario("sweep")
     assert "STORE MULTIDEV OK" in out
     assert "[S=2 cached k=3 async=True] bit-exact vs device: OK" in out
+
+
+@pytest.mark.multidev
+def test_store_multidev_sparse_comm():
+    """Sparse-comm modes on the real 4-shard mesh (CI multidev job): pack
+    bit-exact vs off across tiers x async, int8 ledger + loss parity."""
+    out = run_scenario("comm")
+    assert "STORE MULTIDEV OK" in out
+    assert "[S=4 cached pack async=True] bit-exact vs off: OK" in out
+    assert "int8] ledger active" in out

@@ -1,0 +1,344 @@
+"""Sparse-path compression (core/store/comm.py + dist/compressed.py).
+
+Codec half: property-based (tests/_hypothesis_compat — real hypothesis
+when installed, deterministic sampling fallback otherwise) round-trip
+laws for the bit-packed delta key codec (EXACT for any nondecreasing
+list) and the per-row int8 quantizer (error <= scale/2 per element;
+returned residual IS the true quantization error).
+
+Pipeline half: the mode contracts end to end. ``pack`` must replay
+``off`` bit for bit — losses AND the exported master table — on the
+host and cached tiers, sync and async, and on the S=1 sharded tier
+(the MeshCase harness of test_sharded_store), while strictly shrinking
+the modeled wire/staging bytes on the cached tier. ``int8`` is
+explicitly approximate: the selective-sync ledger runs, deferred rows
+bank their whole payload in the error-feedback residual (delayed,
+never dropped), and the adagrad accum catches up exactly at the next
+sync. ``off`` accounting stays byte-identical to the pre-comm path
+(test_hierarchical.test_host_traffic_accounting pins that).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from _hypothesis_compat import given, settings, st
+
+from test_hierarchical import run_store
+
+from repro.core.store import PACK_PAD, SparseComm, resolve_sparse_comm
+from repro.core.store.comm import SPARSE_COMMS
+from repro.dist import (
+    dequantize_rows_np,
+    pack_sorted_keys,
+    quantize_rows_np,
+    unpack_sorted_keys,
+)
+from repro.dist.compressed import PACK_HEADER_BYTES, min_index_dtype
+
+SENTINEL = np.iinfo(np.int32).max
+
+
+# ---------------------------------------------------------------------------
+# codec properties: bit-packed delta keys
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(0, 400), span=st.integers(1, 1 << 40),
+       wide=st.booleans())
+def test_pack_roundtrip_exact(n, span, wide):
+    rng = np.random.default_rng(n * 1000003 + span % 997)
+    dtype = np.int64 if wide else np.int32
+    hi = min(span, np.iinfo(dtype).max - 1)
+    keys = np.sort(rng.integers(0, hi + 1, size=n)).astype(dtype)
+    packed = pack_sorted_keys(keys)
+    out = unpack_sorted_keys(packed, dtype)
+    np.testing.assert_array_equal(out, keys)
+    assert out.dtype == dtype
+    assert packed.nbytes >= PACK_HEADER_BYTES
+
+
+def test_pack_edge_cases():
+    # empty, singleton, constant runs, and the sentinel-padded tail shape
+    # the stores actually send (valid sorted prefix, SENTINEL suffix)
+    for keys in (np.array([], np.int64), np.array([7], np.int32),
+                 np.full(17, 42, np.int64),
+                 np.array([0, 1, 1, 2, SENTINEL, SENTINEL], np.int64)):
+        out = unpack_sorted_keys(pack_sorted_keys(keys), keys.dtype)
+        np.testing.assert_array_equal(out, keys)
+
+
+def test_pack_rejects_unsorted():
+    with pytest.raises(ValueError):
+        pack_sorted_keys(np.array([3, 1, 2], np.int64))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 200))
+def test_pack_small_deltas_beat_raw(n):
+    """Dense sorted runs (the zipf hot set) must compress: width-1 deltas
+    pack 64x before the header."""
+    keys = np.arange(n, dtype=np.int64) + 5
+    packed = pack_sorted_keys(keys)
+    assert packed.nbytes <= PACK_HEADER_BYTES + (n - 1 + 7) // 8
+
+
+def test_min_index_dtype():
+    assert min_index_dtype(255) == np.uint8
+    assert min_index_dtype(256) == np.uint16
+    assert min_index_dtype(1 << 16) == np.uint32
+    assert min_index_dtype(1 << 40) == np.int64
+
+
+# ---------------------------------------------------------------------------
+# codec properties: per-row int8 quantizer
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 64), d=st.integers(1, 48),
+       scale_pow=st.integers(-8, 8))
+def test_quantize_error_bound_and_residual(n, d, scale_pow):
+    rng = np.random.default_rng(n * 131 + d)
+    rows = (rng.standard_normal((n, d)) * 10.0 ** scale_pow
+            ).astype(np.float32)
+    q, scales, err = quantize_rows_np(rows)
+    assert q.dtype == np.int8 and scales.shape == (n,)
+    deq = dequantize_rows_np(q, scales)
+    # symmetric per-row scale = max|row|/127: error <= scale/2 everywhere
+    assert np.all(np.abs(rows - deq) <= scales[:, None] / 2 + 1e-30)
+    # the returned residual IS the true quantization error
+    np.testing.assert_array_equal(err, rows - deq)
+
+
+def test_quantize_zero_rows():
+    rows = np.zeros((3, 4), np.float32)
+    q, scales, err = quantize_rows_np(rows)
+    assert np.all(q == 0) and np.all(err == 0)
+    np.testing.assert_array_equal(dequantize_rows_np(q, scales), rows)
+
+
+# ---------------------------------------------------------------------------
+# SparseComm unit laws
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_precedence(monkeypatch):
+    assert resolve_sparse_comm() == "off"
+    assert resolve_sparse_comm("auto") == "off"
+    monkeypatch.setenv("REPRO_SPARSE_COMM", "pack")
+    assert resolve_sparse_comm() == "pack"
+    assert resolve_sparse_comm("int8") == "int8"  # arg beats env
+    with pytest.raises(ValueError, match="sparse_comm"):
+        resolve_sparse_comm("gzip")
+    assert tuple(SPARSE_COMMS) == ("off", "pack", "int8")
+
+
+def test_exchange_keys_per_slice_roundtrip():
+    """Shard-major slices are individually nondecreasing (sentinel pads at
+    each slice END) but their concatenation is not — per-slice packing
+    must still round-trip the whole layout exactly."""
+    s0 = np.array([2, 5, 9, SENTINEL], np.int64)
+    s1 = np.array([1, 3, SENTINEL, SENTINEL], np.int64)
+    keys = np.concatenate([s0, s1])
+    comm = SparseComm("pack")
+    out = comm.exchange_keys(keys, num_slices=2)
+    np.testing.assert_array_equal(out, keys)
+    assert comm.wire_bytes > 0
+    with pytest.raises(ValueError):  # concatenation alone is NOT sorted
+        comm.exchange_keys(keys, num_slices=1)
+
+
+def test_off_mode_counts_but_never_transforms():
+    comm = SparseComm("off")
+    keys = np.array([4, 1, 3], np.int64)  # off never requires sortedness
+    assert comm.exchange_keys(keys) is keys
+    assert comm.wire_bytes == keys.nbytes
+    assert comm.pad_rows(5, 64) == 64  # the store's own bucket rounding
+    idx = np.arange(5, dtype=np.int32)
+    assert comm.pack_index(idx, 1000).dtype == np.int32
+    assert comm.counters() == {"wire_bytes": float(keys.nbytes),
+                               "idx_bytes": 20.0}
+
+
+def test_pack_pad_narrows_to_occupied_prefix():
+    comm = SparseComm("pack")
+    assert comm.pad_rows(5, 64) == PACK_PAD
+    assert comm.pad_rows(9, 64) == 2 * PACK_PAD
+    assert comm.pad_rows(0, 64) == 0
+    assert comm.pack_index(np.arange(5, dtype=np.int32), 200).dtype == np.uint8
+
+
+def test_int8_writeback_sync_and_error_feedback():
+    """hot_threshold=1: every row syncs every call. The master receives the
+    DEQUANTIZED delta, the residual keeps the true quantization error, and
+    the adagrad accum lands absolutely (exact at every sync)."""
+    rng = np.random.default_rng(0)
+    master = rng.standard_normal((16, 4)).astype(np.float32)
+    base = master.copy()
+    m_accum = np.zeros(16, np.float32)
+    comm = SparseComm("int8", hot_threshold=1)
+    keys = np.array([2, 5, 11])
+    rows = (base[keys] + rng.standard_normal((3, 4))).astype(np.float32)
+    accum = np.array([1.0, 2.0, 3.0], np.float32)
+    nbytes = comm.writeback(keys, rows, accum, master, m_accum)
+    assert nbytes == 3 * 4 + 3 * 4 + 3 * 4  # int8 rows + scales + keys
+    assert comm.rows_synced == 3 and comm.rows_deferred == 0
+    payload = rows - base[keys]
+    q, scales, err = quantize_rows_np(payload)
+    np.testing.assert_array_equal(master[keys],
+                                  base[keys] + dequantize_rows_np(q, scales))
+    np.testing.assert_array_equal(comm._residual[keys], err)
+    np.testing.assert_array_equal(m_accum[keys], accum)  # absolute, exact
+    # next window: the buffer is rebuilt FROM the current master plus a
+    # fresh update (the real commit frame), so the residual fold-in makes
+    # the master land exactly one fresh quantization error from the true
+    # uncompressed target — and that error IS the new residual
+    update2 = rng.standard_normal((3, 4)).astype(np.float32)
+    rows2 = master[keys] + update2
+    comm.writeback(keys, rows2, accum, master, m_accum)
+    target = base[keys] + payload + update2  # the never-quantized master
+    np.testing.assert_allclose(target - master[keys],
+                               comm._residual[keys], atol=1e-6)
+
+
+def test_int8_writeback_deferral_banks_whole_payload():
+    """Cold rows (far below hot_threshold) defer: the master moves nothing
+    and the residual banks the ENTIRE payload — delayed, never dropped."""
+    rng = np.random.default_rng(1)
+    master = rng.standard_normal((32, 4)).astype(np.float32)
+    base = master.copy()
+    m_accum = np.zeros(32, np.float32)
+    comm = SparseComm("int8", hot_threshold=10 ** 6, min_sync_p=0.0, seed=3)
+    keys = np.arange(8)
+    rows = (base[keys] + 1.0).astype(np.float32)
+    accum = np.ones(8, np.float32)
+    comm.writeback(keys, rows, accum, master, m_accum)
+    assert comm.rows_synced + comm.rows_deferred == 8
+    deferred = np.asarray(master[keys] == base[keys]).all(axis=1)
+    assert int(deferred.sum()) == comm.rows_deferred
+    np.testing.assert_array_equal(comm._residual[keys[deferred]],
+                                  (rows - base[keys])[deferred])
+    np.testing.assert_array_equal(m_accum[keys[deferred]], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# pipeline: pack replays off bit for bit (losses AND exported tables)
+# ---------------------------------------------------------------------------
+
+
+def _run(tier, mode, *, async_on=False, **kw):
+    return run_store(tier, comm=SparseComm(mode),
+                     driver_kw={"async_stages": async_on}, **kw)
+
+
+@pytest.mark.parametrize("tier", ["host", "cached"])
+@pytest.mark.parametrize("async_on", [False, True])
+def test_pack_bit_exact(tier, async_on):
+    state_o, stats_o, store_o = _run(tier, "off", async_on=async_on)
+    state_p, stats_p, store_p = _run(tier, "pack", async_on=async_on)
+    np.testing.assert_array_equal(stats_p.losses, stats_o.losses)
+    np.testing.assert_array_equal(np.asarray(state_p.table.rows),
+                                  np.asarray(state_o.table.rows))
+    np.testing.assert_array_equal(np.asarray(state_p.table.accum),
+                                  np.asarray(state_o.table.accum))
+    assert store_p.sparse_comm == "pack"
+    assert stats_p.sparse_comm == "pack" and stats_o.sparse_comm == "off"
+    # the wire ledger ran in both modes, and pack never exceeds raw
+    m_o, m_p = store_o.metrics(), store_p.metrics()
+    assert m_o["wire_bytes"] > 0 and m_p["wire_bytes"] > 0
+    assert m_p["wire_bytes"] <= m_o["wire_bytes"]
+
+
+def test_pack_shrinks_cached_staging_bytes():
+    """The cached tier's bucket-padded staging narrows under pack: fewer
+    H2D bytes and smaller index vectors for the SAME bit-exact run."""
+    _, _, store_o = _run("cached", "off")
+    _, _, store_p = _run("cached", "pack")
+    m_o, m_p = store_o.metrics(), store_p.metrics()
+    assert m_p["h2d_bytes"] < m_o["h2d_bytes"], (m_o, m_p)
+    assert m_p["idx_bytes"] < m_o["idx_bytes"], (m_o, m_p)
+
+
+def test_pack_bit_exact_on_eviction_path():
+    """Eviction writeback stays full-precision in every mode (the
+    exactness boundary): a capacity-starved pack cache still replays off."""
+    state_o, stats_o, _ = _run("cached", "off", capacity=32, miss_bucket=8)
+    state_p, stats_p, store = _run("cached", "pack", capacity=32,
+                                   miss_bucket=8)
+    assert store.evictions > 0
+    np.testing.assert_array_equal(stats_p.losses, stats_o.losses)
+    np.testing.assert_array_equal(np.asarray(state_p.table.rows),
+                                  np.asarray(state_o.table.rows))
+
+
+# ---------------------------------------------------------------------------
+# pipeline: sharded tier (S=1 MeshCase — bit-exact vs its own off run)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tier", ["host", "cached"])
+def test_sharded_pack_bit_exact(tier):
+    from test_sharded_store import MeshCase
+
+    case = MeshCase()
+    state_o, stats_o, store_o = case.run(tier)
+    state_p, stats_p, store_p = case.run(tier, sparse_comm="pack")
+    assert store_p.sparse_comm == "pack"
+    np.testing.assert_array_equal(stats_p.losses, stats_o.losses)
+    np.testing.assert_array_equal(np.asarray(state_p.table.rows),
+                                  np.asarray(state_o.table.rows))
+    m_o, m_p = store_o.metrics(), store_p.metrics()
+    assert m_p["wire_bytes"] <= m_o["wire_bytes"]
+    assert m_o["wire_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# pipeline: int8 is approximate-but-close, and the ledger runs
+# ---------------------------------------------------------------------------
+
+
+def test_int8_loss_parity_and_ledger():
+    _, stats_o, _ = _run("host", "off")
+    _, stats_q, store = _run("host", "int8")
+    assert store.sparse_comm == "int8" and stats_q.sparse_comm == "int8"
+    dev = max(abs(a - b) for a, b in zip(stats_q.losses, stats_o.losses))
+    assert 0 <= dev < 0.05, (dev, stats_q.losses, stats_o.losses)
+    m = store.metrics()
+    assert m["comm_rows_synced"] + m["comm_rows_deferred"] > 0
+    # quantized staging + selective sync: strictly fewer modeled bytes
+    assert store.h2d_bytes < _run("host", "off")[2].h2d_bytes
+
+
+def test_int8_never_selectable_silently():
+    """The lossy mode is labeled everywhere it is selectable."""
+    comm = SparseComm("int8")
+    assert comm.lossy
+    assert "comm_rows_synced" in comm.counters()
+    assert not SparseComm("pack").lossy and not SparseComm("off").lossy
+
+
+# ---------------------------------------------------------------------------
+# serve view: the comm ledger flows through FrozenStoreView.metrics()
+# ---------------------------------------------------------------------------
+
+
+def test_frozen_view_surfaces_comm_counters():
+    from test_hierarchical import _tiny_host_store
+
+    from repro.core.store import CachedStore
+    from repro.serve import FrozenStoreView
+
+    spec, fns, table = _tiny_host_store()
+    store = CachedStore.from_device_table(spec, table, capacity=64,
+                                          comm=SparseComm("pack"))
+    store.owns_master = True
+    view = FrozenStoreView(store)
+    assert view.sparse_comm == "pack"
+    m = view.metrics()
+    assert "wire_bytes" in m and "idx_bytes" in m
+    assert m["read_only"] == 1.0
