@@ -57,6 +57,29 @@ the record). CI asserts the byte savings and the exactness flags — NEVER
 a latency ratio (same rule as the mesh cells: CPU-modeled traffic, real
 accelerators are the target regime).
 
+Cache-policy axis (``--cache-policy``): the NestPipe loop on the DRIFTING
+stream (``dlrm-drift``: the zipf hot head marches through the vocab) under
+each chunk-granular eviction policy (``core/store/policy.py``), plus the
+row-granular seed baseline (``cache_{rowgran}``: chunk_rows=1, the
+pre-chunking movement pattern move for move) and a host-tier ground-truth
+run. Cells interleave within reps, min-of-reps. Every cell records the
+hit rate (total + steady), the staged-burst ledger (h2d_bursts =
+DRAM->HBM staging descriptors, d2h_bursts = whole-chunk eviction
+writebacks) and ``losses_equal_host`` — the value-transparency contract:
+policies decide WHERE rows live, never what they are, so every policy
+replays the host tier bit for bit. CI asserts the exactness flags and
+that the chunked cells stage FEWER bursts than the row-granular baseline
+— NEVER a latency ratio (CPU-modeled traffic; real accelerators are the
+target regime).
+
+Dense-comm cells (with ``--mesh-devices N``): the same loop on an (N, 1)
+DATA-major mesh — all devices on the reduction axis — with the dense-grad
+quantized ring off vs on (``table2_step_latency_dense_comm_{off,int8}``,
+``train.step._build_dense_reducer``). The int8 cell records
+``max_loss_dev`` against its lossless twin (explicitly approximate:
+residual dropped; PR 7 discipline — deviation on the record, never
+asserted to be zero).
+
 ``REPRO_BENCH_STEPS`` / ``REPRO_BENCH_BATCH`` / ``REPRO_BENCH_REPS``
 shrink the run for CI's perf-smoke job (trajectory-only, no thresholds).
 """
@@ -66,7 +89,8 @@ import argparse
 import os
 from typing import Dict, List, Optional
 
-from repro.core.store import SPARSE_COMMS, STAGE_TIMER_KEYS, STORES
+from repro.core.store import (CACHE_POLICIES, SPARSE_COMMS, STAGE_TIMER_KEYS,
+                              STORES)
 
 from .common import emit, make_bench_mesh, run_driver
 
@@ -79,6 +103,13 @@ ARCH = "hstu-industrial"
 ROUTING_ARCH = "dlrm-routing"
 # Cache-dominated cell: steep-zipf keys so the CachedStore hot set is real.
 CACHED_ARCH = "dlrm-cached"
+# Drifting-stream cell: the rank->key mapping rotates every step, the
+# stressor the cache-policy axis exists for (stale-but-frequent residents).
+DRIFT_ARCH = "dlrm-drift"
+# The drift cells pin the cache size so the policy axis is apples-to-apples
+# (generous enough that the chunked grain competes on movement, not on
+# capacity fragmentation).
+DRIFT_CACHE_ROWS = 4096
 
 
 def _stage_breakdown(s: dict) -> str:
@@ -130,6 +161,35 @@ def _comm_cells(steps: int, global_batch: int, reps: int,
     return best, losses
 
 
+def _cache_policy_cells(steps: int, global_batch: int, reps: int,
+                        policies: List[str]):
+    """Cache-policy axis on the drifting stream: each policy at the
+    chunked grain, the row-granular seed baseline (``rowgran``:
+    chunk_rows=1 under the seed's freq scheme), and one host-tier
+    ground-truth run for the exactness records. Interleaved within reps,
+    min-of-reps; losses are same-seed deterministic so the trajectories
+    are rep-invariant."""
+    _, stats, _ = run_driver(DRIFT_ARCH, mode="nestpipe", steps=steps,
+                             n_micro=4, global_batch=global_batch,
+                             store="host")
+    host_losses = [float(x) for x in stats.losses]
+    variants = [("rowgran", {"cache_chunk_rows": 1, "cache_policy": "freq"})]
+    variants += [(pol, {"cache_policy": pol}) for pol in policies]
+    best: Dict[str, dict] = {}
+    losses: Dict[str, List[float]] = {}
+    for _rep in range(reps):
+        for cell, kw in variants:  # interleave: one cell per variant per rep
+            _, stats, _ = run_driver(
+                DRIFT_ARCH, mode="nestpipe", steps=steps, n_micro=4,
+                global_batch=global_batch, store="cached",
+                cache_rows=DRIFT_CACHE_ROWS, **kw)
+            s = stats.summary()
+            losses[cell] = [float(x) for x in stats.losses]
+            if cell not in best or s["mean_step_s"] < best[cell]["mean_step_s"]:
+                best[cell] = s
+    return best, losses, host_losses
+
+
 _MESH_MARKER = "MESH_CELLS_JSON:"
 
 
@@ -141,7 +201,12 @@ def _mesh_worker(mesh_devices: int, steps: int, global_batch: int,
     import json
 
     mesh = make_bench_mesh(mesh_devices)
+    # Dense-comm pair on a DATA-major (N, 1) mesh: the quantized ring runs
+    # over the data axis, so it needs all N devices there — on the (1, N)
+    # store mesh the 1-device data axis would short-circuit to identity.
+    mesh_d = make_bench_mesh(mesh_devices, data_major=True)
     best: Dict[str, dict] = {}
+    dc_losses: Dict[str, List[float]] = {}
     for _rep in range(reps):
         for store in ("device", "host", "cached"):
             _, stats, _ = run_driver(
@@ -151,6 +216,21 @@ def _mesh_worker(mesh_devices: int, steps: int, global_batch: int,
             cell = "mesh_device" if store == "device" else f"sharded_{store}"
             if cell not in best or s["mean_step_s"] < best[cell]["mean_step_s"]:
                 best[cell] = s
+        for dc in ("off", "int8"):
+            _, stats, _ = run_driver(
+                CACHED_ARCH, mode="nestpipe", steps=steps, n_micro=4,
+                global_batch=global_batch, store="device", mesh=mesh_d,
+                dense_comm=dc)
+            s = stats.summary()
+            dc_losses[dc] = [float(x) for x in stats.losses]
+            cell = f"dense_comm_{dc}"
+            if cell not in best or s["mean_step_s"] < best[cell]["mean_step_s"]:
+                best[cell] = s
+    # loss-parity record for the approximate cell (PR 7 discipline:
+    # measured and recorded, never asserted to be zero)
+    best["dense_comm_int8"]["max_loss_dev_vs_off"] = max(
+        (abs(a - b) for a, b in zip(dc_losses["int8"], dc_losses["off"])),
+        default=0.0)
     print(_MESH_MARKER + json.dumps(best))
 
 
@@ -201,6 +281,11 @@ def main(argv: Optional[List[str]] = None):
                    default=None,
                    help="sparse-path compression modes for the cached-tier "
                         "comm cells (repeatable; default: all three)")
+    p.add_argument("--cache-policy", action="append", choices=CACHE_POLICIES,
+                   default=None,
+                   help="chunk-granular eviction policies for the drifting-"
+                        "stream cache cells (repeatable; default: all four; "
+                        "the row-granular seed baseline always runs)")
     p.add_argument("--mesh-devices", type=int,
                    default=int(os.environ.get("REPRO_BENCH_MESH_DEVICES",
                                               "0")),
@@ -268,19 +353,48 @@ def main(argv: Optional[List[str]] = None):
             derived += f";h2d_bytes={int(s['h2d_bytes'])}"
         if "store_shards" in s:
             derived += f";shards={s['store_shards']}"
+        if "max_loss_dev_vs_off" in s:
+            derived += f";lossy=1;max_loss_dev={s['max_loss_dev_vs_off']:.6f}"
         breakdown = _stage_breakdown(s)
         if breakdown:
             derived += ";" + breakdown
-        is_mesh = cell.startswith(("mesh_", "sharded_"))
+        is_mesh = cell.startswith(("mesh_", "sharded_", "dense_comm_"))
+        is_dc = cell.startswith("dense_comm_")
         emit(
-            f"table2_step_latency_store_{cell}",
+            f"table2_step_latency_{'' if is_dc else 'store_'}{cell}",
             s["mean_step_s"] * 1e6,
             derived,
             config={"arch": CACHED_ARCH, "mode": "nestpipe", "steps": steps,
                     "global_batch": c_batch, "n_micro": 4,
-                    "store": cell.replace("_async", ""),
+                    "store": "device" if is_dc else cell.replace("_async", ""),
+                    "dense_comm": cell.split("_")[-1] if is_dc else "off",
                     "async_stages": cell.endswith("_async"),
                     "mesh_devices": args.mesh_devices if is_mesh else 0,
+                    "reps": args.reps, "reduced": True},
+        )
+
+    # cache-policy cells: the drifting stream under every eviction scheme,
+    # with the row-granular seed baseline and host-tier exactness records
+    policies = args.cache_policy or list(CACHE_POLICIES)
+    p_best, p_losses, host_losses = _cache_policy_cells(
+        steps, c_batch, max(args.reps, 1), policies)
+    for cell, s in p_best.items():
+        derived = (
+            f"final_loss={s['final_loss']:.4f}"
+            f";hit_rate={s.get('cache_hit_rate', 0):.3f}"
+            f";hit_rate_steady={s.get('cache_hit_rate_steady', 0):.3f}"
+            f";h2d_bursts={int(s.get('h2d_bursts', 0))}"
+            f";d2h_bursts={int(s.get('d2h_bursts', 0))}"
+            f";losses_equal_host={int(p_losses[cell] == host_losses)}")
+        emit(
+            f"table2_step_latency_cache_{cell}",
+            s["mean_step_s"] * 1e6,
+            derived,
+            config={"arch": DRIFT_ARCH, "mode": "nestpipe", "steps": steps,
+                    "global_batch": c_batch, "n_micro": 4, "store": "cached",
+                    "cache_policy": "freq" if cell == "rowgran" else cell,
+                    "cache_chunk_rows": 1 if cell == "rowgran" else 0,
+                    "cache_rows": DRIFT_CACHE_ROWS,
                     "reps": args.reps, "reduced": True},
         )
 

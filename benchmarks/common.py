@@ -40,7 +40,9 @@ def run_driver(arch: str, *, mode: str, steps: int = 10, n_micro: int = 4,
                global_batch: int = 32, seq_len: int = 32,
                clustering: str = "keycentric", seed: int = 0,
                unroll: bool = True, store: str = "auto",
-               sparse_comm: str = "auto",
+               cache_rows: int = 0, cache_chunk_rows: int = 0,
+               cache_policy: str = "auto", sparse_comm: str = "auto",
+               dense_comm: str = "auto",
                async_stages: str = "auto", mesh=None):
     """Run the real host pipeline on a reduced config; return (state, stats, wl).
 
@@ -52,15 +54,20 @@ def run_driver(arch: str, *, mode: str, steps: int = 10, n_micro: int = 4,
         arch, mode=mode, reduced=True, global_batch=global_batch,
         seq_len=seq_len, n_micro=n_micro, clustering=clustering,
         unroll=unroll, t_chunk=32, lr=1e-3, seed=seed, store=store,
-        sparse_comm=sparse_comm, async_stages=async_stages, mesh=mesh,
+        cache_rows=cache_rows, cache_chunk_rows=cache_chunk_rows,
+        cache_policy=cache_policy, sparse_comm=sparse_comm,
+        dense_comm=dense_comm, async_stages=async_stages, mesh=mesh,
     )
     report = sess.bench(steps)
     return report.state, report.stats, sess.workload
 
 
-def make_bench_mesh(n_devices: int):
+def make_bench_mesh(n_devices: int, *, data_major: bool = False):
     """(1, N) mesh over ("data", "model") — matches the recsys archs'
-    default parallelism (batch AND sparse over all workers)."""
+    default parallelism (batch AND sparse over all workers).
+    ``data_major`` flips it to (N, 1): all devices on the DATA axis, which
+    is what the dense-comm cells need — the quantized dense-grad ring runs
+    over the data axis, and a 1-device axis short-circuits to identity."""
     import jax
     import numpy as np
     from jax.sharding import Mesh
@@ -72,5 +79,6 @@ def make_bench_mesh(n_devices: int):
             f"{have}; the mesh cells must run in a process whose XLA_FLAGS "
             "force the host platform device count before JAX initializes "
             "(bench_step_latency._mesh_cells spawns one)")
-    return Mesh(np.asarray(jax.devices()[:n_devices]).reshape(1, n_devices),
+    shape = (n_devices, 1) if data_major else (1, n_devices)
+    return Mesh(np.asarray(jax.devices()[:n_devices]).reshape(shape),
                 ("data", "model"))

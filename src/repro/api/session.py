@@ -128,8 +128,11 @@ class Session:
         t_chunk: int = 64,
         store: str = "auto",
         cache_rows: int = 0,
+        cache_chunk_rows: int = 0,
+        cache_policy: str = "auto",
         prefetch_ahead: int = 1,
         sparse_comm: str = "auto",
+        dense_comm: str = "auto",
         async_stages: str = "auto",
         stage_workers: int = 1,
         npcfg: Optional[NestPipeConfig] = None,
@@ -163,6 +166,13 @@ class Session:
         summary reports ``store_shards``).
         ``cache_rows`` sizes the CachedStore HBM hot-cache (0 = auto) and
         ``prefetch_ahead`` sets the DBP retrieval lookahead depth k.
+        ``cache_chunk_rows`` sets the cache's admission/eviction grain
+        (0 = config default; 1 = the row-granular seed behaviour) and
+        ``cache_policy`` picks the victim-selection scheme
+        (``"freq" | "lfu" | "lru" | "oracle"``; ``"auto"`` resolves
+        ``$REPRO_CACHE_POLICY`` then freq — ``repro.core.store.policy``).
+        Every policy replays the host tier bit for bit: policies decide
+        WHERE rows live, never what they are.
         ``async_stages`` moves the host-side plan/retrieve/commit stages
         onto background worker threads (bit-exact — the epoch-fenced
         executor in ``repro.core.store.async_exec``; ``"auto"`` resolves
@@ -174,6 +184,10 @@ class Session:
         ``pack`` is lossless and replays ``off`` bit for bit; ``int8`` is
         explicitly approximate (quantized rows + frequency-aware selective
         sync with error feedback).
+        ``dense_comm`` re-reduces the dense-path gradients through the
+        int8 quantized ring (``"off" | "int8"``; ``"auto"`` resolves the
+        config default off — ``repro.dist.compressed``). Exact on a
+        1-replica axis; approximate across replicas (residual dropped).
         """
         strategy = get_strategy(mode)  # fail fast on unknown modes
         npcfg = npcfg or NestPipeConfig(
@@ -187,10 +201,16 @@ class Session:
             overlay["store"] = store
         if cache_rows != 0:
             overlay["cache_rows"] = cache_rows
+        if cache_chunk_rows != 0:
+            overlay["cache_chunk_rows"] = cache_chunk_rows
+        if cache_policy != "auto":
+            overlay["cache_policy"] = cache_policy
         if prefetch_ahead != 1:
             overlay["prefetch_ahead"] = prefetch_ahead
         if sparse_comm != "auto":
             overlay["sparse_comm"] = sparse_comm
+        if dense_comm != "auto":
+            overlay["dense_comm"] = dense_comm
         if async_stages != "auto":
             overlay["async_stages"] = async_stages
         if stage_workers != 1:

@@ -75,6 +75,9 @@ def build_workload_store(workload, fns, *, donate: bool = True,
         donate=donate, mesh=workload.mesh,
         sparse_axes=workload.sparse_axes,
         cache_rows=npcfg.cache_rows, cache_admit=npcfg.cache_admit,
+        cache_chunk_rows=npcfg.cache_chunk_rows,
+        cache_policy=npcfg.cache_policy,
+        prefetch_ahead=npcfg.prefetch_ahead,
         kernel_backend=npcfg.kernel_backend,
         sparse_comm=npcfg.sparse_comm,
     )

@@ -195,6 +195,17 @@ class RecsysModelConfig:
     # Zipf exponent of the synthetic key stream (data/synthetic): higher =
     # more skew = smaller hot set (exercises the CachedStore HBM tier).
     zipf_a: float = 1.2
+    # Non-stationary key streams (data/synthetic) — the regime fixed-vocab
+    # archs can't reach. drift: the zipf rank->key mapping rotates by this
+    # many keys every step, so the hot set slides through the vocab over a
+    # run (a cache must keep re-admitting). growth: sampling is confined to
+    # a live prefix that starts at growth_base_keys rows and grows by
+    # growth_keys_per_step rows each step (an unbounded-vocabulary proxy:
+    # keys the run has not reached yet behave as if they do not exist).
+    # Zeros (the default) reproduce the stationary stream byte for byte.
+    drift_keys_per_step: int = 0
+    growth_keys_per_step: int = 0
+    growth_base_keys: int = 0
 
     @property
     def total_sparse_rows(self) -> int:
@@ -254,6 +265,21 @@ class NestPipeConfig:
     # 8-row granularity, so tiny budgets round up to 8 rows per shard).
     cache_rows: int = 0
     cache_admit: int = 1
+    # Chunk granularity of the cached tier (core/store/cached.py): the HBM
+    # cache is an array of fixed-size row CHUNKS — admission pulls whole
+    # chunks (misses amortize into contiguous H2D bursts) and eviction
+    # writes back the coldest chunk in one D2H. 1 restores the seed's
+    # row-granular movement (every miss its own burst). Chunking changes
+    # WHERE bytes live, never what they are: all values stay bit-exact.
+    cache_chunk_rows: int = 8
+    # Cache victim/admission policy (core/store/policy.py): "auto" resolves
+    # $REPRO_CACHE_POLICY then "freq" (the frequency-threshold scheme —
+    # the bit-exact baseline). "lfu" | "lru" are the classic schemes;
+    # "oracle" feeds the Prefetcher's lookahead-k window union in as the
+    # admission horizon (BagPipe-style, now on the training path). Every
+    # policy replays the host tier bit for bit — the policy only picks
+    # which rows are HBM-resident.
+    cache_policy: str = "auto"
     # Sparse-path compression (core/store/comm.py): "auto" resolves
     # $REPRO_SPARSE_COMM then "off". "pack" is lossless (bit-packed delta
     # key exchange + narrowed staging pads, replays "off" bit for bit);
@@ -261,6 +287,14 @@ class NestPipeConfig:
     # feedback selective sync of commit deltas — loss-parity benched,
     # never silently lossy). Device tier has no host path: always "off".
     sparse_comm: str = "auto"
+    # Dense-grad wire compression (dist/compressed.py): "off" keeps the
+    # exact mean-reduced dense grads; "int8" re-reduces them through the
+    # quantized ring AllReduce (each replica contributes grad/n, every hop
+    # int8 + per-chunk scale) — EXPLICITLY APPROXIMATE like sparse int8
+    # (loss-parity benched; the per-hop residual is dropped rather than
+    # carried, so the TrainState pytree is unchanged). A 1-replica axis is
+    # an exact identity, so single-device runs stay bit-exact.
+    dense_comm: str = "off"
     # DBP lookahead depth k: the Prefetcher issues plan+retrieve for step
     # t+k while step t computes (k=1 is the paper's dual-buffer setting).
     prefetch_ahead: int = 1

@@ -93,6 +93,48 @@ DLRM_CACHED = RecsysModelConfig(
     zipf_a=2.5,
 )
 
+# Drifting-vocabulary bench cell (benchmarks/bench_step_latency
+# --cache-policy): dlrm-cached's trivial dense net, but the zipf rank->key
+# mapping ROTATES by drift_keys_per_step keys every step — the hot head
+# marches through the vocab, so rows that were hot a hundred steps ago sit
+# resident with huge frequency counts while carrying no future traffic.
+# This is exactly the stream the seed's frequency-displacement cache
+# freezes on (a stale resident row's count is never beaten, so admission
+# stalls) and the stream recency/oracle policies are for. a=2.0 keeps the
+# hot head wide enough (~1k rows) that consecutive steps overlap — the
+# oracle's lookahead union actually contains tomorrow's keys.
+# CPU-runnable (full == reduced).
+DLRM_DRIFT = RecsysModelConfig(
+    name="dlrm-drift", backbone="dlrm",
+    tables=(
+        SparseTableConfig("items", vocab_size=10_000, dim=64, bag_size=8),
+        SparseTableConfig("users", vocab_size=4_000, dim=64, bag_size=4),
+    ),
+    d_model=32, n_layers=0, n_heads=1, d_ff=64, seq_len=1,
+    num_dense_features=4,
+    zipf_a=2.0,
+    drift_keys_per_step=96,
+)
+
+# Growing-vocabulary bench cell: sampling is confined to a live prefix
+# that starts at growth_base_keys rows and widens by growth_keys_per_step
+# every step — the "new items enter the catalog continuously" regime. The
+# scrambled mega-key mapping scatters each newly-live rank across the
+# padded table, so growth exercises cold-chunk admission (every step
+# touches rows no policy has ever counted), not trailing-edge locality.
+# CPU-runnable (full == reduced).
+DLRM_GROWTH = RecsysModelConfig(
+    name="dlrm-growth", backbone="dlrm",
+    tables=(
+        SparseTableConfig("items", vocab_size=10_000, dim=64, bag_size=8),
+        SparseTableConfig("users", vocab_size=4_000, dim=64, bag_size=4),
+    ),
+    d_model=32, n_layers=0, n_heads=1, d_ff=64, seq_len=1,
+    num_dense_features=4,
+    zipf_a=1.6,
+    growth_keys_per_step=256, growth_base_keys=1024,
+)
+
 DLRM_REDUCED = RecsysModelConfig(
     name="dlrm-reduced", backbone="dlrm",
     tables=(

@@ -30,6 +30,9 @@ _RECSYS = {
     "dlrm-routing": ("DLRM_ROUTING", "DLRM_ROUTING"),
     # cache-dominated perf-bench cell: steep-zipf keys for the CachedStore
     "dlrm-cached": ("DLRM_CACHED", "DLRM_CACHED"),
+    # non-stationary streams: the cache-policy bench/test cells
+    "dlrm-drift": ("DLRM_DRIFT", "DLRM_DRIFT"),
+    "dlrm-growth": ("DLRM_GROWTH", "DLRM_GROWTH"),
 }
 
 ASSIGNED_LM_ARCHS: Tuple[str, ...] = tuple(_LM_MODULES)

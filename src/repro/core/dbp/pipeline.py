@@ -151,7 +151,8 @@ class PipelineStats:
             "sparse_comm": self.sparse_comm,
             "async_stages": self.async_stages,
         }
-        for k in ("h2d_bytes", "d2h_bytes", "wire_bytes", "idx_bytes",
+        for k in ("h2d_bytes", "d2h_bytes", "h2d_bursts", "d2h_bursts",
+                  "wire_bytes", "idx_bytes",
                   "comm_rows_synced", "comm_rows_deferred") + STAGE_TIMER_KEYS:
             if k in self.store_metrics:
                 out[k] = self.store_metrics[k]

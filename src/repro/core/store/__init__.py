@@ -35,6 +35,8 @@ from .cached import CachedStore
 from .comm import PACK_PAD, SPARSE_COMMS, SparseComm, resolve_sparse_comm
 from .device import DeviceStore
 from .host import HostStore
+from .policy import CACHE_POLICIES, CachePolicy, make_cache_policy, \
+    resolve_cache_policy
 from .prefetch import Prefetcher, PrefetchEntry
 
 __all__ = [
@@ -42,6 +44,10 @@ __all__ = [
     "SPARSE_COMMS",
     "SparseComm",
     "resolve_sparse_comm",
+    "CACHE_POLICIES",
+    "CachePolicy",
+    "make_cache_policy",
+    "resolve_cache_policy",
     "STAGE_TIMER_KEYS",
     "STORES",
     "EmbeddingStore",

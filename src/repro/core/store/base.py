@@ -228,6 +228,9 @@ def build_store(
     sparse_axes: tuple = (),
     cache_rows: int = 0,
     cache_admit: int = 1,
+    cache_chunk_rows: int = 8,
+    cache_policy: Optional[str] = None,
+    prefetch_ahead: int = 1,
     kernel_backend: Optional[str] = None,
     sparse_comm: Optional[str] = None,
 ) -> EmbeddingStore:
@@ -243,15 +246,21 @@ def build_store(
 
     ``sparse_comm`` selects the sparse-path compression mode (comm.py);
     the device tier has no host exchange to compress, so it resolves the
-    mode only to reject bad names and stays ``"off"``.
+    mode only to reject bad names and stays ``"off"``. ``cache_policy``
+    resolves the same way (policy.py) — validated on every tier, acted on
+    only where a cache exists. ``prefetch_ahead`` sizes the cached tier's
+    rolling lookahead horizon (the oracle policy's admission window) to
+    the Prefetcher's actual in-flight depth.
     """
     from .cached import CachedStore
     from .comm import SparseComm, resolve_sparse_comm
     from .device import DeviceStore
     from .host import HostStore
+    from .policy import resolve_cache_policy
     from .sharded import ShardedStore
 
     tier = resolve_store(name)
+    resolve_cache_policy(cache_policy)  # validate even where it's a no-op
     if tier == "device":
         resolve_sparse_comm(sparse_comm)  # validate even where it's a no-op
         return DeviceStore(fns, donate=donate)
@@ -259,6 +268,8 @@ def build_store(
         return ShardedStore(
             spec, fns, mesh, sparse_axes, local_tier=tier,
             cache_rows=cache_rows, cache_admit=cache_admit,
+            cache_chunk_rows=cache_chunk_rows, cache_policy=cache_policy,
+            prefetch_ahead=prefetch_ahead,
             donate=donate, kernel_backend=kernel_backend,
             sparse_comm=sparse_comm,
         )
@@ -266,6 +277,8 @@ def build_store(
         return HostStore(spec, fns, comm=SparseComm(sparse_comm))
     return CachedStore(
         spec, fns, capacity=cache_rows, admit_threshold=cache_admit,
+        chunk_rows=cache_chunk_rows, policy=cache_policy,
+        horizon_windows=prefetch_ahead + 1,
         donate=donate, kernel_backend=kernel_backend,
         comm=SparseComm(sparse_comm),
     )

@@ -1,63 +1,71 @@
-"""CachedStore: a frequency-admitted HBM hot-cache over the DRAM master.
+"""CachedStore: a chunk-granular, policy-driven HBM hot-cache over the
+DRAM master.
 
 FWP's embedding-freezing observation (and CacheEmbedding / BagPipe, see
 PAPERS.md) says a small hot set dominates accesses under production zipf
 skew. This tier keeps that hot set resident in HBM so DBP's retrieval
-stage only moves the cold tail:
+stage only moves the cold tail — and it moves it in CHUNKS: the cache is
+an array of fixed-size row chunks (``cache_chunk_rows``), the unit of
+admission, eviction, directory state and DRAM<->HBM traffic.
 
   retrieve   hit rows are served ON DEVICE via ``kernels/dispatch.py``
-             gathers (zero H2D); only miss rows are gathered from the
-             numpy master and staged H2D, padded to a small bucket size so
-             the device-side assemble jit sees O(log K) distinct shapes.
-             Admission happens HERE: a miss key whose retrieval-window
-             count reaches ``admit_threshold`` gets a cache slot and its
-             just-staged row is scattered into the cache — the rows are
-             already in HBM, so admission costs zero extra H2D, and the
-             key hits from the very next window (no lag against the
-             lookahead prefetcher, which retrieves t+1 before t commits).
-  commit     a write-BACK cache. Rows whose key is cached are scattered
-             into the device cache by a donated single-consumer jit — the
-             same in-place discipline as the device master writeback
-             (train/step.py). Only host-resident rows are pulled D2H
-             (compact, bucket-padded) and scattered into the DRAM master,
-             so D2H traffic also shrinks with the hit rate. Evicted rows
-             are written back to DRAM at eviction.
-  eviction   a full cache evicts its least-frequent victim outside the
-             current window, and only for a strictly hotter candidate, so
-             the zipf tail cannot thrash the hot set. A victim with an
-             in-flight window commit pending is safe: its slot reads -1 at
-             that commit, which routes the fresh row to the DRAM master.
+             gathers (zero H2D); misses are resolved per CHUNK — each
+             missed chunk is one contiguous slice of the numpy master,
+             staged H2D as one burst (``h2d_bursts`` counts them; at
+             ``cache_chunk_rows=1`` every miss row is its own burst,
+             which is exactly the row-granular seed). The staged burst
+             count is padded via ``comm.pad_chunks`` so the assemble jit
+             sees O(log K) distinct shapes, and pack's pad narrowing now
+             operates per chunk burst. Admission happens HERE: the
+             :class:`~repro.core.store.policy.CachePolicy` picks which
+             missed chunks deserve a slot and their just-staged rows are
+             scattered into the cache — already in HBM, zero extra H2D,
+             hits from the very next window.
+  commit     a write-BACK cache. Rows whose chunk is resident are
+             scattered into the device cache by a donated single-consumer
+             jit; only host-resident rows are pulled D2H (compact,
+             bucket-padded) and scattered into the DRAM master.
+  eviction   a full cache evicts whole chunks — victim choice is the
+             policy's (coldest count, stalest recency, or out-of-horizon
+             first), chunks touched by the current window are protected,
+             and each victim writes back to DRAM in one D2H burst
+             (``d2h_bursts``). A victim with an in-flight window commit
+             pending is safe: its chunk reads non-resident at that
+             commit, which routes the fresh row to the DRAM master.
+
+Directory and policy state are CHUNK-KEYED SPARSE maps (dicts), not dense
+per-vocab arrays: host memory scales with the chunks a run actually
+touches, which is what lets this tier face unbounded, drifting
+vocabularies (the dlrm-drift / dlrm-growth archs).
 
 Value-transparency: the cache only decides WHERE a row's bytes live, never
 what they are — training through this tier is bit-for-bit identical to the
-host and device tiers (tests/test_hierarchical.py). ``export_table``
-refreshes the DRAM master from the cache first, so checkpoints contain the
-master only; cache membership and frequency state are deliberately NOT
-checkpointed (a restore starts cold and re-warms).
-
-The per-key slot/frequency maps are dense numpy arrays over
-``padded_rows`` — right for the CPU-scale harness; a production-cardinality
-(1e8-row) deployment would swap them for a hashed map without touching the
-protocol.
+host and device tiers for EVERY policy (tests/test_hierarchical.py,
+tests/test_cache_policies.py). ``export_table`` refreshes the DRAM master
+from the cache first, so checkpoints contain the master only; cache
+membership and policy state are deliberately NOT checkpointed (a restore
+starts cold and re-warms).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from collections import deque
+from typing import Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ...kernels import dispatch
-from ...utils import round_up
 from ..embedding.engine import DualBuffer
 from ..embedding.table import EmbeddingTableState, MegaTableSpec
 from .base import FetchPlan
 from .host import _SENTINEL, HostStore
+from .policy import CachePolicy, make_cache_policy
 
 
 class CachedStore(HostStore):
-    """HBM hot-cache tier over the host-DRAM master (see module docstring)."""
+    """Chunked HBM hot-cache tier over the host-DRAM master (see module
+    docstring)."""
 
     tier = "cached"
 
@@ -69,6 +77,9 @@ class CachedStore(HostStore):
         capacity: int = 0,
         admit_threshold: int = 1,
         miss_bucket: int = 64,
+        chunk_rows: int = 8,
+        policy: Union[str, CachePolicy, None] = None,
+        horizon_windows: int = 2,
         donate: bool = True,
         kernel_backend: Optional[str] = None,
         **kwargs,
@@ -76,34 +87,52 @@ class CachedStore(HostStore):
         super().__init__(spec, fns, **kwargs)
         if capacity <= 0:
             capacity = max(1024, spec.padded_rows // 8)
-        self.capacity = int(min(round_up(capacity, 8), spec.padded_rows))
+        self.chunk_rows = max(int(chunk_rows), 1)
+        R = self.chunk_rows
+        self.n_chunks_total = -(-spec.padded_rows // R)
+        self.cap_chunks = int(min(max(-(-capacity // R), 1),
+                                  self.n_chunks_total))
+        self.capacity = self.cap_chunks * R  # cache rows actually allocated
         self.admit_threshold = max(int(admit_threshold), 1)
         self.miss_bucket = max(int(miss_bucket), 8)
         self._backend = dispatch.resolve_backend(kernel_backend)
+        self._policy = (policy if isinstance(policy, CachePolicy)
+                        else make_cache_policy(
+                            policy, admit_threshold=self.admit_threshold))
 
-        cap = self.capacity
-        # host-authoritative cache directory + admission frequencies
-        self._slot_of_key = np.full(spec.padded_rows, -1, np.int32)
-        self._key_of_slot = np.full(cap, -1, np.int64)
-        self._freq = np.zeros(spec.padded_rows, np.int64)
+        # host-authoritative chunk directory: sparse dict one way, a dense
+        # CAPACITY-sized array the other (capacity is bounded; the vocab
+        # is not — nothing here scales with padded_rows)
+        self._slot_of_chunk: Dict[int, int] = {}
+        self._chunk_of_slot = np.full(self.cap_chunks, -1, np.int64)
+        # rolling horizon: the last ``horizon_windows`` retrieved windows'
+        # chunk sets == the Prefetcher's in-flight lookahead union
+        # (retrieval runs k windows ahead of compute), published to the
+        # policy every retrieve — the oracle's admission horizon.
+        self.horizon_windows = max(int(horizon_windows), 1)
+        self._horizon: deque = deque()
         # device-resident hot rows (+ rowwise adagrad state)
-        self.cache_rows = jnp.zeros((cap, spec.dim), jnp.dtype(self.rows.dtype))
-        self.cache_accum = jnp.zeros((cap,), jnp.float32)
+        self.cache_rows = jnp.zeros((self.capacity, spec.dim),
+                                    jnp.dtype(self.rows.dtype))
+        self.cache_accum = jnp.zeros((self.capacity,), jnp.float32)
         self.hits = 0
         self.misses = 0
-        self.evictions = 0
-        self.admission_skips = 0
+        self.evictions = 0  # chunks evicted
+        self.admission_skips = 0  # chunks barred by the admission block
+        self.h2d_bursts = 0  # contiguous staged DRAM->HBM chunk reads
+        self.d2h_bursts = 0  # contiguous HBM->DRAM chunk write-backs
         # Keys temporarily barred from admission (set by the async stage
         # executor around retrieve): a staged miss row for a key belonging
         # to a submitted-but-unapplied commit is STALE — the buffer copy
         # gets epoch-repaired, the cache copy would not, and a checkpoint
         # flush (or a later hit outside the repair range) could surface it.
-        # Skipping the admission keeps every cached row exactly valued;
-        # the key is simply admitted a window or two later.
+        # A chunk containing ANY blocked key is skipped whole (conservative
+        # — co-resident rows must be exactly valued too); it is simply
+        # admitted a window or two later.
         self._admission_block: Optional[np.ndarray] = None
         # Oracle allow-list (read-serving mode, see set_admission_allow):
-        # when set it REPLACES the frequency threshold — a missed key is
-        # admitted iff it lies within the visible request horizon.
+        # when set it REPLACES the policy — a missed chunk is admitted iff
+        # one of its accessed keys lies within the visible request horizon.
         self._admission_allow: Optional[np.ndarray] = None
 
         backend = self._backend
@@ -140,6 +169,30 @@ class CachedStore(HostStore):
         self._scatter = jax.jit(_scatter,
                                 donate_argnums=(0, 1) if donate else ())
 
+    # -- chunk helpers ----------------------------------------------------
+
+    def _chunk_slice_rows(self, chunks: np.ndarray) -> np.ndarray:
+        """Master row ids covering ``chunks`` (chunk-major, R rows each);
+        out-of-vocab tail positions come back as padded_rows (a mask id)."""
+        R = self.chunk_rows
+        ridx = (chunks[:, None] * R + np.arange(R, dtype=chunks.dtype)).reshape(-1)
+        return np.minimum(ridx, self.spec.padded_rows)
+
+    def _slots_of_chunks(self, chunks: np.ndarray) -> np.ndarray:
+        get = self._slot_of_chunk.get
+        return np.fromiter((get(c, -1) for c in chunks.tolist()),
+                           np.int64, count=chunks.shape[0])
+
+    def _push_horizon(self, u_chunks: np.ndarray) -> None:
+        self._horizon.append(u_chunks)
+        while len(self._horizon) > self.horizon_windows:
+            self._horizon.popleft()
+        counts: Dict[int, int] = {}
+        for win in self._horizon:
+            for c in win.tolist():
+                counts[c] = counts.get(c, 0) + 1
+        self._policy.set_horizon(counts)
+
     # -- DBP stage 4a: cache-aware retrieval + admission -----------------
 
     def retrieve(self, plan: FetchPlan) -> DualBuffer:
@@ -148,43 +201,64 @@ class CachedStore(HostStore):
 
     def _retrieve_body(self, plan: FetchPlan) -> DualBuffer:
         keys = plan.host_keys
+        R = self.chunk_rows
         cap = self.capacity
         pool = self._stage_pool
         valid = keys != _SENTINEL
         safe = np.where(valid, keys, 0)
-        self._freq[safe[valid]] += 1  # buffer keys are unique by construction
-        slots = np.where(valid, self._slot_of_key[safe], -1)
-        hit = slots >= 0
-        miss = valid & ~hit
-        miss_keys = safe[miss]
-        nm = int(miss_keys.shape[0])
-        # pack/int8 narrow the miss staging to the 8-row occupied prefix
-        # (off keeps the 64-row bucket) — see comm.pad_rows
-        pm = self.comm.pad_rows(nm, self.miss_bucket)
+        vkeys = safe[valid]
+        vchunks = vkeys // R
+        voffs = vkeys - vchunks * R
+        u_chunks, inv, u_counts = np.unique(
+            vchunks, return_inverse=True, return_counts=True)
+        self._policy.touch(u_chunks, u_counts)
+        self._push_horizon(u_chunks)
+        u_slots = self._slots_of_chunks(u_chunks)
+        slot_v = u_slots[inv]
+        hit_v = slot_v >= 0
+        miss_u = u_slots < 0
+        miss_chunks = u_chunks[miss_u]  # sorted unique
+        nmc = int(miss_chunks.shape[0])
+        # each missed chunk is ONE contiguous master slice — pad the burst
+        # count (pack narrows per chunk burst), then stage pmc*R rows
+        pmc = self.comm.pad_chunks(nmc, self.miss_bucket, R)
+        pm = pmc * R
 
         if pool is not None:
-            # pooled arrays may hold stale bytes past :nm — safe: no src /
-            # pull index ever references the padding rows (zero fill comes
-            # from out-of-range gathers, not the staged padding)
+            # pooled arrays may hold stale bytes past :nmc*R — safe: no
+            # src / pull index ever references the padding rows (zero fill
+            # comes from out-of-range gathers, not the staged padding)
             stage_rows = pool.take((pm, self.spec.dim), self.rows.dtype)
             stage_accum = pool.take((pm,), np.float32)
         else:
             stage_rows = np.zeros((pm, self.spec.dim), self.rows.dtype)
             stage_accum = np.zeros((pm,), np.float32)
-        if nm:
-            stage_rows[:nm] = self.rows[miss_keys]
-            stage_accum[:nm] = self.accum[miss_keys]
-        # off/pack: raw payload bytes; int8: quantize staged miss rows in
-        # place (per-row int8 + fp32 scale — the modeled compressed wire)
-        self.h2d_bytes += self.comm.stage_payload(stage_rows, stage_accum)
+        if nmc:
+            ridx = self._chunk_slice_rows(miss_chunks)
+            ok = ridx < self.spec.padded_rows
+            src_rows = np.minimum(ridx, self.spec.padded_rows - 1)
+            np.take(self.rows, src_rows, axis=0, out=stage_rows[:nmc * R])
+            np.take(self.accum, src_rows, out=stage_accum[:nmc * R])
+            if not ok.all():  # zero the out-of-vocab tail of the last chunk
+                stage_rows[:nmc * R][~ok] = 0.0
+                stage_accum[:nmc * R][~ok] = 0.0
+
+        # positions of the ACCESSED miss keys inside the staged burst (the
+        # rows int8 quantizes; co-resident rows stay full precision)
+        j_v = np.searchsorted(miss_chunks, vchunks)
+        miss_v = ~hit_v
+        hot_idx = (j_v[miss_v] * R + voffs[miss_v]).astype(np.int64)
+        self.h2d_bytes += self.comm.stage_chunk_payload(
+            stage_rows, stage_accum, hot_idx)
+        self.h2d_bursts += nmc
 
         src = np.full(keys.shape[0], cap + pm, np.int32)  # sentinel -> zero row
-        src[hit] = slots[hit]
-        src[miss] = cap + np.arange(nm, dtype=np.int32)
+        src_v = np.where(hit_v, slot_v * R + voffs, cap + j_v * R + voffs)
+        src[valid] = src_v.astype(np.int32)
         src = self.comm.pack_index(src, cap + pm)  # minimal dtype under pack
 
-        self.hits += int(hit.sum())
-        self.misses += nm
+        self.hits += int(hit_v.sum())
+        self.misses += int(miss_v.sum())
         with self.stage_timers.timed("h2d_ms"):
             stage_rows_d = jax.device_put(stage_rows)
             stage_accum_d = jax.device_put(stage_accum)
@@ -199,57 +273,66 @@ class CachedStore(HostStore):
             self.cache_rows, self.cache_accum, stage_rows_d, stage_accum_d,
             jax.device_put(src), jax.device_put(keys.astype(np.int32)),
         )
-        if nm:
-            self._admit_misses(miss_keys, slots, valid,
-                               stage_rows_d, stage_accum_d, pm)
+        if nmc:
+            self._admit_chunks(miss_chunks, vkeys[miss_v], j_v[miss_v],
+                               u_chunks, stage_rows_d, stage_accum_d, pm)
         return buf
 
-    def _admit_misses(self, miss_keys, window_slots, valid,
+    def _admit_chunks(self, miss_chunks, miss_keys, miss_j, window_chunks,
                       stage_rows_d, stage_accum_d, pm: int) -> None:
-        """Admit hot-enough miss keys using their just-staged rows (no extra
-        H2D): assign slots (evicting if needed) and scatter the staged rows
-        into the device cache in place."""
+        """Admit policy-approved missed chunks using their just-staged rows
+        (no extra H2D): assign chunk slots (evicting if needed) and scatter
+        the staged chunks into the device cache in place."""
         cap = self.capacity
+        R = self.chunk_rows
         if self._admission_allow is not None:
-            # Oracle mode (serving): admit exactly the within-horizon keys,
-            # no frequency threshold (BagPipe's insight — when the access
-            # stream is visible ahead of time, the horizon IS the policy).
-            want = np.isin(miss_keys, self._admission_allow)
+            # Oracle allow-list (serving): admit exactly the chunks with an
+            # accessed key inside the visible horizon, no policy involved
+            # (BagPipe's insight — when the access stream is visible ahead
+            # of time, the horizon IS the policy).
+            key_ok = np.isin(miss_keys, self._admission_allow)
+            want = np.zeros(miss_chunks.shape[0], bool)
+            np.logical_or.at(want, np.searchsorted(miss_chunks,
+                                                   miss_keys // R), key_ok)
         else:
-            want = self._freq[miss_keys] >= self.admit_threshold
+            want = self._policy.admit_mask(miss_chunks)
         if self._admission_block is not None and self._admission_block.size:
-            fresh = ~np.isin(miss_keys, self._admission_block)
+            blocked = np.unique(self._admission_block // R)
+            fresh = ~np.isin(miss_chunks, blocked)
             self.admission_skips += int((want & ~fresh).sum())
             want &= fresh
         cand_pos = np.flatnonzero(want)
         if not cand_pos.size:
             return
-        # hottest candidates first; deterministic tie-break on key
-        ck = miss_keys[cand_pos]
-        order = np.lexsort((ck, -self._freq[ck]))
-        cand_pos = cand_pos[order]
-        free = np.flatnonzero(self._key_of_slot < 0)
+        # most-deserving candidates first (policy order, deterministic)
+        cand_pos = cand_pos[self._policy.admit_order(miss_chunks[cand_pos])]
+        cand = miss_chunks[cand_pos]
+        free = np.flatnonzero(self._chunk_of_slot < 0)
         n_free = min(free.size, cand_pos.size)
         admitted_pos = list(cand_pos[:n_free])
         admitted_slot = list(free[:n_free])
         if n_free:
-            self._admit(miss_keys[cand_pos[:n_free]], free[:n_free])
+            self._admit(cand[:n_free], free[:n_free])
         rest = cand_pos[n_free:]
         if rest.size:
-            got = self._evict_for(miss_keys[rest], window_slots, valid)
+            got = self._evict_for(miss_chunks[rest], window_chunks)
             n_evict = got.size
             if n_evict:
-                self._admit(miss_keys[rest[:n_evict]], got)
+                self._admit(miss_chunks[rest[:n_evict]], got)
                 admitted_pos.extend(rest[:n_evict])
                 admitted_slot.extend(got)
         if not admitted_pos:
             return
-        # staged-row index i corresponds to miss position i (stage order)
+        # staged chunk j occupies burst rows [j*R, (j+1)*R) (stage order)
         na = len(admitted_pos)
-        idx = np.full(self.comm.pad_rows(na, self.miss_bucket), pm, np.int32)
-        idx[:na] = np.asarray(admitted_pos, np.int32)
-        slots = np.full(idx.shape[0], cap, np.int32)  # pad -> dropped
-        slots[:na] = np.asarray(admitted_slot, np.int32)
+        pac = self.comm.pad_chunks(na, self.miss_bucket, R)
+        arange_r = np.arange(R, dtype=np.int64)
+        idx = np.full(pac * R, pm, np.int32)  # pad -> zero rows
+        idx[:na * R] = (np.asarray(admitted_pos, np.int64)[:, None] * R
+                        + arange_r).reshape(-1)
+        slots = np.full(pac * R, cap, np.int32)  # pad -> dropped
+        slots[:na * R] = (np.asarray(admitted_slot, np.int64)[:, None] * R
+                          + arange_r).reshape(-1)
         idx = self.comm.pack_index(idx, pm)
         slots = self.comm.pack_index(slots, cap)
         rows_d, accum_d = self._pull(stage_rows_d, stage_accum_d,
@@ -268,20 +351,29 @@ class CachedStore(HostStore):
     def _commit_body(self, buffer: DualBuffer, plan: Optional[FetchPlan] = None) -> None:
         keys = plan.host_keys if plan is not None \
             else np.asarray(jax.device_get(buffer.keys))
+        R = self.chunk_rows
         cap = self.capacity
         valid = keys != _SENTINEL
         safe = np.where(valid, keys, 0)
-        slots = np.where(valid, self._slot_of_key[safe], -1)
+        chunks = safe // R
+        u_chunks, inv = np.unique(chunks, return_inverse=True)
+        slot_k = self._slots_of_chunks(u_chunks)[inv]
+        resident = valid & (slot_k >= 0)
 
         # ---- hot rows: donated in-place scatter into the device cache --
-        upd_slots = np.where(slots >= 0, slots, cap).astype(np.int32)
+        upd_slots = np.where(resident, slot_k * R + (safe - chunks * R),
+                             cap).astype(np.int32)
         self.cache_rows, self.cache_accum = self._scatter(
             self.cache_rows, self.cache_accum, buffer.rows, buffer.accum,
             jax.device_put(upd_slots),
         )
 
         # ---- cold rows: compact bucket-padded D2H + master scatter ------
-        host_pos = np.flatnonzero(valid & (slots < 0))
+        # (row-granular on purpose: updates exist only for accessed keys,
+        # so a chunk burst would move untouched co-resident rows for
+        # nothing — bursts are a STAGING amortization, commits stay
+        # compact)
+        host_pos = np.flatnonzero(valid & (slot_k < 0))
         nh = int(host_pos.size)
         if nh:
             ph = self.comm.pad_rows(nh, self.miss_bucket)
@@ -305,65 +397,83 @@ class CachedStore(HostStore):
                 self.accum[cold] = accum[:nh]
 
     def set_admission_block(self, keys: Optional[np.ndarray]) -> None:
-        """Bar ``keys`` from cache admission for the next retrieve (see
-        ``_admission_block``; the async executor calls this under its
-        master lock with the union key list of unapplied commits)."""
+        """Bar the chunks containing ``keys`` from admission for the next
+        retrieve (see ``_admission_block``; the async executor calls this
+        under its master lock with the union key list of unapplied
+        commits)."""
         self._admission_block = keys
 
     def set_admission_allow(self, keys: Optional[np.ndarray]) -> None:
-        """Switch admission to within-horizon oracle mode: a missed key is
-        admitted iff it appears in ``keys`` — the union of keys visible in
-        the serving request queue (the BagPipe-style oracle window;
+        """Switch admission to within-horizon oracle mode: a missed chunk
+        is admitted iff one of its accessed keys appears in ``keys`` — the
+        union of keys visible in the serving request queue (the
+        BagPipe-style oracle window;
         ``repro.serve.FrozenStoreView.set_read_horizon`` sets this before
-        every coalesced retrieve). Replaces the frequency threshold while
-        set; ``None`` restores training-batch frequency admission.
-        Eviction stays frequency-ranked — ``_freq`` counts per-retrieve on
-        this path too, so it IS the request popularity under serving."""
+        every coalesced retrieve). Overrides the configured policy's
+        admission while set; ``None`` restores it. Eviction stays
+        policy-ranked — the policy's counts accrue per-retrieve on this
+        path too, so they ARE the request popularity under serving."""
         self._admission_allow = keys
 
-    def _admit(self, admit_keys: np.ndarray, slot_ids: np.ndarray) -> None:
-        self._slot_of_key[admit_keys] = slot_ids.astype(np.int32)
-        self._key_of_slot[slot_ids] = admit_keys
+    def _admit(self, admit_chunks: np.ndarray, slot_ids: np.ndarray) -> None:
+        for c, s in zip(admit_chunks.tolist(), slot_ids.tolist()):
+            self._slot_of_chunk[c] = s
+        self._chunk_of_slot[slot_ids] = admit_chunks
 
-    def _evict_for(self, cand_keys: np.ndarray, window_slots: np.ndarray,
-                   valid: np.ndarray) -> np.ndarray:
-        """Evict least-frequent victims outside the current window for
-        strictly hotter candidates; write victim rows back to the master.
-        Returns the freed slot ids (aligned with ``cand_keys`` order)."""
-        in_window = np.zeros(self.capacity, bool)
-        ws = window_slots[valid & (window_slots >= 0)]
-        in_window[ws] = True
-        evictable = np.flatnonzero((self._key_of_slot >= 0) & ~in_window)
+    def _evict_for(self, cand_chunks: np.ndarray,
+                   window_chunks: np.ndarray) -> np.ndarray:
+        """Evict the policy's coldest victim chunks outside the current
+        window for candidates the policy lets displace them; write victim
+        chunks back to the master, one D2H burst each. Returns the freed
+        slot ids (aligned with ``cand_chunks`` order)."""
+        R = self.chunk_rows
+        occupied = np.flatnonzero(self._chunk_of_slot >= 0)
+        if not occupied.size:
+            return occupied
+        ochunks = self._chunk_of_slot[occupied]
+        # protect every chunk the current window touches — including the
+        # chunks just admitted from its own miss burst
+        out = ~np.isin(ochunks, window_chunks)
+        evictable, vchunks = occupied[out], ochunks[out]
         if not evictable.size:
             return evictable
-        vkeys = self._key_of_slot[evictable]
-        order = np.lexsort((vkeys, self._freq[vkeys]))  # coldest first
-        evictable, vkeys = evictable[order], vkeys[order]
-        n = min(evictable.size, cand_keys.size)
-        take = self._freq[cand_keys[:n]] > self._freq[vkeys[:n]]
+        order = self._policy.victim_order(vchunks)  # coldest first
+        evictable, vchunks = evictable[order], vchunks[order]
+        n = min(evictable.size, cand_chunks.size)
+        take = self._policy.displace(cand_chunks[:n], vchunks[:n])
         n = int(take.sum()) if take.all() else int(np.argmin(take))
         if n <= 0:
             return evictable[:0]
-        vslots, vkeys = evictable[:n], vkeys[:n]
-        # eviction writeback: pull current hot rows D2H, scatter to master
-        # FULL PRECISION in every mode (a spill of the authoritative cache
-        # copy, not a per-window sync — see comm.py's exactness boundary);
-        # pack still narrows the pad and packs the index vector
-        pv = self.comm.pad_rows(n, self.miss_bucket)
-        idx = np.full(pv, self.capacity, np.int32)
-        idx[:n] = vslots
+        vslots, vchunks = evictable[:n], vchunks[:n]
+        self._writeback_chunks(vslots, vchunks)
+        for c in vchunks.tolist():
+            del self._slot_of_chunk[c]
+        self._chunk_of_slot[vslots] = -1
+        self.evictions += n
+        return vslots
+
+    def _writeback_chunks(self, slots: np.ndarray, chunks: np.ndarray) -> None:
+        """Pull ``slots``' chunks D2H and scatter them into the DRAM master
+        FULL PRECISION in every mode (a spill of the authoritative cache
+        copy, not a per-window sync — see comm.py's exactness boundary);
+        pack still narrows the pad and packs the index vector."""
+        R = self.chunk_rows
+        n = int(slots.shape[0])
+        pvc = self.comm.pad_chunks(n, self.miss_bucket, R)
+        arange_r = np.arange(R, dtype=np.int64)
+        idx = np.full(pvc * R, self.capacity, np.int32)
+        idx[:n * R] = (slots[:, None] * R + arange_r).reshape(-1)
         idx = self.comm.pack_index(idx, self.capacity)
         rows_d, accum_d = self._pull(self.cache_rows, self.cache_accum,
                                      jax.device_put(idx))
         rows = np.asarray(jax.device_get(rows_d))
         accum = np.asarray(jax.device_get(accum_d))
         self.d2h_bytes += rows.nbytes + accum.nbytes
-        self.rows[vkeys] = rows[:n]
-        self.accum[vkeys] = accum[:n]
-        self._slot_of_key[vkeys] = -1
-        self._key_of_slot[vslots] = -1
-        self.evictions += n
-        return vslots
+        self.d2h_bursts += n
+        ridx = self._chunk_slice_rows(chunks)
+        ok = ridx < self.spec.padded_rows
+        self.rows[ridx[ok]] = rows[:n * R][ok]
+        self.accum[ridx[ok]] = accum[:n * R][ok]
 
     # -- lifecycle -------------------------------------------------------
 
@@ -374,33 +484,29 @@ class CachedStore(HostStore):
         self.cache_rows = jnp.zeros((self.capacity, self.spec.dim),
                                     table.rows.dtype)
         self.cache_accum = jnp.zeros((self.capacity,), jnp.float32)
-        self._slot_of_key.fill(-1)
-        self._key_of_slot.fill(-1)
-        self._freq.fill(0)
+        self._slot_of_chunk.clear()
+        self._chunk_of_slot.fill(-1)
+        self._horizon.clear()
+        self._policy.reset()
         return out
 
+    def rows_used(self) -> int:
+        """Real master rows currently cache-resident (the tail chunk may
+        cover fewer than ``chunk_rows``)."""
+        R = self.chunk_rows
+        pr = self.spec.padded_rows
+        return sum(min(R, pr - c * R) for c in self._slot_of_chunk)
+
     def flush(self) -> None:
-        """Refresh the DRAM master from the hot cache (cache stays valid)."""
-        used = np.flatnonzero(self._key_of_slot >= 0)
-        n = int(used.size)
-        if not n:
-            return
-        # full precision in every mode (checkpoint path — comm.py boundary)
-        pv = self.comm.pad_rows(n, self.miss_bucket)
-        idx = np.full(pv, self.capacity, np.int32)
-        idx[:n] = used
-        idx = self.comm.pack_index(idx, self.capacity)
-        rows_d, accum_d = self._pull(self.cache_rows, self.cache_accum,
-                                     jax.device_put(idx))
-        rows = np.asarray(jax.device_get(rows_d))
-        accum = np.asarray(jax.device_get(accum_d))
-        self.d2h_bytes += rows.nbytes + accum.nbytes
-        ukeys = self._key_of_slot[used]
-        self.rows[ukeys] = rows[:n]
-        self.accum[ukeys] = accum[:n]
+        """Refresh the DRAM master from the hot cache (cache stays valid);
+        full precision in every mode (checkpoint path — comm.py
+        boundary)."""
+        used = np.flatnonzero(self._chunk_of_slot >= 0)
+        if used.size:
+            self._writeback_chunks(used, self._chunk_of_slot[used])
 
     def export_table(self) -> EmbeddingTableState:
-        """Master + hot rows merged; cache/frequency state stays out of the
+        """Master + hot rows merged; cache/policy state stays out of the
         manifest (a restore re-warms from cold)."""
         self.flush()
         return super().export_table()
@@ -414,7 +520,11 @@ class CachedStore(HostStore):
             "cache_misses": float(self.misses),
             "cache_evictions": float(self.evictions),
             "cache_admission_skips": float(self.admission_skips),
-            "cache_rows_used": float(int((self._key_of_slot >= 0).sum())),
+            "cache_rows_used": float(self.rows_used()),
             "cache_capacity": float(self.capacity),
+            "cache_chunk_rows": float(self.chunk_rows),
+            "cache_policy_chunks": float(self._policy.state_chunks()),
+            "h2d_bursts": float(self.h2d_bursts),
+            "d2h_bursts": float(self.d2h_bursts),
         })
         return out

@@ -105,11 +105,13 @@ class SparseComm:
         self.idx_bytes = 0
         self.rows_synced = 0
         self.rows_deferred = 0
-        # int8 error-feedback + frequency state, lazily sized to the master
-        # (dense arrays — right at harness scale, same note as CachedStore's
-        # slot/frequency maps; a production deployment would hash-map them)
-        self._residual: Optional[np.ndarray] = None
-        self._freq: Optional[np.ndarray] = None
+        # int8 error-feedback + frequency state: CHUNK-KEYED sparse map
+        # (chunk id -> (freq (C,), residual (C, D))), lazily created per
+        # touched chunk — host memory scales with the LIVE key set, not
+        # ``padded_rows`` (the same layout as the chunked CachedStore
+        # directory; closes the PR 7 dense-array follow-up). Values and RNG
+        # call order are bit-identical to the dense version.
+        self._state_chunks: Dict[int, tuple] = {}
 
     # -- key exchange (stage-3 D2H pull / sharded owner exchange) ---------
 
@@ -163,6 +165,17 @@ class SparseComm:
         pad = bucket if self.mode == "off" else min(PACK_PAD, bucket)
         return -(-n // pad) * pad
 
+    def pad_chunks(self, n: int, bucket: int, chunk_rows: int) -> int:
+        """Staging pad for ``n`` occupied CHUNKS of ``chunk_rows`` rows:
+        the row-pad granule divided down to chunk units (pack narrowing
+        operates per chunk burst), floored at one chunk. At
+        ``chunk_rows=1`` this is exactly :meth:`pad_rows`."""
+        if n <= 0:
+            return 0
+        pad = bucket if self.mode == "off" else min(PACK_PAD, bucket)
+        g = max(pad // max(int(chunk_rows), 1), 1)
+        return -(-n // g) * g
+
     def pack_index(self, idx: np.ndarray, max_val: int) -> np.ndarray:
         """Index vector for a staged gather, in the mode's wire dtype
         (int32 under ``off``, the minimal unsigned dtype that holds
@@ -185,12 +198,77 @@ class SparseComm:
         rows[:] = q.astype(np.float32) * scales[:, None]
         return int(q.nbytes) + int(scales.nbytes) + int(accum.nbytes)
 
+    def stage_chunk_payload(self, rows: np.ndarray, accum: np.ndarray,
+                            hot_idx: np.ndarray) -> int:
+        """Chunk-burst variant of :meth:`stage_payload` for the chunked
+        cached tier: only the ACCESSED miss rows (``hot_idx`` into the
+        staged burst) quantize under int8 — co-resident cold rows ride the
+        contiguous burst at full precision, so later hits on them serve
+        bytes the exactness boundary never touched. At chunk_rows=1 every
+        staged row is accessed and this degenerates to ``stage_payload``."""
+        if self.mode != "int8":
+            return int(rows.nbytes) + int(accum.nbytes)
+        nh = int(hot_idx.shape[0])
+        row_bytes = int(rows.dtype.itemsize) * int(rows.shape[1])
+        if nh:
+            q, scales, _ = quantize_rows_np(rows[hot_idx])
+            rows[hot_idx] = q.astype(np.float32) * scales[:, None]
+            hot_bytes = int(q.nbytes) + int(scales.nbytes)
+        else:
+            hot_bytes = 0
+        cold_bytes = (int(rows.shape[0]) - nh) * row_bytes
+        return hot_bytes + cold_bytes + int(accum.nbytes)
+
     # -- int8 commit: selective sync + quantized deltas -------------------
 
-    def _ensure_state(self, padded_rows: int, dim: int) -> None:
-        if self._residual is None:
-            self._residual = np.zeros((padded_rows, dim), np.float32)
-            self._freq = np.zeros(padded_rows, np.int64)
+    _STATE_CHUNK = 64  # rows per sparse state chunk (lazily allocated)
+
+    def _state_for(self, chunk: int, dim: int):
+        st = self._state_chunks.get(chunk)
+        if st is None:
+            st = (np.zeros(self._STATE_CHUNK, np.int64),
+                  np.zeros((self._STATE_CHUNK, dim), np.float32))
+            self._state_chunks[chunk] = st
+        return st
+
+    def _bump_freq_get_residual(self, keys: np.ndarray, dim: int):
+        """freq[keys] += 1 and gather (freq, residual) rows through the
+        chunk-keyed sparse state — one pass, same values as the former
+        dense arrays."""
+        n = int(keys.shape[0])
+        c = keys // self._STATE_CHUNK
+        o = keys % self._STATE_CHUNK
+        f = np.empty(n, np.int64)
+        resid = np.empty((n, dim), np.float32)
+        for chunk in np.unique(c):
+            m = c == chunk
+            freq, res = self._state_for(int(chunk), dim)
+            freq[o[m]] += 1
+            f[m] = freq[o[m]]
+            resid[m] = res[o[m]]
+        return f, resid
+
+    def _residual_scatter(self, keys: np.ndarray, vals: np.ndarray,
+                          dim: int) -> None:
+        c = keys // self._STATE_CHUNK
+        o = keys % self._STATE_CHUNK
+        for chunk in np.unique(c):
+            m = c == chunk
+            _, res = self._state_for(int(chunk), dim)
+            res[o[m]] = vals[m]
+
+    def residual_rows(self, keys: np.ndarray, dim: int) -> np.ndarray:
+        """Residual rows for ``keys`` gathered from the chunk-keyed state
+        (introspection/tests; untouched chunks read as zeros)."""
+        out = np.zeros((int(keys.shape[0]), dim), np.float32)
+        c = keys // self._STATE_CHUNK
+        o = keys % self._STATE_CHUNK
+        for chunk in np.unique(c):
+            st = self._state_chunks.get(int(chunk))
+            if st is not None:
+                m = c == chunk
+                out[m] = st[1][o[m]]
+        return out
 
     def writeback(self, keys: np.ndarray, rows: np.ndarray,
                   accum: np.ndarray, master_rows: np.ndarray,
@@ -206,29 +284,27 @@ class SparseComm:
         banks the WHOLE payload, so the update is delayed, never lost. The
         adagrad accum is absolute (not a delta) — it catches up exactly at
         the row's next sync."""
-        self._ensure_state(master_rows.shape[0], master_rows.shape[1])
         n = int(keys.shape[0])
         if not n:
             return 0
+        dim = int(master_rows.shape[1])
         # commit-count frequency: every accessed row commits each window,
         # so this is the access frequency the selective-sync paper keys on
-        self._freq[keys] += 1
-        f = self._freq[keys]
+        f, resid = self._bump_freq_get_residual(keys, dim)
         p = np.clip(f / self.hot_threshold, self.min_sync_p, 1.0)
         sync = (f >= self.hot_threshold) | (self._rng.random(n) < p)
-        payload = (np.asarray(rows, np.float32) - master_rows[keys]
-                   + self._residual[keys])
+        payload = np.asarray(rows, np.float32) - master_rows[keys] + resid
         ks = keys[sync]
         nbytes = 0
         if ks.size:
             q, scales, err = quantize_rows_np(payload[sync])
             master_rows[ks] += q.astype(np.float32) * scales[:, None]
             master_accum[ks] = accum[sync]
-            self._residual[ks] = err
+            self._residual_scatter(ks, err, dim)
             nbytes = int(q.nbytes) + int(scales.nbytes) + int(ks.size * 4)
         kd = keys[~sync]
         if kd.size:
-            self._residual[kd] = payload[~sync]
+            self._residual_scatter(kd, payload[~sync], dim)
         with self._lock:
             self.rows_synced += int(ks.size)
             self.rows_deferred += int(kd.size)
@@ -243,6 +319,7 @@ class SparseComm:
             if self.lossy:
                 out["comm_rows_synced"] = float(self.rows_synced)
                 out["comm_rows_deferred"] = float(self.rows_deferred)
+                out["comm_state_chunks"] = float(len(self._state_chunks))
         return out
 
 

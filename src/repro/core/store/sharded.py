@@ -97,6 +97,9 @@ class ShardedStore:
         local_tier: str = "host",
         cache_rows: int = 0,
         cache_admit: int = 1,
+        cache_chunk_rows: int = 8,
+        cache_policy: Optional[str] = None,
+        prefetch_ahead: int = 1,
         donate: bool = True,
         kernel_backend: Optional[str] = None,
         sparse_comm: Optional[str] = None,
@@ -154,9 +157,14 @@ class ShardedStore:
             # round to 0 per shard (CachedStore treats <=0 as AUTO-size,
             # which would silently blow the requested budget up S-fold)
             per_shard = max(cache_rows // num_shards, 1) if cache_rows else 0
+            # one policy instance per shard slice: policy state is LOCAL
+            # chunk ids, independent per host like the comm state above
             self.shards = [
                 CachedStore(lspec, None, capacity=per_shard,
-                            admit_threshold=cache_admit, donate=donate,
+                            admit_threshold=cache_admit,
+                            chunk_rows=cache_chunk_rows, policy=cache_policy,
+                            horizon_windows=prefetch_ahead + 1,
+                            donate=donate,
                             kernel_backend=kernel_backend, rows=zeros(),
                             accum=np.zeros((rps,), np.float32),
                             comm=SparseComm(self.sparse_comm, seed=s))
@@ -388,10 +396,13 @@ class ShardedStore:
                               ("cache_misses", "misses"),
                               ("cache_evictions", "evictions"),
                               ("cache_admission_skips", "admission_skips"),
-                              ("cache_capacity", "capacity")):
+                              ("cache_capacity", "capacity"),
+                              ("h2d_bursts", "h2d_bursts"),
+                              ("d2h_bursts", "d2h_bursts")):
                 out[key] = float(sum(getattr(s, attr) for s in self.shards))
             out["cache_rows_used"] = float(sum(
-                int((s._key_of_slot >= 0).sum()) for s in self.shards))
+                s.rows_used() for s in self.shards))
+            out["cache_chunk_rows"] = float(self.shards[0].chunk_rows)
         return out
 
     def memory_bytes(self) -> int:

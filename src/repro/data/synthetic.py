@@ -74,8 +74,27 @@ class SyntheticRecsysStream:
         rng = np.random.default_rng((self.seed, step))
         B = self.batch
         raw = np.empty((B, self.f_total), np.int64)
+        # Non-stationary knobs (RecsysModelConfig): ``drift`` rotates the
+        # zipf rank->key mapping by drift_keys_per_step keys every step (the
+        # hot head marches through the vocab, so yesterday's hot rows go
+        # cold — the cache-policy stressor), ``growth`` confines sampling
+        # to a live prefix that widens by growth_keys_per_step rows per
+        # step from growth_base_keys (a vocabulary that fills in over the
+        # run). Both consume the SAME rng draws as the stationary stream,
+        # so zeros reproduce it byte for byte, and both stay deterministic
+        # in (seed, step) — batch k is identical no matter what was
+        # generated before it.
+        drift = self.cfg.drift_keys_per_step
+        grow = self.cfg.growth_keys_per_step
+        base = self.cfg.growth_base_keys
         for j, (ti, vocab) in enumerate(self._feature_slots):
-            raw[:, j] = _zipf(rng, vocab, B, self.zipf_a) + self.spec.table_offsets[ti]
+            live = vocab
+            if grow or base:
+                live = int(np.clip(base + step * grow, 1, vocab))
+            r = _zipf(rng, live, B, self.zipf_a)
+            if drift:
+                r = (r + step * drift) % vocab
+            raw[:, j] = r + self.spec.table_offsets[ti]
         dense = rng.normal(size=(B, self.cfg.num_dense_features)).astype(np.float32)
         # planted logistic labels keyed on (key parity patterns + dense)
         logit = ((raw % 7 - 3) * self._w).sum(1) * 0.6 + dense @ self._wd * 1.0

@@ -82,6 +82,7 @@ class Workload:
             self.engine, self.bundle.loss_fn, optimizer,
             constant_lr(opt_cfg.lr), self.n_micro, mb_keys_shape,
             unroll=self.npcfg.fwp_unroll,
+            dense_comm=self.npcfg.dense_comm,
         )
         return fns, optimizer
 

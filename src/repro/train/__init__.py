@@ -1,4 +1,4 @@
 """Training substrate: optimizers, state, step builders, loop."""
 from .optim import make_optimizer, warmup_cosine, constant_lr
 from .state import PipelineCarry, TrainState
-from .step import StepFns, build_step_fns
+from .step import DENSE_COMMS, StepFns, build_step_fns

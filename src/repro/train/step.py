@@ -54,9 +54,11 @@ from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from ..core.embedding.engine import EmbeddingEngine, GradPacket
 from ..core.fwp.executor import build_fwp_window
+from ..dist.compressed import ring_allreduce_quant_tree
 from ..utils import tree_scale
 from .optim import OptimizerPair
 from .state import PipelineCarry, TrainState
@@ -87,6 +89,45 @@ STEADY_DONATE_ARGNUMS = (0, 1)  # steady-state fns: state + carry
 SERIAL_DONATE_ARGNUMS = (0,)  # serial fns: state
 COMMIT_DONATE_ARGNUMS = (0,)  # commit fns: master table (in-place scatter)
 
+# Dense-path gradient reduction schemes (NestPipeConfig.dense_comm).
+DENSE_COMMS = ("off", "int8")
+
+
+def _build_dense_reducer(engine: EmbeddingEngine, dense_comm: str) -> Callable:
+    """Dense-grad re-reduction seam behind ``NestPipeConfig.dense_comm``.
+
+    ``"off"`` is the identity. ``"int8"`` pushes the already-mean-reduced
+    dense grads through the quantized ring AllReduce (dist.compressed):
+    every replica holds the same mean grad g after the window's implicit
+    cross-data-axis reduction, so each contributes g/n and the ring's sum
+    reconstructs g up to int8 quantization error. The per-leaf residual is
+    DROPPED on purpose — feeding it back would add leaves to the TrainState
+    pytree and break the donation contract in the module doc. On a
+    1-replica axis the ring short-circuits to an exact identity, so
+    single-device runs stay bit-exact while multi-replica runs are
+    explicitly approximate (reported next to the lossless baseline in
+    bench_step_latency's dense-comm cells — loss deviation is measured,
+    never asserted, PR 7 discipline).
+    """
+    if dense_comm not in DENSE_COMMS:
+        raise ValueError(f"dense_comm={dense_comm!r} not in {DENSE_COMMS}")
+    axes = engine.psum_axes
+    if dense_comm == "off" or engine.mesh is None or not axes:
+        return lambda g: g
+    n = 1
+    for a in axes:
+        n *= engine.mesh.shape[a]
+
+    def body(g):
+        part = tree_scale(g, 1.0 / n)
+        for a in axes:
+            part, _residual = ring_allreduce_quant_tree(part, a)
+        return part
+
+    # Replicated in/out: the grads enter and leave as full per-replica
+    # copies; only the ring's wire traffic is quantized.
+    return engine._smap(body, P(), P())
+
 
 def build_step_fns(
     engine: EmbeddingEngine,
@@ -97,10 +138,12 @@ def build_step_fns(
     mb_keys_shape: Tuple[int, ...],
     *,
     unroll: bool = True,
+    dense_comm: str = "off",
 ) -> StepFns:
     window_fn = build_fwp_window(
         engine, loss_fn, n_micro, mb_keys_shape, unroll=unroll
     )
+    reduce_dense = _build_dense_reducer(engine, dense_comm)
 
     def init_carry(table, keys0) -> PipelineCarry:
         """Pipeline warm-up: route + retrieve batch 0 (no sync partner yet)."""
@@ -114,7 +157,7 @@ def build_step_fns(
         out = window_fn(state.dense, carry.buffer, carry.plan, batch)
         lr = lr_sched(state.step)
         new_dense, new_opt, gnorm = optimizer.update(
-            state.dense, state.opt, out.dense_grads, lr
+            state.dense, state.opt, reduce_dense(out.dense_grads), lr
         )
         buf_updated = engine.apply_window_to_buffer(carry.buffer, out.packets)
 
@@ -157,7 +200,7 @@ def build_step_fns(
         out = window_fn(state.dense, buffer, plan, batch)
         lr = lr_sched(state.step)
         new_dense, new_opt, gnorm = optimizer.update(
-            state.dense, state.opt, out.dense_grads, lr
+            state.dense, state.opt, reduce_dense(out.dense_grads), lr
         )
         buf_updated = engine.apply_window_to_buffer(buffer, out.packets)
         aux = {
@@ -221,7 +264,8 @@ def build_step_fns(
         pkts = jax.tree.map(lambda *xs: jnp.stack(xs), *packets)
         gmean = tree_scale(gsum, 1.0 / n_micro)
         lr = lr_sched(state.step)
-        new_dense, new_opt, gnorm = optimizer.update(state.dense, state.opt, gmean, lr)
+        new_dense, new_opt, gnorm = optimizer.update(
+            state.dense, state.opt, reduce_dense(gmean), lr)
         aux = {"loss": jnp.mean(jnp.stack(losses)), "grad_norm": gnorm, "lr": lr}
         return TrainState(new_dense, new_opt, state.table, state.step + 1), aux, pkts
 

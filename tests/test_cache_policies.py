@@ -1,0 +1,232 @@
+"""The cache-policy seam (core/store/policy.py) never touches values:
+every eviction policy, at every chunk grain, with the async executor on or
+off, replays the host-tier ground truth bit for bit — losses AND the
+exported master table. Policies only decide WHERE rows live.
+
+Also covers the policy unit semantics (displacement rules, the oracle's
+lookahead horizon), the chunk-burst accounting the drift bench cells
+assert on, and the dense_comm="off"/"int8" single-device identity.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from _hypothesis_compat import given, settings, st
+from test_hierarchical import make_driver_with_store, run_store
+
+from repro.core.store import (
+    CACHE_POLICIES,
+    make_cache_policy,
+    resolve_cache_policy,
+)
+from repro.core.store.policy import (
+    FreqPolicy,
+    LfuPolicy,
+    LruPolicy,
+    OraclePolicy,
+)
+
+
+# ---------------------------------------------------------------------------
+# resolution: arg > $REPRO_CACHE_POLICY > "freq" (the sparse_comm ladder)
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_cache_policy_precedence(monkeypatch):
+    monkeypatch.delenv("REPRO_CACHE_POLICY", raising=False)
+    assert resolve_cache_policy(None) == "freq"
+    assert resolve_cache_policy("auto") == "freq"
+    assert resolve_cache_policy("lru") == "lru"
+    monkeypatch.setenv("REPRO_CACHE_POLICY", "oracle")
+    assert resolve_cache_policy("auto") == "oracle"  # env fills the auto hole
+    assert resolve_cache_policy("lfu") == "lfu"  # explicit arg wins
+    with pytest.raises(ValueError, match="cache_policy"):
+        resolve_cache_policy("sideways")
+    monkeypatch.setenv("REPRO_CACHE_POLICY", "sideways")
+    with pytest.raises(ValueError, match="cache_policy"):
+        resolve_cache_policy("auto")
+
+
+def test_make_cache_policy_factory():
+    for name in CACHE_POLICIES:
+        assert make_cache_policy(name).name == name
+
+
+# ---------------------------------------------------------------------------
+# policy unit semantics
+# ---------------------------------------------------------------------------
+
+
+def _touched(policy, *windows):
+    for w in windows:
+        chunks = np.asarray(sorted(set(w)), np.int64)
+        counts = np.asarray([w.count(c) for c in chunks.tolist()], np.int64)
+        policy.touch(chunks, counts)
+    return policy
+
+
+def test_freq_displaces_only_strictly_hotter():
+    p = _touched(FreqPolicy(), [1, 1, 1], [2], [3, 3])
+    # counts: 1 -> 3, 2 -> 1, 3 -> 2
+    np.testing.assert_array_equal(
+        p.displace(np.array([1, 2]), np.array([2, 3])), [True, False])
+    # admit_threshold gates admission on accumulated count
+    p2 = _touched(FreqPolicy(admit_threshold=2), [1, 2, 2])
+    np.testing.assert_array_equal(p2.admit_mask(np.array([1, 2])),
+                                  [False, True])
+
+
+def test_lfu_ties_go_to_the_candidate():
+    p = _touched(LfuPolicy(), [1, 2])
+    np.testing.assert_array_equal(
+        p.displace(np.array([1]), np.array([2])), [True])
+    assert p.admit_mask(np.array([7, 8])).all()  # admit on first touch
+
+
+def test_lru_victims_order_by_recency_not_count():
+    p = _touched(LruPolicy(), [1, 1, 1], [2])  # 1 hot but stale, 2 recent
+    order = p.victim_order(np.array([1, 2]))
+    assert order[0] == 0  # chunk 1 (stalest) first despite the high count
+    assert p.displace(np.array([9]), np.array([1])).all()
+
+
+def test_oracle_horizon_drives_eviction():
+    p = _touched(OraclePolicy(), [1, 2], [2, 3])
+    p.set_horizon({2: 2, 3: 1})
+    # admission is unconditional (every miss is in the horizon already)
+    assert p.admit_mask(np.array([5, 6])).all()
+    # out-of-horizon chunk 1 is the first victim
+    order = p.victim_order(np.array([1, 2, 3]))
+    assert order[0] == 0
+    # out-of-horizon victims yield; in-horizon only to higher demand
+    np.testing.assert_array_equal(
+        p.displace(np.array([9, 3, 3]), np.array([1, 2, 3])),
+        [True, False, False])
+    p.reset()
+    assert p._horizon == {} and p.state_chunks() == 0
+
+
+def test_store_publishes_lookahead_horizon():
+    """The store's rolling horizon is the union of the last
+    ``horizon_windows`` retrieved windows with per-window occurrence
+    counts — exactly what the Prefetcher holds in flight."""
+    from repro.core.store import FetchPlan
+
+    driver, state, store, spec = make_driver_with_store(
+        "cached", policy="oracle", horizon_windows=2)
+    sentinel = np.iinfo(np.int32).max
+    R = store.chunk_rows
+
+    def plan_for(rows):
+        keys = np.full((16,), sentinel, np.int32)
+        keys[:len(rows)] = rows
+        return FetchPlan(None, keys)
+
+    store.retrieve(plan_for([0, 1, 2 * R]))        # chunks {0, 2}
+    store.retrieve(plan_for([1, 3 * R]))           # chunks {0, 3}
+    assert store._policy._horizon == {0: 2, 2: 1, 3: 1}
+    store.retrieve(plan_for([5 * R]))              # chunks {5}: window 1 ages out
+    assert store._policy._horizon == {0: 1, 3: 1, 5: 1}
+
+
+# ---------------------------------------------------------------------------
+# the tentpole property: policy x chunk grain x async — one trajectory
+# ---------------------------------------------------------------------------
+
+
+_HOST_TRUTH = {}
+
+
+def _host_ground_truth():
+    """Host-tier run of the shared tiny workload (cached per process)."""
+    if "state" not in _HOST_TRUTH:
+        state, stats, _ = run_store("host")
+        _HOST_TRUTH["state"] = state
+        _HOST_TRUTH["losses"] = np.asarray(stats.losses)
+    return _HOST_TRUTH["state"], _HOST_TRUTH["losses"]
+
+
+@settings(max_examples=6, deadline=None)
+@given(policy=st.sampled_from(CACHE_POLICIES),
+       chunk_rows=st.sampled_from([1, 3, 4, 8]),
+       async_on=st.booleans())
+def test_policies_replay_host_tier_bit_for_bit(policy, chunk_rows, async_on):
+    """Under eviction pressure (capacity=32 over the whole stream), any
+    (policy, grain, executor) combination must produce the host tier's
+    losses and exported table EXACTLY — assert_array_equal, never
+    allclose: the cache moves bytes, it does not own them."""
+    state_h, losses_h = _host_ground_truth()
+    driver_kw = {"async_stages": True} if async_on else {}
+    state, stats, store = run_store(
+        "cached", capacity=32, miss_bucket=8, chunk_rows=chunk_rows,
+        policy=policy, driver_kw=driver_kw)
+    np.testing.assert_array_equal(np.asarray(stats.losses), losses_h)
+    np.testing.assert_array_equal(np.asarray(state.table.rows),
+                                  np.asarray(state_h.table.rows))
+    np.testing.assert_array_equal(np.asarray(state.table.accum),
+                                  np.asarray(state_h.table.accum))
+
+
+def test_sharded_s1_replays_per_policy():
+    """The S=1 sharded-cached slice under each policy stays on the device
+    trajectory (the S>1 matrix lives in scenarios/store_multidev.py)."""
+    from test_sharded_store import MeshCase
+
+    case = MeshCase()
+    state_d, stats_d, _ = case.run("device")
+    for policy in CACHE_POLICIES:
+        state_s, stats_s, store = case.run("cached", cache_policy=policy,
+                                           cache_chunk_rows=4)
+        assert store.shards[0]._policy.name == policy
+        np.testing.assert_array_equal(stats_s.losses, stats_d.losses)
+        np.testing.assert_array_equal(np.asarray(state_s.table.rows),
+                                      np.asarray(state_d.table.rows))
+
+
+# ---------------------------------------------------------------------------
+# burst accounting: the amortization claim the drift bench cells rest on
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_bursts_never_exceed_row_granular():
+    """h2d_bursts counts distinct STAGED CHUNKS per retrieve, so at
+    chunk_rows=1 it equals the row-granular seed's per-miss staging count
+    and any coarser grain can only coalesce it. d2h_bursts counts evicted
+    chunks the same way."""
+    _, _, store_1 = run_store("cached", capacity=32, miss_bucket=8,
+                              chunk_rows=1)
+    assert store_1.h2d_bursts == store_1.misses  # every miss its own burst
+    _, _, store_k = run_store("cached", capacity=32, miss_bucket=8,
+                              chunk_rows=4, policy="lru")
+    assert store_k.h2d_bursts <= store_k.misses
+    assert store_k.h2d_bursts <= store_1.h2d_bursts
+    # flush (export_table / end of run) writes back every resident chunk
+    # through the same counter, so evictions are a floor, not an equality
+    assert store_k.d2h_bursts >= store_k.evictions
+    m = store_k.metrics()
+    for k in ("h2d_bursts", "d2h_bursts", "cache_chunk_rows",
+              "cache_policy_chunks"):
+        assert k in m
+
+
+# ---------------------------------------------------------------------------
+# dense_comm: the quantized dense-grad ring is an exact identity on one
+# device (n==1 short-circuit) and a loud error on unknown modes
+# ---------------------------------------------------------------------------
+
+
+def test_dense_comm_single_device_identity():
+    _, stats_off, _ = run_store("device")
+    driver, state, store, _ = make_driver_with_store(
+        "device", steps_fns_kw={"dense_comm": "int8"})
+    state, stats_int8 = driver.run(state, 5)
+    np.testing.assert_array_equal(stats_int8.losses, stats_off.losses)
+
+
+def test_dense_comm_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="dense_comm"):
+        make_driver_with_store("device", steps_fns_kw={"dense_comm": "zstd"})

@@ -26,14 +26,15 @@ STEPS = 5
 
 def make_driver_with_store(store_name, *, steps_fns_out=None, lookahead=1,
                            mode="nestpipe", donate=True, driver_kw=None,
-                           **store_kw):
+                           steps_fns_kw=None, **store_kw):
     cfg, spec, stream, dense_params, loss_fn = make_setup()
     optimizer = make_optimizer(OptimizerConfig(lr=0.05, grad_clip=0.0))
     np_cfg = NestPipeConfig(fwp_microbatches=N_MICRO, bucket_slack=2.0)
     eng = EmbeddingEngine(spec, None, ("model",), P(None, None), np_cfg,
                           compute_dtype=np.float32)
     fns = build_step_fns(eng, loss_fn, optimizer, constant_lr(0.05), N_MICRO,
-                         (BATCH // N_MICRO, stream.f_total))
+                         (BATCH // N_MICRO, stream.f_total),
+                         **(steps_fns_kw or {}))
     store = {
         "device": lambda: DeviceStore(fns, donate=donate),
         "host": lambda: HostStore(spec, fns, **store_kw),
@@ -77,12 +78,22 @@ def test_three_tiers_replay_bit_for_bit():
 
 def test_cached_tier_eviction_stays_bit_exact():
     """A capacity-starved cache must evict (writeback to DRAM) and still
-    replay the device trajectory exactly."""
+    replay the device trajectory exactly — row-granular (chunk_rows=1, the
+    seed scenario move for move) and chunk-granular (whole-chunk victims
+    under an always-displace policy)."""
     state_d, stats_d, _ = run_store("device")
-    state_c, stats_c, store = run_store("cached", capacity=32, miss_bucket=8)
+    state_c, stats_c, store = run_store("cached", capacity=32, miss_bucket=8,
+                                        chunk_rows=1)
     assert store.evictions > 0, "capacity=32 should force evictions"
     np.testing.assert_array_equal(stats_c.losses, stats_d.losses)
     np.testing.assert_array_equal(np.asarray(state_c.table.rows),
+                                  np.asarray(state_d.table.rows))
+    state_k, stats_k, store_k = run_store("cached", capacity=32,
+                                          miss_bucket=8, chunk_rows=4,
+                                          policy="lru")
+    assert store_k.evictions > 0, "8 chunk slots under lru should evict"
+    np.testing.assert_array_equal(stats_k.losses, stats_d.losses)
+    np.testing.assert_array_equal(np.asarray(state_k.table.rows),
                                   np.asarray(state_d.table.rows))
 
 
@@ -177,7 +188,9 @@ def test_from_device_table_builds_complete_subclass():
     cached = CachedStore.from_device_table(spec, table, capacity=64)
     assert cached.capacity == 64
     assert cached.cache_rows.shape == (64, spec.dim)
-    assert cached._slot_of_key.shape == (spec.padded_rows,)
+    assert cached.cap_chunks == 64 // cached.chunk_rows
+    assert cached._chunk_of_slot.shape == (cached.cap_chunks,)
+    assert cached._slot_of_chunk == {}  # chunk directory starts empty
     assert cached.hits == 0 and cached.misses == 0
     np.testing.assert_array_equal(cached.rows, np.asarray(table.rows))
     # usable end to end: stage a window through retrieve (only the host

@@ -192,7 +192,7 @@ def test_int8_writeback_sync_and_error_feedback():
     q, scales, err = quantize_rows_np(payload)
     np.testing.assert_array_equal(master[keys],
                                   base[keys] + dequantize_rows_np(q, scales))
-    np.testing.assert_array_equal(comm._residual[keys], err)
+    np.testing.assert_array_equal(comm.residual_rows(keys, 4), err)
     np.testing.assert_array_equal(m_accum[keys], accum)  # absolute, exact
     # next window: the buffer is rebuilt FROM the current master plus a
     # fresh update (the real commit frame), so the residual fold-in makes
@@ -203,7 +203,7 @@ def test_int8_writeback_sync_and_error_feedback():
     comm.writeback(keys, rows2, accum, master, m_accum)
     target = base[keys] + payload + update2  # the never-quantized master
     np.testing.assert_allclose(target - master[keys],
-                               comm._residual[keys], atol=1e-6)
+                               comm.residual_rows(keys, 4), atol=1e-6)
 
 
 def test_int8_writeback_deferral_banks_whole_payload():
@@ -221,7 +221,7 @@ def test_int8_writeback_deferral_banks_whole_payload():
     assert comm.rows_synced + comm.rows_deferred == 8
     deferred = np.asarray(master[keys] == base[keys]).all(axis=1)
     assert int(deferred.sum()) == comm.rows_deferred
-    np.testing.assert_array_equal(comm._residual[keys[deferred]],
+    np.testing.assert_array_equal(comm.residual_rows(keys, 4)[deferred],
                                   (rows - base[keys])[deferred])
     np.testing.assert_array_equal(m_accum[keys[deferred]], 0.0)
 
@@ -267,9 +267,10 @@ def test_pack_shrinks_cached_staging_bytes():
 def test_pack_bit_exact_on_eviction_path():
     """Eviction writeback stays full-precision in every mode (the
     exactness boundary): a capacity-starved pack cache still replays off."""
-    state_o, stats_o, _ = _run("cached", "off", capacity=32, miss_bucket=8)
+    state_o, stats_o, _ = _run("cached", "off", capacity=32, miss_bucket=8,
+                               chunk_rows=1)
     state_p, stats_p, store = _run("cached", "pack", capacity=32,
-                                   miss_bucket=8)
+                                   miss_bucket=8, chunk_rows=1)
     assert store.evictions > 0
     np.testing.assert_array_equal(stats_p.losses, stats_o.losses)
     np.testing.assert_array_equal(np.asarray(state_p.table.rows),
