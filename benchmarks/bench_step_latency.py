@@ -80,6 +80,14 @@ quantized ring off vs on (``table2_step_latency_dense_comm_{off,int8}``,
 residual dropped; PR 7 discipline — deviation on the record, never
 asserted to be zero).
 
+Fault-recovery cell (``table2_step_latency_faults``): the dlrm-cached
+NestPipe loop twice — fault-free, then with a deterministic fault injected
+at EVERY store stage hook point (plan/retrieve/commit/h2d; dist/inject.py)
+— recording ``losses_equal_faultfree`` plus the recovery counters
+(faults_injected / stage_retries / commit_rollbacks). The cell's value and
+derived fields are counts/equality ONLY — NEVER a latency ratio: recovery
+cost under injected chaos is not a performance number.
+
 ``REPRO_BENCH_STEPS`` / ``REPRO_BENCH_BATCH`` / ``REPRO_BENCH_REPS``
 shrink the run for CI's perf-smoke job (trajectory-only, no thresholds).
 """
@@ -432,6 +440,32 @@ def main(argv: Optional[List[str]] = None):
                     "global_batch": c_batch, "n_micro": 4, "store": "cached",
                     "sparse_comm": mode, "reps": args.reps, "reduced": True},
         )
+
+    # fault-recovery cell: cached tier with a deterministic fault at every
+    # stage hook point vs its fault-free twin. Value + derived are counts
+    # and the bit-exactness flag only — never a latency ratio.
+    fault_spec = "plan:step=1;retrieve:step=2;commit:step=3;h2d:step=1"
+    _, stats_ff, _ = run_driver(CACHED_ARCH, mode="nestpipe", steps=steps,
+                                n_micro=4, global_batch=c_batch,
+                                store="cached")
+    _, stats_fi, _ = run_driver(CACHED_ARCH, mode="nestpipe", steps=steps,
+                                n_micro=4, global_batch=c_batch,
+                                store="cached", fault_inject=fault_spec)
+    s = stats_fi.summary()
+    equal = [float(x) for x in stats_fi.losses] == \
+        [float(x) for x in stats_ff.losses]
+    emit(
+        "table2_step_latency_faults",
+        s.get("faults_injected", 0.0),
+        f"losses_equal_faultfree={int(equal)}"
+        f";faults_injected={int(s.get('faults_injected', 0))}"
+        f";stage_retries={int(s.get('stage_retries', 0))}"
+        f";commit_rollbacks={int(s.get('commit_rollbacks', 0))}"
+        f";final_loss={s['final_loss']:.4f}",
+        config={"arch": CACHED_ARCH, "mode": "nestpipe", "steps": steps,
+                "global_batch": c_batch, "n_micro": 4, "store": "cached",
+                "fault_inject": fault_spec, "reduced": True},
+    )
 
 
 if __name__ == "__main__":

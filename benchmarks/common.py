@@ -43,7 +43,8 @@ def run_driver(arch: str, *, mode: str, steps: int = 10, n_micro: int = 4,
                cache_rows: int = 0, cache_chunk_rows: int = 0,
                cache_policy: str = "auto", sparse_comm: str = "auto",
                dense_comm: str = "auto",
-               async_stages: str = "auto", mesh=None):
+               async_stages: str = "auto", fault_inject: str = "auto",
+               mesh=None):
     """Run the real host pipeline on a reduced config; return (state, stats, wl).
 
     ``mesh`` runs the SAME pipeline SPMD (simulated devices under
@@ -56,7 +57,8 @@ def run_driver(arch: str, *, mode: str, steps: int = 10, n_micro: int = 4,
         unroll=unroll, t_chunk=32, lr=1e-3, seed=seed, store=store,
         cache_rows=cache_rows, cache_chunk_rows=cache_chunk_rows,
         cache_policy=cache_policy, sparse_comm=sparse_comm,
-        dense_comm=dense_comm, async_stages=async_stages, mesh=mesh,
+        dense_comm=dense_comm, async_stages=async_stages,
+        fault_inject=fault_inject, mesh=mesh,
     )
     report = sess.bench(steps)
     return report.state, report.stats, sess.workload

@@ -25,8 +25,14 @@ import numpy as np
 from ..configs.base import NestPipeConfig, OptimizerConfig, ShapeConfig
 from ..core.dbp.pipeline import PipelineStats
 from ..core.embedding import init_table_state
-from ..dist.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from ..dist.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    restore_latest_verifiable,
+    save_checkpoint,
+)
 from ..dist.fault import PreemptionGuard, StepWatchdog
+from ..dist.inject import FaultInjector, resolve_fault_inject
 from ..launch.build import Workload, resolve
 from ..train.state import TrainState
 from .strategies import Strategy, get_strategy
@@ -102,6 +108,12 @@ class Session:
         self.metrics_every = metrics_every
         self.guard = PreemptionGuard(signals=preemption_signals)
         self.watchdog = StepWatchdog(factor=watchdog_factor)
+        # One injector for the session's checkpoint I/O, armed by the same
+        # resolved spec the store's stage hooks use (dist/inject.py) — but
+        # a SEPARATE instance, so a "ckpt_torn:step=0" schedule counts
+        # checkpoint saves, not store stage calls.
+        self.ckpt_injector = FaultInjector.from_spec(
+            resolve_fault_inject(workload.npcfg.fault_inject))
         self._fns = None  # training step fns built on first train/bench
         self._optimizer = None
         self._state: Optional[TrainState] = None
@@ -135,6 +147,7 @@ class Session:
         dense_comm: str = "auto",
         async_stages: str = "auto",
         stage_workers: int = 1,
+        fault_inject: str = "auto",
         npcfg: Optional[NestPipeConfig] = None,
         opt_cfg: Optional[OptimizerConfig] = None,
         lr: Optional[float] = None,
@@ -188,6 +201,12 @@ class Session:
         int8 quantized ring (``"off" | "int8"``; ``"auto"`` resolves the
         config default off — ``repro.dist.compressed``). Exact on a
         1-replica axis; approximate across replicas (residual dropped).
+        ``fault_inject`` arms deterministic fault injection at the store's
+        stage boundaries and the session's checkpoint I/O (spec grammar in
+        ``repro.dist.inject``; ``"auto"`` resolves ``$REPRO_FAULT_INJECT``
+        then off). Injected stage faults are absorbed by the store's
+        bounded retries — the run replays the fault-free trajectory bit
+        for bit and the summary reports the recovery counters.
         """
         strategy = get_strategy(mode)  # fail fast on unknown modes
         npcfg = npcfg or NestPipeConfig(
@@ -215,6 +234,8 @@ class Session:
             overlay["async_stages"] = async_stages
         if stage_workers != 1:
             overlay["stage_workers"] = stage_workers
+        if fault_inject != "auto":
+            overlay["fault_inject"] = fault_inject
         if overlay:
             npcfg = dataclasses.replace(npcfg, **overlay)
         npcfg = strategy.configure(npcfg)
@@ -284,13 +305,22 @@ class Session:
         return self._state
 
     def restore_if_available(self) -> Optional[int]:
-        """Restore the latest checkpoint when one exists; returns its step."""
+        """Restore the newest VERIFIABLE checkpoint when one exists;
+        returns its step (None when the directory holds nothing usable).
+
+        Walks past checkpoints whose payload fails the manifest CRC pass
+        (torn write on a preemption kill, bit rot) — falling back a step
+        is always safe because the trajectory is deterministic."""
         if not self.ckpt_dir:
             return None
-        last = latest_step(self.ckpt_dir)
-        if last is not None:
-            self.restore(last)
-        return last
+        if latest_step(self.ckpt_dir) is None:
+            return None
+        try:
+            self._state, step = restore_latest_verifiable(
+                self.ckpt_dir, self.state)
+        except FileNotFoundError:
+            return None
+        return step
 
     # ------------------------------------------------------------------
     # train / bench
@@ -317,27 +347,35 @@ class Session:
 
         def on_ckpt(st, _step_no):
             if self.ckpt_dir:
-                save_checkpoint(self.ckpt_dir, st, int(st.step))
+                save_checkpoint(self.ckpt_dir, st, int(st.step),
+                                injector=self.ckpt_injector)
 
-        driver_kw = {}
+        # The driver polls the guard at step boundaries (preemption notice
+        # -> checkpoint via on_ckpt + clean exit) and feeds the watchdog
+        # from its metric drain, so watchdog events and the driver's
+        # straggler stats agree by construction.
+        driver_kw = {"guard": self.guard, "watchdog": self.watchdog}
         if self.metrics_every is not None:
             driver_kw["metrics_every"] = self.metrics_every
+        on_checkpoint = on_ckpt if self.ckpt_dir else None
         driver = self.strategy.build_driver(
             self.fns, stream, self.workload,
-            on_checkpoint=on_ckpt if (self.ckpt_dir and self.ckpt_every) else None,
-            ckpt_every=self.ckpt_every,
+            on_checkpoint=on_checkpoint,
+            ckpt_every=self.ckpt_every if self.ckpt_dir else 0,
             **driver_kw,
         )
+        events_before = len(self.watchdog.events)
         t0 = time.time()
         state, stats = driver.run(self.state, max(int(steps), 0))
         wall = time.time() - t0
         self._state = state
 
-        events_before = len(self.watchdog.events)
-        for i, st in enumerate(stats.step_times):
-            self.watchdog.observe(start + i, st)
         flagged = len(self.watchdog.events) - events_before
-        if self.ckpt_dir and (checkpoint_final or self.guard.should_checkpoint):
+        if self.ckpt_dir and stats.preempted_at is None \
+                and (checkpoint_final or self.guard.should_checkpoint):
+            # preempted runs already saved through the driver's exit path;
+            # this covers checkpoint_final and a notice that landed after
+            # the last step boundary
             self.save()
 
         summary = stats.summary()

@@ -80,6 +80,7 @@ def build_workload_store(workload, fns, *, donate: bool = True,
         prefetch_ahead=npcfg.prefetch_ahead,
         kernel_backend=npcfg.kernel_backend,
         sparse_comm=npcfg.sparse_comm,
+        fault_inject=npcfg.fault_inject,
     )
 
 

@@ -306,6 +306,11 @@ class NestPipeConfig:
     # plan/retrieve worker threads for the executor (1 = deterministic
     # FIFO; >1 keeps values exact, cache counters may vary run to run).
     stage_workers: int = 1
+    # Deterministic fault injection (dist/inject.py): a schedule spec like
+    # "retrieve:step=7;commit:step=12,count=2;h2d:p=0.05,seed=3" arms the
+    # chaos seam at the store's stage boundaries + checkpoint I/O. "auto"
+    # resolves $REPRO_FAULT_INJECT then off; "" | "off" force it off.
+    fault_inject: str = "auto"
 
 
 @dataclass(frozen=True)

@@ -113,6 +113,9 @@ class PipelineStats:
     store_tier: str = "device"
     sparse_comm: str = "off"
     async_stages: bool = False
+    # step boundary (1-based, relative to this run) where a preemption
+    # notice stopped the loop early; None for a run that went the distance
+    preempted_at: Optional[int] = None
     # cumulative store counters at the last drain / after the warm-up drain
     store_metrics: Dict[str, float] = field(default_factory=dict)
     store_metrics_warm: Dict[str, float] = field(default_factory=dict)
@@ -153,11 +156,15 @@ class PipelineStats:
         }
         for k in ("h2d_bytes", "d2h_bytes", "h2d_bursts", "d2h_bursts",
                   "wire_bytes", "idx_bytes",
-                  "comm_rows_synced", "comm_rows_deferred") + STAGE_TIMER_KEYS:
+                  "comm_rows_synced", "comm_rows_deferred",
+                  "stage_retries", "commit_rollbacks",
+                  "faults_injected") + STAGE_TIMER_KEYS:
             if k in self.store_metrics:
                 out[k] = self.store_metrics[k]
         if "shards" in self.store_metrics:  # sharded tier: per-host masters
             out["store_shards"] = int(self.store_metrics["shards"])
+        if self.preempted_at is not None:
+            out["preempted_at"] = self.preempted_at
         out.update(self._cache_rates())
         return out
 
@@ -174,10 +181,15 @@ class _MetricsDrain:
     """
 
     def __init__(self, stats: PipelineStats, straggler_factor: float,
-                 store: Optional[EmbeddingStore] = None):
+                 store: Optional[EmbeddingStore] = None, watchdog=None):
         self.stats = stats
         self.straggler_factor = straggler_factor
         self.store = store
+        # dist.fault.StepWatchdog — when supplied it OWNS straggler
+        # detection (its own EMA + threshold) and the internal EMA check
+        # below is bypassed, so its event log and stats.straggler_steps
+        # agree by construction.
+        self.watchdog = watchdog
         self.pending: List[tuple] = []
         self.ema: Optional[float] = None
         self._t_mark = time.perf_counter()
@@ -206,9 +218,15 @@ class _MetricsDrain:
             self.stats.overflow_max = max(
                 self.stats.overflow_max, int(aux.get("routing_overflow", 0))
             )
-            if self.ema is not None and dt > self.straggler_factor * self.ema:
-                self.stats.straggler_steps.append(t)
-            self.ema = dt if self.ema is None else 0.9 * self.ema + 0.1 * dt
+            if self.watchdog is not None:
+                if self.watchdog.observe(t, dt):
+                    self.stats.straggler_steps.append(t)
+            else:
+                if self.ema is not None and \
+                        dt > self.straggler_factor * self.ema:
+                    self.stats.straggler_steps.append(t)
+                self.ema = dt if self.ema is None else \
+                    0.9 * self.ema + 0.1 * dt
         self.pending.clear()
         self._t_mark = now
         self._wait_mark = self.stats.input_wait_total
@@ -247,6 +265,12 @@ class DBPDriver:
         # (None -> lookahead+1 on host tiers in nestpipe mode, else 0; see
         # core/store/async_exec.py — 0 replays the sync critical path)
         stage_hooks=None,  # StageExecutor test seam (schedule injection)
+        guard=None,  # dist.fault.PreemptionGuard — polled at step
+        # boundaries; a latched notice checkpoints (via on_checkpoint) and
+        # exits the loop cleanly so a resumed run continues the exact
+        # trajectory (see run())
+        watchdog=None,  # dist.fault.StepWatchdog — owns straggler
+        # detection when supplied (its events mirror stats.straggler_steps)
     ):
         self.fns = step_fns
         self.n_micro = n_micro
@@ -272,6 +296,8 @@ class DBPDriver:
                 if (mode == "nestpipe" and self.store.tier != "device") else 0
         self.fence_slack = max(int(fence_slack), 0)
         self.stage_hooks = stage_hooks
+        self.guard = guard
+        self.watchdog = watchdog
         self._exec: Optional[StageExecutor] = None  # live only inside run()
         if mode == "serial" and self.store.tier != "device":
             raise ValueError(
@@ -321,7 +347,8 @@ class DBPDriver:
         stats = PipelineStats()
         stats.store_tier = self.store.tier
         stats.sparse_comm = getattr(self.store, "sparse_comm", "off")
-        drain = _MetricsDrain(stats, self.straggler_factor, store=self.store)
+        drain = _MetricsDrain(stats, self.straggler_factor, store=self.store,
+                              watchdog=self.watchdog)
         try:
             if self.mode == "serial":
                 for t in range(num_steps):
@@ -332,7 +359,14 @@ class DBPDriver:
                     drain.push(t, aux)
                     self._maybe_drain(drain, t, num_steps)
                     self._maybe_ckpt(state, t, drain)
+                    if self._preempt(t, num_steps):
+                        stats.preempted_at = t + 1
+                        break
                 drain.drain()
+                if stats.preempted_at is not None \
+                        and self.on_checkpoint is not None:
+                    self.on_checkpoint(self._ckpt_state(state),
+                                       stats.preempted_at)
                 return state, stats
 
             if num_steps <= 0:
@@ -382,10 +416,32 @@ class DBPDriver:
                 drain.push(t, aux)
                 self._maybe_drain(drain, t, num_steps)
                 self._maybe_ckpt(state, t, drain)
+                if self._preempt(t, num_steps):
+                    # Break AFTER this window's commit was submitted: the
+                    # master holds exactly t+1 whole-window commits once the
+                    # executor drains, and the discarded lookahead buffers
+                    # were never committed — a resumed run's fresh
+                    # retrieves against this master equal the
+                    # epoch-repaired buffers the uninterrupted run carried
+                    # (Prop. 1), so the trajectory continues bit-for-bit.
+                    stats.preempted_at = t + 1
+                    break
             if self._exec is not None:
                 self._exec.drain()  # all commits applied: master is final
+                if stats.preempted_at is not None:
+                    # quiesce in-flight lookahead retrieves before release:
+                    # they hold the master lock mid-gather, and the cached
+                    # tier's release flushes hot rows into the master.
+                    # Safe from hangs: fences only reference commits
+                    # already submitted, and drain() just applied them all.
+                    self._exec.shutdown(wait=True)
             drain.drain()
             state = state._replace(table=self.store.release())
+            if stats.preempted_at is not None \
+                    and self.on_checkpoint is not None:
+                # state carries the real master post-release — save it so a
+                # resumed run restores the exact table + step.
+                self.on_checkpoint(state, stats.preempted_at)
             return state, stats
         finally:
             if self._exec is not None:
@@ -396,6 +452,13 @@ class DBPDriver:
                     # the pooled (blocking) staging path
                     self.store.clear_stage_pool()
             self.queue.close()
+
+    def _preempt(self, t: int, num_steps: int) -> bool:
+        # Poll at the step boundary only — never mid-step — so every exit
+        # is at a consistent (whole-window-committed) state. The last step
+        # exits anyway; don't mislabel it a preemption.
+        return (self.guard is not None and self.guard.should_checkpoint
+                and t + 1 < num_steps)
 
     def _maybe_drain(self, drain: _MetricsDrain, t: int, num_steps: int):
         # Step 0 carries compile time — drain it alone so the smear stays out

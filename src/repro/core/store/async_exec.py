@@ -175,6 +175,11 @@ class StageExecutor:
         # commit thread may be holding the master lock for seconds.
         self._pk_lock = threading.Lock()
         self._pending_commit_keys: Dict[int, Any] = {}
+        # (stage, window, exc) of failed plan/retrieve jobs, in failure
+        # order: a future only surfaces its error when popped, which for a
+        # mid-queue failure is several windows late — AsyncPrefetcher.pop
+        # checks this list to fail EAGERLY with the stage + window labeled
+        self._stage_failures: List[tuple] = []
 
     def _hook(self, name: str, arg) -> None:
         fn = self.hooks.get(name)
@@ -202,37 +207,54 @@ class StageExecutor:
         wplan = self.store.route(keys)  # driver-thread dispatch, no wait
 
         def job():
-            self._hook("retrieve_start", window)
-            plan = self.store.plan_from_window(wplan)
-            with self._epoch_cv:
-                # a failed commit can never bump the epoch — wake up and
-                # surface the failure instead of fencing forever
-                self._epoch_cv.wait_for(
-                    lambda: self._failed is not None
-                    or self.commit_epoch >= fence)
-                if self._failed is not None:
-                    raise RuntimeError(
-                        "commit stage failed; master state is undefined"
-                    ) from self._failed
-            block = getattr(self.store, "set_admission_block", None)
-            with self.lock:
-                # the epoch the gather ACTUALLY observes (>= fence): reading
-                # it under the master lock makes it exact, so the repair
-                # path applies only the commits this buffer truly missed —
-                # in the caught-up steady state that is the synchronous
-                # loop's single sync per step, not fence_slack extra ones
-                read_epoch = self.commit_epoch
-                if block is not None:
-                    block(self._blocked_keys())
-                try:
-                    buffer = self.store.retrieve(plan)
-                finally:
+            stage = "plan"
+            try:
+                self._hook("retrieve_start", window)
+                plan = self.store.plan_from_window(wplan)
+                stage = "fence"
+                with self._epoch_cv:
+                    # a failed commit can never bump the epoch — wake up and
+                    # surface the failure instead of fencing forever
+                    self._epoch_cv.wait_for(
+                        lambda: self._failed is not None
+                        or self.commit_epoch >= fence)
+                    if self._failed is not None:
+                        raise RuntimeError(
+                            "commit stage failed; master state is undefined"
+                        ) from self._failed
+                stage = "retrieve"
+                block = getattr(self.store, "set_admission_block", None)
+                with self.lock:
+                    # the epoch the gather ACTUALLY observes (>= fence):
+                    # reading it under the master lock makes it exact, so
+                    # the repair path applies only the commits this buffer
+                    # truly missed — in the caught-up steady state that is
+                    # the synchronous loop's single sync per step, not
+                    # fence_slack extra ones
+                    read_epoch = self.commit_epoch
                     if block is not None:
-                        block(None)
-            self._hook("retrieve_done", window)
-            return plan, buffer, read_epoch
+                        block(self._blocked_keys())
+                    try:
+                        buffer = self.store.retrieve(plan)
+                    finally:
+                        if block is not None:
+                            block(None)
+                self._hook("retrieve_done", window)
+                return plan, buffer, read_epoch
+            except BaseException as e:
+                # record for eager propagation, re-raise the ORIGINAL so
+                # the future itself still carries the untouched exception
+                with self._pk_lock:
+                    self._stage_failures.append((stage, window, e))
+                raise
 
         return self._stage_pool.submit(job)
+
+    def first_stage_failure(self) -> Optional[tuple]:
+        """Earliest failed plan/retrieve job as ``(stage, window, exc)``,
+        or None — the eager-propagation seam for AsyncPrefetcher.pop."""
+        with self._pk_lock:
+            return self._stage_failures[0] if self._stage_failures else None
 
     def _blocked_keys(self):
         """Union key list of commits submitted but not yet applied (called
@@ -410,6 +432,16 @@ class AsyncPrefetcher:
                 e.pending.append((self.executor.commits_submitted, buf_updated))
 
     def pop(self) -> PrefetchEntry:
+        failure = self.executor.first_stage_failure()
+        if failure is not None:
+            # EAGER propagation: a mid-queue plan/retrieve failure would
+            # otherwise hide behind `depth` healthy pops (its future only
+            # raises when reached) while the driver keeps committing
+            # windows that can have no successor. Label the originating
+            # stage + window and chain the original exception.
+            stage, window, exc = failure
+            raise RuntimeError(
+                f"{stage} stage failed at window {window}") from exc
         if not self._q:
             self.fill(limit=1)  # exactly one: never stage past the caller's cap
         e = self._q.popleft()

@@ -233,6 +233,7 @@ def build_store(
     prefetch_ahead: int = 1,
     kernel_backend: Optional[str] = None,
     sparse_comm: Optional[str] = None,
+    fault_inject: Optional[str] = None,
 ) -> EmbeddingStore:
     """Construct the store for a resolved tier name (see :func:`resolve_store`).
 
@@ -251,7 +252,14 @@ def build_store(
     only where a cache exists. ``prefetch_ahead`` sizes the cached tier's
     rolling lookahead horizon (the oracle policy's admission window) to
     the Prefetcher's actual in-flight depth.
+
+    ``fault_inject`` arms the chaos seam (dist/inject.py): the resolved
+    spec string builds ONE :class:`~repro.dist.inject.FaultInjector`
+    shared by every hook point of the constructed store. The device tier
+    has no host stages to fault, so it parses the spec only to reject a
+    typo'd schedule loudly.
     """
+    from ...dist.inject import FaultInjector, resolve_fault_inject
     from .cached import CachedStore
     from .comm import SparseComm, resolve_sparse_comm
     from .device import DeviceStore
@@ -261,6 +269,7 @@ def build_store(
 
     tier = resolve_store(name)
     resolve_cache_policy(cache_policy)  # validate even where it's a no-op
+    injector = FaultInjector.from_spec(resolve_fault_inject(fault_inject))
     if tier == "device":
         resolve_sparse_comm(sparse_comm)  # validate even where it's a no-op
         return DeviceStore(fns, donate=donate)
@@ -271,14 +280,15 @@ def build_store(
             cache_chunk_rows=cache_chunk_rows, cache_policy=cache_policy,
             prefetch_ahead=prefetch_ahead,
             donate=donate, kernel_backend=kernel_backend,
-            sparse_comm=sparse_comm,
+            sparse_comm=sparse_comm, injector=injector,
         )
     if tier == "host":
-        return HostStore(spec, fns, comm=SparseComm(sparse_comm))
+        return HostStore(spec, fns, comm=SparseComm(sparse_comm),
+                         injector=injector)
     return CachedStore(
         spec, fns, capacity=cache_rows, admit_threshold=cache_admit,
         chunk_rows=cache_chunk_rows, policy=cache_policy,
         horizon_windows=prefetch_ahead + 1,
         donate=donate, kernel_backend=kernel_backend,
-        comm=SparseComm(sparse_comm),
+        comm=SparseComm(sparse_comm), injector=injector,
     )

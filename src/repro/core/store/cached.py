@@ -194,12 +194,11 @@ class CachedStore(HostStore):
         self._policy.set_horizon(counts)
 
     # -- DBP stage 4a: cache-aware retrieval + admission -----------------
-
-    def retrieve(self, plan: FetchPlan) -> DualBuffer:
-        with self.stage_timers.timed("retrieve_ms"):
-            return self._retrieve_body(plan)
+    # (the public ``retrieve``/``commit`` wrappers are inherited from
+    # HostStore: timing + the chaos/retry seam around these bodies)
 
     def _retrieve_body(self, plan: FetchPlan) -> DualBuffer:
+        self.faults.fire("retrieve")
         keys = plan.host_keys
         R = self.chunk_rows
         cap = self.capacity
@@ -260,6 +259,10 @@ class CachedStore(HostStore):
         self.hits += int(hit_v.sum())
         self.misses += int(miss_v.sum())
         with self.stage_timers.timed("h2d_ms"):
+            # chaos site for the staging put; a retry replays the whole
+            # body — policy/hit counters drift but every byte staged is
+            # identical, so the recovered run stays VALUE-exact
+            self.faults.fire("h2d")
             stage_rows_d = jax.device_put(stage_rows)
             stage_accum_d = jax.device_put(stage_accum)
             if pool is not None:
@@ -344,11 +347,11 @@ class CachedStore(HostStore):
 
     # -- DBP epilogue: split commit (cache scatter + compact D2H) --------
 
-    def commit(self, buffer: DualBuffer, plan: Optional[FetchPlan] = None) -> None:
-        with self.stage_timers.timed("commit_ms"):
-            self._commit_body(buffer, plan)
-
     def _commit_body(self, buffer: DualBuffer, plan: Optional[FetchPlan] = None) -> None:
+        # both chaos sites precede the first mutation (the hot-row
+        # scatter), so a rolled-back commit replays atomically
+        self.faults.fire("commit")
+        self.faults.fire("d2h")
         keys = plan.host_keys if plan is not None \
             else np.asarray(jax.device_get(buffer.keys))
         R = self.chunk_rows

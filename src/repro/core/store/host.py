@@ -25,6 +25,8 @@ from typing import Dict, Optional
 import jax
 import numpy as np
 
+from ...dist.fault import retry_step
+from ...dist.inject import NULL_INJECTOR, FaultInjector
 from ..embedding.engine import DualBuffer
 from ..embedding.routing import SENTINEL
 from ..embedding.table import EmbeddingTableState, MegaTableSpec
@@ -51,6 +53,7 @@ class HostStore:
         dtype=np.float32,
         device_sharding=None,
         comm: Optional[SparseComm] = None,
+        injector: Optional[FaultInjector] = None,
     ):
         self.spec = spec
         self._route = jax.jit(fns.route_window) if fns is not None else None
@@ -73,6 +76,16 @@ class HostStore:
         self.d2h_bytes = 0
         self.owns_master = False
         self.stage_timers = StageTimers()
+        # chaos seam + recovery budget (dist/inject.py): every stage call
+        # fires its site at entry, and the public stage methods replay the
+        # body through retry_step — transient faults become retried work,
+        # not poison. Fire-at-entry is what keeps retries bit-exact: no
+        # master/cache state has mutated yet when the fault lands.
+        self.faults = injector if injector is not None else NULL_INJECTOR
+        self.retry_budget = 3
+        self.retry_backoff_s = 0.05
+        self.stage_retries = 0
+        self.commit_rollbacks = 0
         # Reusable staging arrays — None (fresh allocations, the safe
         # default) until the async stage executor enables pooling; see
         # StagePool for why only the executor may.
@@ -168,12 +181,39 @@ class HostStore:
         carried through the sparse-comm wire codec (pack: bit-packed delta
         round-trip; off: counted raw — see core/store/comm.py)."""
         with self.stage_timers.timed("plan_ms"):
-            host_keys = np.asarray(jax.device_get(window.buffer_keys))
-            host_keys = self.comm.exchange_keys(host_keys)
+            return self._recover("plan", self._plan_body, window)
+
+    def _plan_body(self, window) -> FetchPlan:
+        self.faults.fire("plan")
+        host_keys = np.asarray(jax.device_get(window.buffer_keys))
+        host_keys = self.comm.exchange_keys(host_keys)
         return FetchPlan(window, host_keys)
 
     def plan(self, keys) -> FetchPlan:
         return self.plan_from_window(self.route(keys))
+
+    # -- transient-fault recovery ----------------------------------------
+
+    def _recover(self, stage: str, fn, *args):
+        """Replay a stage body through ``retry_step`` (capped exponential
+        backoff + jitter, dist/fault.py) and count the recoveries.
+
+        One recovery seam serves BOTH pipelines: the synchronous
+        ``Prefetcher`` and the async ``StageExecutor`` call the same
+        public stage methods, so wrapping the bodies here (instead of in
+        either caller) keeps the retry discipline identical. Safe to
+        replay because every body either fails at entry (the injector's
+        fire-at-entry discipline — nothing mutated yet) or before its
+        first master mutation; the backoff base is small so a commit
+        retry never parks the executor's master lock for long.
+        """
+        def _note(attempt, exc):
+            if stage == "commit":
+                self.commit_rollbacks += 1
+            else:
+                self.stage_retries += 1
+        return retry_step(fn, *args, retries=self.retry_budget,
+                          backoff_s=self.retry_backoff_s, on_retry=_note)
 
     # -- DBP stage 4a: host-side gather + async H2D ----------------------
 
@@ -242,6 +282,10 @@ class HostStore:
         put = (lambda x: jax.device_put(x, self.device_sharding)) \
             if self.device_sharding is not None else jax.device_put
         with self.stage_timers.timed("h2d_ms"):
+            # chaos site for the staging put itself; a retry replays the
+            # whole (idempotent) gather+stage body, so the recovered
+            # buffer is byte-identical — only traffic counters drift
+            self.faults.fire("h2d")
             buf = DualBuffer(keys=put(buffer_keys.astype(np.int32)),
                              rows=put(stage_rows), accum=put(stage_accum))
             if pool is not None:
@@ -259,32 +303,48 @@ class HostStore:
         # donated array — alive today only via pjit's passthrough
         # forwarding, i.e. a landmine.
         with self.stage_timers.timed("retrieve_ms"):
-            return self.stage(plan.host_keys)
+            return self._recover("retrieve", self._retrieve_body, plan)
+
+    def _retrieve_body(self, plan: FetchPlan) -> DualBuffer:
+        self.faults.fire("retrieve")
+        return self.stage(plan.host_keys)
 
     # -- DBP epilogue: D2H + host scatter --------------------------------
 
     def commit(self, buffer: DualBuffer, plan: Optional[FetchPlan] = None) -> None:
         with self.stage_timers.timed("commit_ms"):
-            keys = plan.host_keys if plan is not None \
-                else np.asarray(jax.device_get(buffer.keys))
-            rows = np.asarray(jax.device_get(buffer.rows))
-            accum = np.asarray(jax.device_get(buffer.accum))
-            if self.comm.lossy:
-                # int8: selective sync of quantized write-back deltas with
-                # error feedback (comm.writeback mutates the master)
-                valid = keys != _SENTINEL
-                self.d2h_bytes += self.comm.writeback(
-                    keys[valid], rows[valid], accum[valid],
-                    self.rows, self.accum)
-            else:
-                self.d2h_bytes += rows.nbytes + accum.nbytes
-                self.scatter_host(keys, rows, accum)
+            self._recover("commit", self._commit_body, buffer, plan)
+
+    def _commit_body(self, buffer: DualBuffer,
+                     plan: Optional[FetchPlan]) -> None:
+        # both chaos sites land BEFORE the first master mutation, so a
+        # rolled-back commit replays atomically: the master either has the
+        # whole window applied or none of it, never a partial scatter
+        self.faults.fire("commit")
+        keys = plan.host_keys if plan is not None \
+            else np.asarray(jax.device_get(buffer.keys))
+        self.faults.fire("d2h")
+        rows = np.asarray(jax.device_get(buffer.rows))
+        accum = np.asarray(jax.device_get(buffer.accum))
+        if self.comm.lossy:
+            # int8: selective sync of quantized write-back deltas with
+            # error feedback (comm.writeback mutates the master)
+            valid = keys != _SENTINEL
+            self.d2h_bytes += self.comm.writeback(
+                keys[valid], rows[valid], accum[valid],
+                self.rows, self.accum)
+        else:
+            self.d2h_bytes += rows.nbytes + accum.nbytes
+            self.scatter_host(keys, rows, accum)
 
     # -- metrics / introspection -----------------------------------------
 
     def metrics(self) -> Dict[str, float]:
         return {"h2d_bytes": float(self.h2d_bytes),
                 "d2h_bytes": float(self.d2h_bytes),
+                "stage_retries": float(self.stage_retries),
+                "commit_rollbacks": float(self.commit_rollbacks),
+                **self.faults.counters(),
                 **self.comm.counters(),
                 **self.stage_timers.as_dict()}
 

@@ -57,6 +57,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
+from ...dist.fault import retry_step
+from ...dist.inject import NULL_INJECTOR, FaultInjector
 from ..embedding.engine import DualBuffer, buffer_pspecs
 from ..embedding.routing import owner_of
 from ..embedding.table import EmbeddingTableState, MegaTableSpec, table_pspecs
@@ -103,6 +105,7 @@ class ShardedStore:
         donate: bool = True,
         kernel_backend: Optional[str] = None,
         sparse_comm: Optional[str] = None,
+        injector: Optional[FaultInjector] = None,
     ):
         if mesh is None:
             raise ValueError("ShardedStore needs a mesh; use HostStore/"
@@ -175,6 +178,30 @@ class ShardedStore:
         self.d2h_bytes = 0
         self.commits_applied = [0] * num_shards
         self.stage_timers = StageTimers()
+        # chaos seam: the COORDINATOR owns the injector and fires sites at
+        # the global stage entries; sub-stores keep their NULL injectors so
+        # one scheduled "retrieve:step=N" means the Nth window, not the
+        # Nth of S per-shard sub-calls (and never double-fires)
+        self.faults = injector if injector is not None else NULL_INJECTOR
+        self.retry_budget = 3
+        self.retry_backoff_s = 0.05
+        self.stage_retries = 0
+        self.commit_rollbacks = 0
+
+    def _recover(self, stage: str, fn, *args):
+        """Replay a stage body through ``retry_step``, counting recoveries
+        — same seam as :meth:`HostStore._recover`. Replays are value-exact:
+        per-shard gathers are pure reads, and commit scatters are
+        idempotent (same rows to the same local ids), so a mid-loop
+        failure replaying already-applied shards cannot corrupt a master
+        (only ``commits_applied`` ledger counts drift)."""
+        def _note(attempt, exc):
+            if stage == "commit":
+                self.commit_rollbacks += 1
+            else:
+                self.stage_retries += 1
+        return retry_step(fn, *args, retries=self.retry_budget,
+                          backoff_s=self.retry_backoff_s, on_retry=_note)
 
     # -- owner partition --------------------------------------------------
 
@@ -225,9 +252,13 @@ class ShardedStore:
         concatenation is not — the pack codec runs per owner, exactly as
         the real exchange would ship per-host messages)."""
         with self.stage_timers.timed("plan_ms"):
-            host_keys = np.asarray(jax.device_get(window.buffer_keys))
-            host_keys = self.comm.exchange_keys(host_keys,
-                                                num_slices=self.num_shards)
+            return self._recover("plan", self._plan_body, window)
+
+    def _plan_body(self, window) -> FetchPlan:
+        self.faults.fire("plan")
+        host_keys = np.asarray(jax.device_get(window.buffer_keys))
+        host_keys = self.comm.exchange_keys(host_keys,
+                                            num_slices=self.num_shards)
         return FetchPlan(window, host_keys)
 
     def plan(self, keys) -> FetchPlan:
@@ -237,9 +268,10 @@ class ShardedStore:
 
     def retrieve(self, plan: FetchPlan) -> DualBuffer:
         with self.stage_timers.timed("retrieve_ms"):
-            return self._retrieve_body(plan)
+            return self._recover("retrieve", self._retrieve_body, plan)
 
     def _retrieve_body(self, plan: FetchPlan) -> DualBuffer:
+        self.faults.fire("retrieve")
         locals_ = self._local_slices(plan.host_keys)
         rows_parts, accum_parts = [], []
         for s, lk in enumerate(locals_):
@@ -264,6 +296,7 @@ class ShardedStore:
             # counted — and transformed — their own miss staging
             self.h2d_bytes += self.comm.stage_payload(rows, accum)
         with self.stage_timers.timed("h2d_ms"):
+            self.faults.fire("h2d")
             # ONE sharded put per leaf: shard s's slice lands on shard s's
             # devices — the per-host H2D. Buffer owns its keys array (the
             # same donation contract as HostStore.retrieve).
@@ -278,33 +311,39 @@ class ShardedStore:
 
     def commit(self, buffer: DualBuffer, plan: Optional[FetchPlan] = None) -> None:
         with self.stage_timers.timed("commit_ms"):
-            keys = plan.host_keys if plan is not None \
-                else np.asarray(jax.device_get(buffer.keys))
-            rows = np.asarray(jax.device_get(buffer.rows))
-            accum = np.asarray(jax.device_get(buffer.accum))
-            if self.local_tier == "host" and not self.comm.lossy:
-                self.d2h_bytes += rows.nbytes + accum.nbytes
-            k = keys.shape[0] // self.num_shards
-            for s, lk in enumerate(self._local_slices(keys)):
-                sub = self.shards[s]
-                rows_s = rows[s * k:(s + 1) * k]
-                accum_s = accum[s * k:(s + 1) * k]
-                if self.local_tier == "host":
-                    if sub.comm.lossy:
-                        # int8: each shard's selective sync runs in its own
-                        # local id space (its comm's residual/freq state)
-                        lv = lk != _SENTINEL
-                        sub.d2h_bytes += sub.comm.writeback(
-                            lk[lv], rows_s[lv], accum_s[lv],
-                            sub.rows, sub.accum)
-                    else:
-                        sub.scatter_host(lk, rows_s, accum_s)
+            self._recover("commit", self._commit_body, buffer, plan)
+
+    def _commit_body(self, buffer: DualBuffer,
+                     plan: Optional[FetchPlan]) -> None:
+        self.faults.fire("commit")
+        keys = plan.host_keys if plan is not None \
+            else np.asarray(jax.device_get(buffer.keys))
+        self.faults.fire("d2h")
+        rows = np.asarray(jax.device_get(buffer.rows))
+        accum = np.asarray(jax.device_get(buffer.accum))
+        if self.local_tier == "host" and not self.comm.lossy:
+            self.d2h_bytes += rows.nbytes + accum.nbytes
+        k = keys.shape[0] // self.num_shards
+        for s, lk in enumerate(self._local_slices(keys)):
+            sub = self.shards[s]
+            rows_s = rows[s * k:(s + 1) * k]
+            accum_s = accum[s * k:(s + 1) * k]
+            if self.local_tier == "host":
+                if sub.comm.lossy:
+                    # int8: each shard's selective sync runs in its own
+                    # local id space (its comm's residual/freq state)
+                    lv = lk != _SENTINEL
+                    sub.d2h_bytes += sub.comm.writeback(
+                        lk[lv], rows_s[lv], accum_s[lv],
+                        sub.rows, sub.accum)
                 else:
-                    # hot rows scatter into the slice's device cache, only
-                    # cold rows reach its DRAM (its d2h counter follows)
-                    sub.commit(DualBuffer(lk, rows_s, accum_s),
-                               FetchPlan(None, lk))
-                self.commits_applied[s] += 1
+                    sub.scatter_host(lk, rows_s, accum_s)
+            else:
+                # hot rows scatter into the slice's device cache, only
+                # cold rows reach its DRAM (its d2h counter follows)
+                sub.commit(DualBuffer(lk, rows_s, accum_s),
+                           FetchPlan(None, lk))
+            self.commits_applied[s] += 1
 
     def set_admission_block(self, keys: Optional[np.ndarray]) -> None:
         """Split the executor's global pending-commit key list per owner
@@ -384,6 +423,13 @@ class ShardedStore:
                                + sum(s.d2h_bytes for s in self.shards)),
             "shards": float(self.num_shards),
             "commits": float(sum(self.commits_applied)),
+            "stage_retries": float(self.stage_retries
+                                   + sum(s.stage_retries
+                                         for s in self.shards)),
+            "commit_rollbacks": float(self.commit_rollbacks
+                                      + sum(s.commit_rollbacks
+                                            for s in self.shards)),
+            **self.faults.counters(),
             **self.stage_timers.as_dict(),
         }
         # comm ledger: coordinator (owner exchange) + every shard's slice

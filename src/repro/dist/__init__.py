@@ -1,7 +1,13 @@
 """Distribution substrate: atomic checkpointing, fault handling
-(preemption / straggler / transient-failure policies), and compressed
-collectives. Owned by ``repro.api.Session``; importable standalone."""
-from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+(preemption / straggler / transient-failure policies), deterministic
+fault injection (the chaos-test seam), and compressed collectives.
+Owned by ``repro.api.Session``; importable standalone."""
+from .checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    restore_latest_verifiable,
+    save_checkpoint,
+)
 from .compressed import (
     PackedKeys,
     dequantize_rows_np,
@@ -11,11 +17,19 @@ from .compressed import (
     ring_allreduce_quant_tree,
     unpack_sorted_keys,
 )
-from .fault import PreemptionGuard, StepWatchdog, retry_step
+from .fault import PreemptionGuard, RetryExhausted, StepWatchdog, retry_step
+from .inject import (
+    NULL_INJECTOR,
+    FaultInjector,
+    InjectedFault,
+    parse_fault_spec,
+    resolve_fault_inject,
+)
 
 __all__ = [
     "latest_step",
     "restore_checkpoint",
+    "restore_latest_verifiable",
     "save_checkpoint",
     "PackedKeys",
     "pack_sorted_keys",
@@ -25,6 +39,12 @@ __all__ = [
     "ring_allreduce_quant",
     "ring_allreduce_quant_tree",
     "PreemptionGuard",
+    "RetryExhausted",
     "StepWatchdog",
     "retry_step",
+    "FaultInjector",
+    "InjectedFault",
+    "NULL_INJECTOR",
+    "parse_fault_spec",
+    "resolve_fault_inject",
 ]

@@ -12,6 +12,14 @@ Restore is template-driven: the caller passes a state pytree of the expected
 structure; leaf paths, shapes and dtypes are validated against the manifest
 (``ValueError`` on any mismatch) so a config drift can never silently load a
 mis-shaped table.
+
+Integrity: the manifest carries a CRC32 per leaf; restore verifies payload
+bytes against it (``ValueError`` on mismatch), so a torn leaf write (fsync
+lost on power cut) or bit rot is DETECTED rather than silently trained on.
+``restore_latest_verifiable`` walks steps newest-first and returns the
+first checkpoint that restores clean — the recovery entry point when the
+newest checkpoint may be damaged. Manifests without checksums (pre-ISSUE-9)
+still restore; verification is skipped for those leaves.
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import os
 import re
 import shutil
 import tempfile
+import zlib
 from typing import Any, List, Optional, Tuple
 
 import jax
@@ -44,11 +53,28 @@ def _step_dir(ckpt_dir: str, step: int) -> str:
     return os.path.join(ckpt_dir, f"step_{int(step):08d}")
 
 
+def _crc32_file(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(chunk, crc)
+    return crc
+
+
 def save_checkpoint(ckpt_dir: str, state: PyTree, step: int,
-                    store: Any = None) -> str:
+                    store: Any = None, injector: Any = None) -> str:
     """Write ``state`` at ``step`` atomically; returns the checkpoint path.
 
     An existing checkpoint for the same step is replaced.
+
+    ``injector`` (a :class:`~repro.dist.inject.FaultInjector`) arms the
+    chaos harness's checkpoint-corruption sites: after the atomic replace,
+    ``ckpt_torn`` truncates one leaf payload (a leaf whose data never hit
+    disk despite the manifest landing — the failure the per-leaf fsync we
+    deliberately skip would otherwise leave possible) and ``ckpt_corrupt``
+    flips bytes mid-leaf (storage rot). Both leave a checkpoint that LOOKS
+    complete; only the CRC pass can tell — which is what the fallback
+    tests prove.
 
     Storage tiers: while a run is in flight the master embedding table
     lives in an :class:`~repro.core.store.EmbeddingStore` and the state
@@ -90,12 +116,14 @@ def save_checkpoint(ckpt_dir: str, state: PyTree, step: int,
         for i, (path, leaf) in enumerate(leaves):
             arr = np.asarray(leaf)
             fname = f"leaf_{i:05d}.npy"
-            np.save(os.path.join(tmp, fname), arr)
+            fpath = os.path.join(tmp, fname)
+            np.save(fpath, arr)
             index.append({
                 "path": path,
                 "file": fname,
                 "shape": list(arr.shape),
                 "dtype": str(arr.dtype),
+                "crc32": _crc32_file(fpath),
             })
         manifest = {"step": int(step), "leaves": index}
         # manifest last: its presence marks the payload as complete
@@ -109,7 +137,28 @@ def save_checkpoint(ckpt_dir: str, state: PyTree, step: int,
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
+    if injector is not None:
+        _maybe_corrupt(final, index, injector)
     return final
+
+
+def _maybe_corrupt(final: str, index: List[dict], injector: Any) -> None:
+    """Chaos-harness corruption of a just-written checkpoint (see
+    :func:`save_checkpoint`). Targets the largest leaf so the damage is
+    real payload, not a scalar's .npy header."""
+    victim = max(index, key=lambda e: os.path.getsize(
+        os.path.join(final, e["file"])))
+    path = os.path.join(final, victim["file"])
+    if injector.should("ckpt_torn"):
+        with open(path, "r+b") as f:
+            f.truncate(os.path.getsize(path) // 2)
+    if injector.should("ckpt_corrupt"):
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.seek(size // 2)
+            raw = f.read(8)
+            f.seek(size // 2)
+            f.write(bytes(b ^ 0xFF for b in raw))
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
@@ -165,6 +214,42 @@ def restore_checkpoint(ckpt_dir: str, state: PyTree,
             raise ValueError(
                 f"{path}: checkpoint dtype {entry['dtype']} != template "
                 f"dtype {want_dtype}")
-        arr = np.load(os.path.join(d, entry["file"]))
+        fpath = os.path.join(d, entry["file"])
+        if "crc32" in entry:  # pre-ISSUE-9 manifests carry no checksums
+            got = _crc32_file(fpath)
+            if got != entry["crc32"]:
+                raise ValueError(
+                    f"{path}: checkpoint leaf {entry['file']} failed CRC32 "
+                    f"(manifest {entry['crc32']}, payload {got}) — torn "
+                    "write or bit rot; try restore_latest_verifiable")
+        arr = np.load(fpath)
         out.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_latest_verifiable(ckpt_dir: str, state: PyTree
+                              ) -> Tuple[PyTree, int]:
+    """Restore the NEWEST checkpoint that passes full verification
+    (manifest structure + per-leaf CRC32), walking steps descending past
+    any damaged ones; returns ``(state, step)``.
+
+    Raises ``FileNotFoundError`` when no checkpoint under ``ckpt_dir``
+    restores clean. This is the recovery entry point: a preempted run's
+    newest save may be torn, and falling back one step is always safe —
+    the trajectory is deterministic, so resuming earlier replays the same
+    steps.
+    """
+    if not os.path.isdir(ckpt_dir):
+        raise FileNotFoundError(f"no checkpoint directory {ckpt_dir}")
+    steps = sorted((int(m.group(1)) for m in
+                    (_STEP_RE.match(n) for n in os.listdir(ckpt_dir)) if m),
+                   reverse=True)
+    errors = []
+    for step in steps:
+        try:
+            return restore_checkpoint(ckpt_dir, state, step), step
+        except (ValueError, OSError, KeyError, json.JSONDecodeError) as e:
+            errors.append(f"step {step}: {e}")
+    raise FileNotFoundError(
+        f"no verifiable checkpoint under {ckpt_dir}"
+        + ("; tried: " + "; ".join(errors) if errors else ""))

@@ -6,10 +6,13 @@
 - ``StepWatchdog``: EMA-based straggler detector over per-step wall times
   (paper §VI operates at 1,500+ accelerators where slow hosts are routine).
 - ``retry_step``: bounded-retry wrapper for transient host-side failures
-  (input pipeline hiccups, flaky interconnect RPCs).
+  (input pipeline hiccups, flaky interconnect RPCs). Exponential backoff
+  with multiplicative jitter — linear ``backoff_s * attempt`` synchronized
+  retry storms across stage workers that all saw the same hiccup.
 """
 from __future__ import annotations
 
+import random
 import signal
 import time
 from dataclasses import dataclass, field
@@ -23,20 +26,30 @@ class PreemptionGuard:
     By default hooks SIGTERM (the usual cluster preemption notice). Pass
     ``signals=()`` to disable signal installation (e.g. in tests or when the
     host framework owns signal handling) and drive it via ``trigger()``.
+
+    The handler CHAINS to the previously-installed handler: a host
+    framework (launcher, logger, profiler) that also registered for the
+    signal still sees it — the guard observes preemption, it does not own
+    the signal.
     """
 
     def __init__(self, signals: Tuple[int, ...] = (signal.SIGTERM,)):
         self._flag = False
         self._installed: List[Tuple[int, Any]] = []
+        self._prev: dict = {}
         for sig in signals:
             try:
                 prev = signal.signal(sig, self._handler)
             except (ValueError, OSError):  # non-main thread / exotic platform
                 continue
             self._installed.append((sig, prev))
+            self._prev[sig] = prev
 
     def _handler(self, signum, frame):
         self._flag = True
+        prev = self._prev.get(signum)
+        if callable(prev):  # chain; SIG_DFL/SIG_IGN/None have no callable
+            prev(signum, frame)
 
     def trigger(self) -> None:
         """Manually latch the flag (tests; cooperative preemption APIs)."""
@@ -51,6 +64,7 @@ class PreemptionGuard:
         self._flag = False
         while self._installed:
             sig, prev = self._installed.pop()
+            self._prev.pop(sig, None)
             try:
                 signal.signal(sig, prev)
             except (ValueError, OSError):
@@ -94,17 +108,43 @@ class StepWatchdog:
         return False
 
 
+class RetryExhausted(RuntimeError):
+    """Raised (chained from the last failure) when ``retry_step`` gives up.
+
+    A distinct type so callers can tell "transient fault retried past its
+    budget" from the underlying failure class — and a ``RuntimeError``
+    subclass so existing ``except RuntimeError`` handling still catches it.
+    """
+
+
 def retry_step(fn: Callable, *args, retries: int = 3, backoff_s: float = 0.5,
-               retry_on: Tuple[type, ...] = (RuntimeError, OSError), **kwargs):
+               max_backoff_s: float = 30.0,
+               retry_on: Tuple[type, ...] = (RuntimeError, OSError),
+               on_retry: Optional[Callable[[int, BaseException], None]] = None,
+               **kwargs):
     """Call ``fn(*args, **kwargs)``, retrying transient failures up to
-    ``retries`` times with linear backoff; re-raises on exhaustion."""
+    ``retries`` times with capped exponential backoff + jitter.
+
+    Attempt ``k`` (1-based) sleeps ``backoff_s * 2**(k-1)`` scaled by a
+    uniform jitter in [0.5, 1.5), capped at ``max_backoff_s`` — the jitter
+    decorrelates stage workers that all tripped on the same hiccup (a
+    linear schedule re-synchronizes the retry storm). ``on_retry(attempt,
+    exc)`` fires before each sleep (recovery counters). Exhaustion raises
+    :class:`RetryExhausted` chained from the final failure, with the
+    attempt count in the message.
+    """
     attempt = 0
     while True:
         try:
             return fn(*args, **kwargs)
-        except retry_on:
+        except retry_on as e:
             attempt += 1
             if attempt > retries:
-                raise
+                raise RetryExhausted(
+                    f"{getattr(fn, '__name__', fn)!s} failed after "
+                    f"{attempt} attempts: {e}") from e
+            if on_retry is not None:
+                on_retry(attempt, e)
             if backoff_s:
-                time.sleep(backoff_s * attempt)
+                delay = min(backoff_s * 2 ** (attempt - 1), max_backoff_s)
+                time.sleep(delay * (0.5 + random.random()))

@@ -1,0 +1,584 @@
+"""Chaos-tested fault tolerance (ISSUE 9): deterministic fault injection,
+epoch-rollback stage recovery, and preemption-safe checkpoint/resume.
+
+The recovery guarantee under test is BIT-EXACTNESS, not survival: a run
+with faults injected at every hook point (plan, retrieve, commit, H2D,
+checkpoint write) must replay the fault-free run's losses AND exported
+master table exactly, across storage tiers and with the async stage
+executor on — because every fault fires before the first master/cache
+mutation of its stage, a bounded retry replays the stage atomically.
+"""
+import itertools
+import os
+import signal
+import sys
+import time
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from test_consistency import batch_iter, init_state, make_setup
+from test_hierarchical import BATCH, N_MICRO, STEPS, make_driver_with_store, run_store
+
+from repro.core.dbp import DBPDriver
+from repro.core.embedding.table import EmbeddingTableState
+from repro.core.store import FetchPlan, HostStore
+from repro.core.store.async_exec import AsyncPrefetcher, StageExecutor
+from repro.dist import (
+    FaultInjector,
+    InjectedFault,
+    NULL_INJECTOR,
+    PreemptionGuard,
+    RetryExhausted,
+    parse_fault_spec,
+    resolve_fault_inject,
+    restore_checkpoint,
+    restore_latest_verifiable,
+    retry_step,
+    save_checkpoint,
+)
+from repro.train.state import TrainState
+
+# One combined schedule covering every store-stage hook point; step=N is a
+# per-SITE call counter, so the sites fire independently (each exactly
+# once — count defaults to 1).
+CHAOS = "plan:step=1;retrieve:step=2;commit:step=3;h2d:step=1"
+N_CHAOS_SITES = 4
+
+
+# ---------------------------------------------------------------------------
+# spec grammar + injector mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_parse_fault_spec():
+    got = parse_fault_spec("retrieve:step=7;commit:step=12,count=2;"
+                           "h2d:p=0.05,seed=3")
+    assert got == {"retrieve": {"step": 7.0},
+                   "commit": {"step": 12.0, "count": 2.0},
+                   "h2d": {"p": 0.05, "seed": 3.0}}
+
+
+@pytest.mark.parametrize("bad", [
+    "retrieve",                      # no schedule
+    "retrieve:",                     # empty body
+    "retrieve:when=7",               # unknown key
+    "retrieve:step=x",               # non-numeric
+    "retrieve:step=1,p=0.5",         # step and p are exclusive
+    "retrieve:count=2",              # neither step nor p
+    "retrieve:p=1.5",                # p out of range
+    "retrieve:step=1,count=0",       # count < 1
+    "retrieve:step=1;retrieve:step=2",  # duplicate site
+])
+def test_parse_fault_spec_rejects(bad):
+    with pytest.raises(ValueError, match="fault spec"):
+        parse_fault_spec(bad)
+
+
+def test_step_schedule_fires_exact_calls():
+    inj = FaultInjector.from_spec("commit:step=2,count=2")
+    fired = []
+    for call in range(6):
+        try:
+            inj.fire("commit")
+            fired.append(False)
+        except InjectedFault:
+            fired.append(True)
+    assert fired == [False, False, True, True, False, False]
+    assert inj.counters() == {"faults_injected": 2.0}
+    inj.fire("retrieve")  # unscheduled site: never fires
+    assert inj.counters() == {"faults_injected": 2.0}
+
+
+def test_probabilistic_schedule_is_seeded():
+    a = FaultInjector.from_spec("h2d:p=0.3,seed=7")
+    b = FaultInjector.from_spec("h2d:p=0.3,seed=7")
+    da = [a.should("h2d") for _ in range(64)]
+    db = [b.should("h2d") for _ in range(64)]
+    assert da == db and any(da) and not all(da)
+
+
+def test_null_injector_and_resolution(monkeypatch):
+    assert NULL_INJECTOR.active is False
+    assert NULL_INJECTOR.counters() == {}
+    NULL_INJECTOR.fire("retrieve")  # no-op, never raises
+    assert FaultInjector.from_spec(None) is NULL_INJECTOR
+    assert FaultInjector.from_spec("") is NULL_INJECTOR
+
+    monkeypatch.delenv("REPRO_FAULT_INJECT", raising=False)
+    assert resolve_fault_inject(None) is None
+    assert resolve_fault_inject("auto") is None
+    assert resolve_fault_inject("commit:step=1") == "commit:step=1"
+    monkeypatch.setenv("REPRO_FAULT_INJECT", "h2d:step=0")
+    assert resolve_fault_inject("auto") == "h2d:step=0"  # env fills auto
+    assert resolve_fault_inject("off") is None  # explicit off beats env
+    assert resolve_fault_inject("") is None
+    with pytest.raises(ValueError, match="fault spec"):
+        FaultInjector.from_spec("retrieve:wat=1")
+
+
+# ---------------------------------------------------------------------------
+# satellite (a): retry_step — exponential backoff + jitter + chained raise
+# ---------------------------------------------------------------------------
+
+
+def test_retry_backoff_is_exponential_with_jitter(monkeypatch):
+    import repro.dist.fault as fault_mod
+
+    sleeps = []
+    monkeypatch.setattr(fault_mod.time, "sleep", sleeps.append)
+    monkeypatch.setattr(fault_mod.random, "random", lambda: 0.5)  # jitter=1.0
+
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 5:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retry_step(flaky, retries=4, backoff_s=0.5, max_backoff_s=3.0) \
+        == "ok"
+    # 0.5 * 2**(k-1), capped at 3.0 — exponential, not linear
+    assert sleeps == [0.5, 1.0, 2.0, 3.0]
+
+
+def test_retry_jitter_decorrelates(monkeypatch):
+    import repro.dist.fault as fault_mod
+
+    sleeps = []
+    monkeypatch.setattr(fault_mod.time, "sleep", sleeps.append)
+
+    def always():
+        raise RuntimeError("hard")
+
+    with pytest.raises(RetryExhausted):
+        retry_step(always, retries=3, backoff_s=1.0)
+    base = [1.0, 2.0, 4.0]
+    for got, b in zip(sleeps, base):
+        assert 0.5 * b <= got < 1.5 * b  # uniform multiplicative jitter
+
+
+def test_retry_exhaustion_chains_with_attempt_count():
+    def always():
+        raise OSError("disk on fire")
+
+    with pytest.raises(RetryExhausted, match="failed after 3 attempts") as ei:
+        retry_step(always, retries=2, backoff_s=0.0)
+    assert isinstance(ei.value.__cause__, OSError)
+    assert isinstance(ei.value, RuntimeError)  # old except-clauses still work
+    with pytest.raises(ValueError):  # non-transient types pass straight out
+        retry_step(lambda: (_ for _ in ()).throw(ValueError("logic bug")),
+                   retries=3, backoff_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# satellite (b): PreemptionGuard — handler chaining + test-path trigger
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_guard_chains_previous_handler():
+    seen = []
+    prev = signal.signal(signal.SIGUSR1, lambda s, f: seen.append(s))
+    try:
+        g = PreemptionGuard(signals=(signal.SIGUSR1,))
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert g.should_checkpoint
+        assert seen == [signal.SIGUSR1], "previous handler must still fire"
+        g.restore()
+        assert not g.should_checkpoint
+        # restore() reinstalled the chained-to handler
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert seen == [signal.SIGUSR1] * 2
+        assert not g.should_checkpoint
+    finally:
+        signal.signal(signal.SIGUSR1, prev)
+
+
+def test_preemption_guard_trigger_path():
+    g = PreemptionGuard(signals=())  # no handlers installed (test path)
+    assert not g.should_checkpoint
+    g.trigger()
+    assert g.should_checkpoint
+    g.restore()
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: chaos matrix — a fault at EVERY stage hook point recovers
+# to the fault-free trajectory bit for bit, tier x async
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def faultfree():
+    state, stats, _ = run_store("host")
+    return state, stats
+
+
+def _assert_chaos_recovered(state, stats, ref_state, ref_stats):
+    np.testing.assert_array_equal(stats.losses, ref_stats.losses)
+    np.testing.assert_array_equal(np.asarray(state.table.rows),
+                                  np.asarray(ref_state.table.rows))
+    np.testing.assert_array_equal(np.asarray(state.table.accum),
+                                  np.asarray(ref_state.table.accum))
+    s = stats.summary()
+    assert s["faults_injected"] == N_CHAOS_SITES
+    assert s["stage_retries"] >= 3  # plan + retrieve + h2d (inside retrieve)
+    assert s["commit_rollbacks"] >= 1
+
+
+@pytest.mark.parametrize("tier", ["host", "cached"])
+@pytest.mark.parametrize("async_on", [False, True])
+def test_chaos_matrix_single_process(tier, async_on, faultfree):
+    ref_state, ref_stats = faultfree
+    driver_kw = {"async_stages": True} if async_on else {}
+    state, stats, _ = run_store(
+        tier, injector=FaultInjector.from_spec(CHAOS), driver_kw=driver_kw)
+    _assert_chaos_recovered(state, stats, ref_state, ref_stats)
+
+
+@pytest.fixture(scope="module")
+def mesh_case():
+    from test_sharded_store import MeshCase
+
+    case = MeshCase()
+    ref_state, ref_stats, _ = case.run("device")
+    return case, ref_state, ref_stats
+
+
+@pytest.mark.parametrize("tier", ["host", "cached"])
+@pytest.mark.parametrize("async_on", [False, True])
+def test_chaos_matrix_sharded(tier, async_on, mesh_case):
+    """S=1 mesh: the coordinator owns the injector (one schedule counts
+    windows, not per-shard sub-calls) and recovery stays bit-exact."""
+    case, ref_state, ref_stats = mesh_case
+    state, stats, store = case.run(tier, fault_inject=CHAOS,
+                                   async_on=async_on)
+    _assert_chaos_recovered(state, stats, ref_state, ref_stats)
+    # the sub-stores kept their NULL injectors: no double-fire
+    assert all(s.faults is NULL_INJECTOR for s in store.shards)
+
+
+def test_exhausted_retries_stay_fatal():
+    """NOT survivable by design: a fault that outlives the retry budget
+    surfaces as RetryExhausted instead of silently corrupting the run."""
+    driver, state, store, _ = make_driver_with_store(
+        "host", injector=FaultInjector.from_spec("retrieve:step=0,count=64"))
+    store.retry_backoff_s = 0.0
+    with pytest.raises(RetryExhausted, match="failed after 4 attempts"):
+        driver.run(state, STEPS)
+
+
+# ---------------------------------------------------------------------------
+# satellite (c): executor failure propagation — eager, labeled, no deadlock
+# ---------------------------------------------------------------------------
+
+
+class _FlakyStore:
+    """Minimal EmbeddingStore shim: window 1's retrieve has exhausted its
+    retries; everything else (including commits) is healthy."""
+
+    tier = "host"
+    owns_master = True
+
+    def __init__(self):
+        self.retrieves = 0
+        self.commits = 0
+
+    def route(self, keys):
+        return keys
+
+    def plan_from_window(self, window):
+        return FetchPlan(window, None)
+
+    def retrieve(self, plan):
+        n = self.retrieves
+        self.retrieves += 1
+        if n == 1:
+            raise RetryExhausted("_retrieve_body failed after 4 attempts")
+        return SimpleNamespace(rows=jnp.zeros((1, 2)), accum=jnp.zeros((1,)))
+
+    def commit(self, buffer, plan):
+        self.commits += 1
+
+
+def test_midqueue_retrieve_failure_propagates_eagerly():
+    """A failed retrieve deep in the lookahead queue must surface at the
+    NEXT pop (of a healthy earlier window), labeled with the originating
+    stage + window and chaining the original exception — not several
+    windows later when its own future is reached. The commit thread keeps
+    applying commits afterwards (no deadlock)."""
+    store = _FlakyStore()
+    ex = StageExecutor(store, workers=1)
+    try:
+        pf = AsyncPrefetcher(lambda: {"keys": np.zeros(4, np.int32)},
+                             store, ex, depth=3)
+        pf.fill()  # submits windows 0..2; window 1 dies on the stage thread
+        deadline = time.monotonic() + 30
+        while ex.first_stage_failure() is None:
+            assert time.monotonic() < deadline, "failure never recorded"
+            time.sleep(0.005)
+        stage, window, exc = ex.first_stage_failure()
+        assert (stage, window) == ("retrieve", 1)
+        with pytest.raises(RuntimeError,
+                           match="retrieve stage failed at window 1") as ei:
+            pf.pop()  # pops window 0 — healthy, but the failure is eager
+        assert ei.value.__cause__ is exc
+        assert isinstance(exc, RetryExhausted)
+        # the commit thread is not wedged: a commit still applies and drains
+        buf = SimpleNamespace(rows=jnp.zeros((1, 2)), accum=jnp.zeros((1,)))
+        ex.submit_commit(buf, FetchPlan(None, None))
+        ex.drain()
+        assert store.commits == 1 and ex.commit_epoch == 1
+    finally:
+        ex.shutdown()
+
+
+def test_driver_surfaces_stage_failure(monkeypatch):
+    """End to end: an unrecoverable mid-queue retrieve failure fails the
+    run with a RuntimeError instead of hanging the pipelined loop."""
+    driver, state, store, _ = make_driver_with_store(
+        "host", lookahead=3,
+        injector=FaultInjector.from_spec("retrieve:step=1,count=64"),
+        driver_kw={"async_stages": True})
+    store.retry_backoff_s = 0.0
+    with pytest.raises(RuntimeError, match="retrieve"):
+        driver.run(state, STEPS)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: torn/corrupt writes are detected, restore falls
+# back to the newest step that verifies
+# ---------------------------------------------------------------------------
+
+
+def _mini_state(seed=0):
+    rng = np.random.default_rng(seed)
+    dense = {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)}
+    table = EmbeddingTableState(
+        rows=jnp.asarray(rng.normal(size=(32, 4)), jnp.float32),
+        accum=jnp.zeros((32,), jnp.float32))
+    return TrainState(dense, {"step": jnp.zeros((), jnp.int32)}, table,
+                      jnp.full((), seed, jnp.int32))
+
+
+@pytest.mark.parametrize("mode", ["ckpt_torn", "ckpt_corrupt"])
+def test_restore_falls_back_past_damaged_checkpoint(tmp_path, mode):
+    d = str(tmp_path)
+    good = _mini_state(seed=1)
+    save_checkpoint(d, good, 1)
+    save_checkpoint(d, _mini_state(seed=2), 2,
+                    injector=FaultInjector.from_spec(f"{mode}:step=0"))
+    template = _mini_state(seed=0)
+    # plain restore of the (damaged) newest step fails LOUDLY on CRC...
+    with pytest.raises(ValueError, match="CRC32"):
+        restore_checkpoint(d, template)
+    # ...and the recovery entry point falls back to the newest clean step
+    got, step = restore_latest_verifiable(d, template)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(got.table.rows),
+                                  np.asarray(good.table.rows))
+    np.testing.assert_array_equal(np.asarray(got.dense["w"]),
+                                  np.asarray(good.dense["w"]))
+
+
+def test_restore_latest_verifiable_exhausts_loudly(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, _mini_state(), 1,
+                    injector=FaultInjector.from_spec("ckpt_torn:step=0"))
+    with pytest.raises(FileNotFoundError, match="no verifiable checkpoint"):
+        restore_latest_verifiable(d, _mini_state())
+    with pytest.raises(FileNotFoundError):
+        restore_latest_verifiable(str(tmp_path / "nope"), _mini_state())
+
+
+def test_old_manifests_without_checksums_still_restore(tmp_path):
+    """Back-compat: pre-ISSUE-9 checkpoints carry no crc32 entries; they
+    restore with verification skipped rather than erroring."""
+    import json
+
+    d = str(tmp_path)
+    state = _mini_state(seed=3)
+    save_checkpoint(d, state, 5)
+    mpath = os.path.join(d, "step_00000005", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    for entry in manifest["leaves"]:
+        entry.pop("crc32")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    got, step = restore_latest_verifiable(d, _mini_state())
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(got.table.rows),
+                                  np.asarray(state.table.rows))
+
+
+# ---------------------------------------------------------------------------
+# preemption-safe checkpoint/resume: a SIGTERM-style notice mid-run saves
+# at a step boundary; the resumed run continues the EXACT trajectory
+# ---------------------------------------------------------------------------
+
+REF_STEPS = 6
+PREEMPT_AT = 3
+
+
+def _resume_driver(store_name, ckpt_dir, *, async_on=False):
+    """Fresh workload wired to resume: restore the newest verifiable save
+    and skip the batches the preempted run consumed."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs.base import NestPipeConfig, OptimizerConfig
+    from repro.core.embedding import EmbeddingEngine
+    from repro.core.store import CachedStore
+    from repro.train import build_step_fns, constant_lr, make_optimizer
+
+    cfg, spec, stream, dense_params, loss_fn = make_setup()
+    optimizer = make_optimizer(OptimizerConfig(lr=0.05, grad_clip=0.0))
+    np_cfg = NestPipeConfig(fwp_microbatches=N_MICRO, bucket_slack=2.0)
+    eng = EmbeddingEngine(spec, None, ("model",), P(None, None), np_cfg,
+                          compute_dtype=np.float32)
+    fns = build_step_fns(eng, loss_fn, optimizer, constant_lr(0.05), N_MICRO,
+                         (BATCH // N_MICRO, stream.f_total))
+    template = init_state(spec, dense_params, optimizer)
+    restored, step = restore_latest_verifiable(ckpt_dir, template)
+    assert step == PREEMPT_AT and int(restored.step) == PREEMPT_AT
+    source = itertools.islice(batch_iter(stream), step, None)
+    store = {"host": lambda: HostStore(spec, fns),
+             "cached": lambda: CachedStore(spec, fns)}[store_name]()
+    driver = DBPDriver(fns, source, N_MICRO, mode="nestpipe", store=store,
+                       device_fields=["keys", "dense", "labels"],
+                       async_stages=async_on)
+    return driver, restored
+
+
+@pytest.mark.parametrize("tier,async_on", [
+    ("host", False), ("cached", False), ("host", True)])
+def test_preemption_checkpoint_resume_is_exact(tmp_path, tier, async_on):
+    ref_state, ref_stats, _ = run_store(tier, steps=REF_STEPS)
+    d = str(tmp_path)
+
+    guard = PreemptionGuard(signals=())  # trigger() stands in for SIGTERM
+
+    def on_ckpt(st, step_no):
+        save_checkpoint(d, st, int(st.step))
+        if step_no == PREEMPT_AT:
+            guard.trigger()  # the notice lands DURING step 3's checkpoint
+
+    driver_kw = dict(guard=guard, on_checkpoint=on_ckpt, ckpt_every=1)
+    if async_on:
+        driver_kw["async_stages"] = True
+    driver, state, _, _ = make_driver_with_store(tier, driver_kw=driver_kw)
+    state1, stats1 = driver.run(state, REF_STEPS)
+    # the driver polled the guard at the step boundary, drained, saved,
+    # and exited cleanly — mid-run, not at the natural end
+    assert stats1.preempted_at == PREEMPT_AT
+    assert stats1.summary()["preempted_at"] == PREEMPT_AT
+    assert len(stats1.losses) == PREEMPT_AT
+
+    driver2, restored = _resume_driver(tier, d, async_on=async_on)
+    state2, stats2 = driver2.run(restored, REF_STEPS - PREEMPT_AT)
+
+    # the concatenated trajectory IS the uninterrupted one, bit for bit
+    np.testing.assert_array_equal(
+        list(stats1.losses) + list(stats2.losses), ref_stats.losses)
+    np.testing.assert_array_equal(np.asarray(state2.table.rows),
+                                  np.asarray(ref_state.table.rows))
+    np.testing.assert_array_equal(np.asarray(state2.table.accum),
+                                  np.asarray(ref_state.table.accum))
+
+
+def test_preempted_resume_survives_torn_final_save(tmp_path):
+    """The kill scenario: the preemption save itself lands torn. Resume
+    falls back to the previous periodic checkpoint and replays the missing
+    step — the trajectory is deterministic, so the result is unchanged."""
+    ref_state, ref_stats, _ = run_store("host", steps=REF_STEPS)
+    d = str(tmp_path)
+    guard = PreemptionGuard(signals=())
+    saves = {"n": 0}
+
+    def on_ckpt(st, step_no):
+        # tear the LAST write: the driver saves once per step via
+        # ckpt_every=1 and once more on the preemption exit path
+        saves["n"] += 1
+        inj = FaultInjector.from_spec("ckpt_torn:step=0") \
+            if step_no == PREEMPT_AT and saves["n"] > PREEMPT_AT else None
+        save_checkpoint(d, st, int(st.step), injector=inj)
+        if step_no == PREEMPT_AT:
+            guard.trigger()
+
+    driver, state, _, _ = make_driver_with_store(
+        "host", driver_kw=dict(guard=guard, on_checkpoint=on_ckpt,
+                               ckpt_every=1))
+    _, stats1 = driver.run(state, REF_STEPS)
+    assert stats1.preempted_at == PREEMPT_AT
+    assert saves["n"] == PREEMPT_AT + 1  # periodic saves + the exit save
+
+    # newest (step 3) is torn -> resume restores step 2 and replays step 3
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs.base import NestPipeConfig, OptimizerConfig
+    from repro.core.embedding import EmbeddingEngine
+    from repro.train import build_step_fns, constant_lr, make_optimizer
+
+    cfg, spec, stream, dense_params, loss_fn = make_setup()
+    optimizer = make_optimizer(OptimizerConfig(lr=0.05, grad_clip=0.0))
+    np_cfg = NestPipeConfig(fwp_microbatches=N_MICRO, bucket_slack=2.0)
+    eng = EmbeddingEngine(spec, None, ("model",), P(None, None), np_cfg,
+                          compute_dtype=np.float32)
+    fns = build_step_fns(eng, loss_fn, optimizer, constant_lr(0.05), N_MICRO,
+                         (BATCH // N_MICRO, stream.f_total))
+    restored, step = restore_latest_verifiable(
+        d, init_state(spec, dense_params, optimizer))
+    assert step == PREEMPT_AT - 1  # fell back past the torn final save
+    source = itertools.islice(batch_iter(stream), step, None)
+    driver2 = DBPDriver(fns, source, N_MICRO, mode="nestpipe",
+                        store=HostStore(spec, fns),
+                        device_fields=["keys", "dense", "labels"])
+    state2, stats2 = driver2.run(restored, REF_STEPS - step)
+    np.testing.assert_array_equal(np.asarray(state2.table.rows),
+                                  np.asarray(ref_state.table.rows))
+    np.testing.assert_array_equal(stats2.losses,
+                                  ref_stats.losses[step:])
+
+
+# ---------------------------------------------------------------------------
+# policy wiring: the driver feeds the session watchdog; straggler events
+# and recovery counters flow through summary()
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_owns_straggler_detection():
+    from repro.dist import StepWatchdog
+
+    wd = StepWatchdog(factor=3.0, warmup=0)
+    driver, state, _, _ = make_driver_with_store(
+        "host", driver_kw={"watchdog": wd, "metrics_every": 1})
+    _, stats = driver.run(state, STEPS)
+    # the drain routed every step through the SAME watchdog instance:
+    # events and stats agree by construction
+    assert [e.step for e in wd.events] == stats.straggler_steps
+    assert stats.summary()["stragglers"] == len(wd.events)
+
+
+def test_session_surfaces_recovery_counters(tmp_path):
+    """End to end through the api facade: fault_inject rides the config
+    into the store, counters surface in the report, and restore_if_available
+    walks past damage."""
+    from repro.api import Session
+
+    sess = Session.from_arch(
+        "dlrm-ctr", mode="nestpipe", reduced=True, global_batch=16,
+        seq_len=16, store="host", fault_inject="retrieve:step=1",
+        ckpt_dir=str(tmp_path), data_seed=0)
+    report = sess.train(4)
+    assert report.summary["faults_injected"] == 1.0
+    assert report.summary["stage_retries"] >= 1.0
+    assert report.summary["commit_rollbacks"] == 0.0
+    # checkpoint save path shares the armed spec through its own injector
+    assert sess.ckpt_injector.active
+    sess.save()
+    assert sess.restore_if_available() is not None
