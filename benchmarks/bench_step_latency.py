@@ -361,6 +361,8 @@ def main(argv: Optional[List[str]] = None):
             derived += f";h2d_bytes={int(s['h2d_bytes'])}"
         if "store_shards" in s:
             derived += f";shards={s['store_shards']}"
+        if "store_shard_grid" in s:  # 2D sparse grid (cols x rows)
+            derived += f";grid={s['store_shard_grid']}"
         if "max_loss_dev_vs_off" in s:
             derived += f";lossy=1;max_loss_dev={s['max_loss_dev_vs_off']:.6f}"
         breakdown = _stage_breakdown(s)

@@ -64,16 +64,24 @@ def run_driver(arch: str, *, mode: str, steps: int = 10, n_micro: int = 4,
     return report.state, report.stats, sess.workload
 
 
-def make_bench_mesh(n_devices: int, *, data_major: bool = False):
+def make_bench_mesh(n_devices: int, *, data_major: bool = False,
+                    grid=None):
     """(1, N) mesh over ("data", "model") — matches the recsys archs'
     default parallelism (batch AND sparse over all workers).
     ``data_major`` flips it to (N, 1): all devices on the DATA axis, which
     is what the dense-comm cells need — the quantized dense-grad ring runs
-    over the data axis, and a 1-device axis short-circuits to identity."""
+    over the data axis, and a 1-device axis short-circuits to identity.
+    ``grid=(a, b)`` reshapes to an explicit (a, b) mesh: because the
+    recsys archs' sparse axes default to ALL mesh axes, a (2, 2) grid IS
+    the 2D table-wise x row-wise sparse-parallel layout (bench_2dsp's
+    table4 cells), with the default (1, N) shape as its degenerate
+    1-column case."""
     import jax
     import numpy as np
     from jax.sharding import Mesh
 
+    if grid is not None:
+        assert grid[0] * grid[1] == n_devices, (grid, n_devices)
     have = len(jax.devices())
     if have < n_devices:
         raise RuntimeError(
@@ -81,6 +89,7 @@ def make_bench_mesh(n_devices: int, *, data_major: bool = False):
             f"{have}; the mesh cells must run in a process whose XLA_FLAGS "
             "force the host platform device count before JAX initializes "
             "(bench_step_latency._mesh_cells spawns one)")
-    shape = (n_devices, 1) if data_major else (1, n_devices)
+    shape = grid if grid is not None else (
+        (n_devices, 1) if data_major else (1, n_devices))
     return Mesh(np.asarray(jax.devices()[:n_devices]).reshape(shape),
                 ("data", "model"))

@@ -157,6 +157,7 @@ class Session:
         ckpt_every: int = 0,
         preemption_signals: tuple = (),
         metrics_every: Optional[int] = None,
+        sparse_axes: Optional[tuple] = None,
     ) -> "Session":
         """Resolve a registry arch into a ready session.
 
@@ -201,6 +202,15 @@ class Session:
         int8 quantized ring (``"off" | "int8"``; ``"auto"`` resolves the
         config default off — ``repro.dist.compressed``). Exact on a
         1-replica axis; approximate across replicas (residual dropped).
+        ``sparse_axes`` overrides the workload's sparse mesh axes (in
+        order). A 2-axis tuple over a 2D mesh selects 2D sparse
+        parallelism: ownership factors table-group x row
+        (``routing.owner_of_2d``; axis 0 = the column dimension), the
+        stage-3 exchange runs one All2All per sub-axis, and the sharded
+        tiers report the grid as ``store_shard_grid`` plus per-axis
+        ``wire_bytes_ax0``/``wire_bytes_ax1``. None keeps the arch's
+        default parallelism (recsys archs already default to ALL mesh
+        axes, so a (2, 2) mesh is 2D out of the box).
         ``fault_inject`` arms deterministic fault injection at the store's
         stage boundaries and the session's checkpoint I/O (spec grammar in
         ``repro.dist.inject``; ``"auto"`` resolves ``$REPRO_FAULT_INJECT``
@@ -247,6 +257,7 @@ class Session:
         wl = resolve(
             arch, shape, mesh=mesh, mode=mode, npcfg=npcfg, reduced=reduced,
             t_chunk=t_chunk, shape_override=shape_override,
+            sparse_axes=sparse_axes,
         )
         if lr is not None:
             opt_cfg = dataclasses.replace(opt_cfg or OptimizerConfig(), lr=lr)

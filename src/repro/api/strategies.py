@@ -55,7 +55,10 @@ def build_workload_store(workload, fns, *, donate: bool = True,
     drivers (DriverStrategy) and serving replicas (InferenceStrategy)
     resolve ``npcfg.store`` / ``$REPRO_STORE`` / mesh-awareness through
     the exact same call, so a serving replica always gets the tier the
-    training run would have used.
+    training run would have used. The workload's ``sparse_axes`` carry
+    straight through: two axes select the 2D table-wise x row-wise
+    sharded grid (``Session.from_arch(sparse_axes=...)`` or the recsys
+    default over a 2D mesh), one axis the flat 1D shards.
     """
     npcfg = workload.npcfg
     # The serial baseline is device-resident by definition: an EXPLICIT

@@ -317,7 +317,11 @@ class NestPipeConfig:
 class ParallelConfig:
     batch_axes: Tuple[str, ...] = ("data",)
     tensor_axes: Tuple[str, ...] = ("model",)
-    sparse_axes: Tuple[str, ...] = ("model",)  # embedding-table sharding axes
+    # Embedding-table sharding axes, IN ORDER. One axis = flat row
+    # sharding; two axes = 2D sparse parallelism (axis 0 the table-group/
+    # column dimension, axis 1 the row dimension — routing.owner_of_2d),
+    # with the stage-3 exchange factored into one All2All per sub-axis.
+    sparse_axes: Tuple[str, ...] = ("model",)
     fsdp_axes: Tuple[str, ...] = ()  # weight sharding (ZeRO-3) axes
     # ZeRO-1: shard only the optimizer moments over fsdp_axes, keep params
     # whole per model shard — one param all-gather per STEP instead of

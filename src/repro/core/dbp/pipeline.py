@@ -156,6 +156,7 @@ class PipelineStats:
         }
         for k in ("h2d_bytes", "d2h_bytes", "h2d_bursts", "d2h_bursts",
                   "wire_bytes", "idx_bytes",
+                  "wire_bytes_ax0", "wire_bytes_ax1",
                   "comm_rows_synced", "comm_rows_deferred",
                   "stage_retries", "commit_rollbacks",
                   "faults_injected") + STAGE_TIMER_KEYS:
@@ -163,6 +164,10 @@ class PipelineStats:
                 out[k] = self.store_metrics[k]
         if "shards" in self.store_metrics:  # sharded tier: per-host masters
             out["store_shards"] = int(self.store_metrics["shards"])
+        if "shard_cols" in self.store_metrics:  # 2D sparse grid shape
+            out["store_shard_grid"] = "%dx%d" % (
+                int(self.store_metrics["shard_cols"]),
+                int(self.store_metrics["shard_rows"]))
         if self.preempted_at is not None:
             out["preempted_at"] = self.preempted_at
         out.update(self._cache_rates())

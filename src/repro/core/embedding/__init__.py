@@ -8,7 +8,7 @@ from .engine import (
     WindowPlan,
     buffer_pspecs,
 )
-from .routing import SENTINEL, owner_of
+from .routing import SENTINEL, owner_of, owner_of_2d
 from .table import (
     EmbeddingTableState,
     MegaTableSpec,

@@ -86,7 +86,13 @@ def buffer_pspecs(sparse_axes: Tuple[str, ...]) -> DualBuffer:
     """PartitionSpecs of a :class:`DualBuffer` on a mesh: every leaf is
     row-partitioned over the sparse axes (shard s's slice is the key/row
     set it OWNS under :func:`routing.owner_of` — the layout contract the
-    sharded host tier relies on to slice per-owner key lists)."""
+    sharded host tier relies on to slice per-owner key lists).
+
+    With TWO sparse axes this is the 2D-sparse-parallel layout: a
+    ``P((ax0, ax1))`` leaf is blocked axis-0-major, so device ``(i, j)``
+    holds flat shard ``i * mesh.shape[ax1] + j`` — exactly the
+    ``(col_shard, row_shard)`` coordinate of :func:`routing.owner_of_2d`
+    (ax0 = the table-group/column axis, ax1 = the row axis)."""
     axes = sparse_axes if len(sparse_axes) > 1 else sparse_axes[0]
     return DualBuffer(keys=P(axes), rows=P(axes, None), accum=P(axes))
 
@@ -187,9 +193,30 @@ class EmbeddingEngine:
         return self.sparse_axes if len(self.sparse_axes) > 1 else self.sparse_axes[0]
 
     def _a2a(self, x: jax.Array) -> jax.Array:
+        """Owner exchange over the leading (S,) destination axis.
+
+        One sparse axis -> a single flat All2All. Two sparse axes -> the
+        2D-sparse-parallel factored exchange: reshape (S, ...) into
+        (S0, S1, ...) and run one All2All per mesh sub-axis (a table-group
+        exchange over ax0, then a row-group exchange over ax1), each
+        confined to its mesh sub-axis so each hop crosses only
+        ``size(ax) - 1`` peers instead of ``S - 1``. Because the flat
+        shard id is axis-0-major (``_shard_id``), chunk ``(j0, j1)`` of
+        device ``(i0, i1)`` lands exactly where the flat tuple-axis
+        exchange would put chunk ``j0 * S1 + j1`` — the factored form is
+        pure routing, bit-identical to the flat one. Size-1 axes are
+        skipped (no collective at all on that hop).
+        """
         if self.num_shards == 1:
             return x
-        return jax.lax.all_to_all(x, self._axis(), 0, 0, tiled=True)
+        if len(self.sparse_axes) == 1:
+            return jax.lax.all_to_all(x, self.sparse_axes[0], 0, 0, tiled=True)
+        sizes = tuple(self.mesh.shape[a] for a in self.sparse_axes)
+        y = x.reshape(sizes + x.shape[1:])
+        for d, a in enumerate(self.sparse_axes):
+            if sizes[d] > 1:
+                y = jax.lax.all_to_all(y, a, d, d, tiled=True)
+        return y.reshape(x.shape)
 
     def _shard_id(self):
         if self.mesh is None or self.num_shards == 1:

@@ -117,6 +117,39 @@ def owner_of(keys: jax.Array, rows_per_shard: int, num_shards: int) -> jax.Array
     return xp.where(keys != SENTINEL, owner, num_shards)
 
 
+def owner_of_2d(
+    keys: jax.Array, rows_per_shard: int, num_cols: int, num_rows: int
+):
+    """2D ownership: each (scrambled) key -> a ``(col_shard, row_shard)``
+    mesh coordinate on a ``num_cols x num_rows`` sparse grid.
+
+    The 2D owner is a pure factorization of the flat one —
+    ``flat = owner_of(k, rows_per_shard, num_cols * num_rows)`` and
+    ``(col, row) = (flat // num_rows, flat % num_rows)`` — so the column
+    axis carves the scrambled key space into ``num_cols`` contiguous
+    "table groups" (under the affine scramble each group holds a balanced
+    slice of every logical table) and the row axis row-shards within a
+    group. Column-major-over-row matches both ``EmbeddingEngine._shard_id``
+    (axis-0-major flat device id over ``sparse_axes``) and the block order
+    of ``PartitionSpec((ax0, ax1))``, which is what lets the stage-3 key
+    exchange factor into a table-group All2All followed by a row-group
+    All2All with bit-identical routing.
+
+    ``owner_of`` is the degenerate 1-column case: with ``num_cols == 1``
+    the returned ``row`` coordinate reproduces
+    ``owner_of(keys, rows_per_shard, num_rows)`` bit for bit (sentinel
+    handling included). Sentinels never acquire an owner: they map to the
+    virtual coordinate ``(num_cols, num_rows)``. Numpy in -> numpy out,
+    same as :func:`owner_of`.
+    """
+    xp = jnp if isinstance(keys, jax.Array) else np
+    flat = owner_of(keys, rows_per_shard, num_cols * num_rows)
+    valid = keys != SENTINEL
+    col = xp.where(valid, flat // num_rows, num_cols)
+    row = xp.where(valid, flat % num_rows, num_rows)
+    return col, row
+
+
 def bucket_by_owner_window(
     unique_keys: jax.Array, num_shards: int, capacity: int, rows_per_shard: int
 ) -> BucketResult:

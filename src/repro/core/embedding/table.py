@@ -54,6 +54,30 @@ class MegaTableSpec:
         """Map per-table keys to scrambled mega-table row ids."""
         return self.scramble(keys + self.table_offsets[table_idx])
 
+    def owner_coords_2d(
+        self, table_ids, keys, num_cols: int, num_rows: int
+    ):
+        """(table, row) -> ``(col_shard, row_shard)`` on a 2D sparse grid.
+
+        The table-wise x row-wise ownership map of 2D sparse parallelism:
+        per-table keys go through the packed offsets + affine scramble and
+        then :func:`routing.owner_of_2d` factors the flat owner into the
+        (column, row) mesh coordinate. The scramble stays GLOBAL (topology
+        invariant), so a "column" is a contiguous range of the scrambled
+        space — each column group holds a balanced slice of every logical
+        table, and checkpoints restore bit-exactly across grid shapes.
+        Requires ``num_cols * num_rows == num_shards``.
+        """
+        from .routing import owner_of_2d
+
+        assert num_cols * num_rows == self.num_shards, (
+            num_cols, num_rows, self.num_shards)
+        xp = jnp if isinstance(keys, jax.Array) else np
+        table_ids = xp.asarray(table_ids)
+        offs = xp.asarray(np.asarray(self.table_offsets, np.int32))
+        gkeys = self.scramble(keys + offs[table_ids])
+        return owner_of_2d(gkeys, self.rows_per_shard, num_cols, num_rows)
+
 
 def make_mega_table_spec(
     tables: Sequence[SparseTableConfig] | None,

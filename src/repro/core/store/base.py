@@ -239,8 +239,9 @@ def build_store(
 
     On a mesh the host/cached tiers route to :class:`ShardedStore`: the
     DRAM master is row-sharded per host over ``sparse_axes`` (the engine's
-    ownership hashing) and each shard wraps its slice in its own local
-    host/cached tier. Genuinely unsupported combos stay loud errors — the
+    ownership hashing; TWO axes select the 2D table-group x row grid of
+    ``routing.owner_of_2d``) and each shard wraps its slice in its own
+    local host/cached tier. Genuinely unsupported combos stay loud errors — the
     serial driver rejects every non-device store (DBPDriver / strategies),
     and a mesh whose sparse axes don't match the spec's shard count fails
     in the ShardedStore constructor.

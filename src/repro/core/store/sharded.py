@@ -33,12 +33,29 @@ local tiers behind the same protocol (stage 4a / 6)
     so the epoch fence counts whole windows while the ledger exposes the
     per-shard application the fence is standing in for on a real cluster.
 
+2D sparse parallelism (two ``sparse_axes``)
+    With a 2-axis sparse grid the flat shard id factors as
+    ``s = col * grid_rows + row`` (``routing.owner_of_2d``): axis 0 is
+    the table-group/column dimension (contiguous ranges of the GLOBAL
+    scrambled key space — under the affine mix each column holds a
+    balanced slice of every logical table), axis 1 row-shards within a
+    column. The engine's stage-3 exchange then runs as a table-group
+    All2All followed by a row-group All2All, each confined to its mesh
+    sub-axis (``EmbeddingEngine._a2a``), and the coordinator attributes
+    per-axis off-device bytes on the comm ledger
+    (``wire_bytes_ax0``/``wire_bytes_ax1``). Everything below the owner
+    partition is unchanged: sub-stores still see flat local row ids, so
+    per-shard policy/comm/ledger state stays strictly local and
+    checkpoints restore bit-exactly across grid shapes (2x2 <-> 4x1 <->
+    1x4 <-> the flat 1D tier) because the scramble — and therefore the
+    exported global table — is topology invariant.
+
 Value-transparency is inherited: local tiers only decide where a shard's
 bytes live, and the owner partition is a disjoint cover of the key space,
 so training through the sharded tiers replays the device-tier run on the
 same mesh bit for bit (tests/scenarios/store_multidev.py: 1/2/4 simulated
-devices, lookahead x async_stages x checkpoint-restore-at-a-different-
-shard-count).
+devices plus the 2D grid sections, lookahead x async_stages x
+checkpoint-restore-at-a-different-topology).
 
 Simulation note (single process, ``--xla_force_host_platform_device_count``):
 the per-shard cached slices assemble their hit+miss buffers on device and
@@ -60,7 +77,7 @@ from jax.sharding import Mesh, NamedSharding
 from ...dist.fault import retry_step
 from ...dist.inject import NULL_INJECTOR, FaultInjector
 from ..embedding.engine import DualBuffer, buffer_pspecs
-from ..embedding.routing import owner_of
+from ..embedding.routing import owner_of, owner_of_2d
 from ..embedding.table import EmbeddingTableState, MegaTableSpec, table_pspecs
 from .base import FetchPlan, StageTimers, placeholder_table
 from .cached import CachedStore
@@ -128,6 +145,17 @@ class ShardedStore:
         self.spec = spec
         self.mesh = mesh
         self.num_shards = num_shards
+        # 2D sparse parallelism: per-axis shard grid. Two sparse axes mean
+        # flat shard s sits at mesh coordinate (s // rows, s % rows) —
+        # axis 0 is the table-group/column axis, axis 1 the row axis
+        # (routing.owner_of_2d). One axis is the degenerate 1-column grid.
+        self.shard_grid = tuple(int(mesh.shape[a]) for a in self.sparse_axes)
+        self._axes_grid = tuple(
+            (a, int(mesh.shape[a])) for a in self.sparse_axes)
+        if len(self.shard_grid) == 2:
+            self.grid_cols, self.grid_rows = self.shard_grid
+        else:
+            self.grid_cols, self.grid_rows = 1, self.shard_grid[0]
         self.local_tier = local_tier
         self.tier = f"sharded-{local_tier}"
         self._route = jax.jit(fns.route_window) if fns is not None else None
@@ -220,16 +248,24 @@ class ShardedStore:
                 f"{s_count} shards")
         k = total // s_count
         rps = self.spec.rows_per_shard
+        nc, nr = self.grid_cols, self.grid_rows
         out = []
         for s in range(s_count):
             hk = host_keys[s * k:(s + 1) * k]
             valid = hk != _SENTINEL
             owned = hk[valid]
-            if owned.size and not bool(
-                    (np.asarray(owner_of(owned, rps, s_count)) == s).all()):
-                raise ValueError(
-                    f"shard {s} buffer slice holds keys it does not own — "
-                    "buffer layout violates the owner partition")
+            # validate through the 2D coordinate (col, row) = the flat id
+            # factored over the grid — on a 1-axis store the 1-column
+            # degenerate case makes this identical to checking owner_of,
+            # so the 2D ownership law is load-bearing on EVERY sharded run
+            if owned.size:
+                col, row = owner_of_2d(owned, rps, nc, nr)
+                if not bool((np.asarray(col) == s // nr).all()
+                            and (np.asarray(row) == s % nr).all()):
+                    raise ValueError(
+                        f"shard {s} (grid coord {(s // nr, s % nr)}) buffer "
+                        "slice holds keys it does not own — buffer layout "
+                        "violates the 2D owner partition")
             out.append(np.where(valid, hk - s * rps,
                                 _SENTINEL).astype(np.int32))
         return out
@@ -258,7 +294,8 @@ class ShardedStore:
         self.faults.fire("plan")
         host_keys = np.asarray(jax.device_get(window.buffer_keys))
         host_keys = self.comm.exchange_keys(host_keys,
-                                            num_slices=self.num_shards)
+                                            num_slices=self.num_shards,
+                                            axes=self._axes_grid)
         return FetchPlan(window, host_keys)
 
     def plan(self, keys) -> FetchPlan:
@@ -422,6 +459,8 @@ class ShardedStore:
             "d2h_bytes": float(self.d2h_bytes
                                + sum(s.d2h_bytes for s in self.shards)),
             "shards": float(self.num_shards),
+            "shard_cols": float(self.grid_cols),
+            "shard_rows": float(self.grid_rows),
             "commits": float(sum(self.commits_applied)),
             "stage_retries": float(self.stage_retries
                                    + sum(s.stage_retries

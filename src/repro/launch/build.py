@@ -259,6 +259,7 @@ def resolve(
     reduced: bool = False,
     t_chunk: int = 512,
     shape_override: Optional[ShapeConfig] = None,
+    sparse_axes: Optional[Tuple[str, ...]] = None,
 ) -> Workload:
     arch = get_arch(arch_name)
     if shape_override is not None:
@@ -288,6 +289,12 @@ def resolve(
     npcfg = npcfg or NestPipeConfig()
     if mode in ("serial", "2dsp"):
         npcfg = dataclasses.replace(npcfg, dbp=False)
+    if sparse_axes is not None:
+        # explicit sparse-grid override (e.g. a 2D table-wise x row-wise
+        # grid over ("data", "model")): the engine/store ownership grid
+        # follows these axes IN ORDER — axis 0 is the column dimension
+        parallel = dataclasses.replace(parallel,
+                                       sparse_axes=tuple(sparse_axes))
     sparse_axes = sparse_axes_for_mode(mode, parallel.sparse_axes)
     # serving has no micro-batching; training uses the FWP window
     n_micro = npcfg.fwp_microbatches if shape.kind == "train" else 1

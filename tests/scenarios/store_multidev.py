@@ -11,11 +11,24 @@ device run: different shard counts legitimately reduce in different orders
 (their loss bits may differ), but on any fixed mesh WHERE the master rows
 live must not change a single bit.
 
+2D sparse parallelism rides the same discipline: a ``grid=(cols, rows)``
+Case builds a 2-axis ("col", "row") mesh whose sparse grid factors
+ownership table-group x row (``routing.owner_of_2d``) and the stage-3
+exchange into one All2All per sub-axis — and the 2x2 / 4x1 / 1x4 runs
+must replay their same-mesh device runs bit for bit too, with
+checkpoints restorable ACROSS grid topologies (save at 2x2, continue at
+4x1 / 1x4 / the flat 1D tier on the device trajectory).
+
 Sections (argv; default = all): ``core`` (the 4-shard matrix),
 ``restore`` (cross-shard-count + cross-tier checkpoints), ``sweep``
 (the 1/2-shard matrix, run by the CI multidev job), ``comm`` (the
 sparse-comm modes on the 4-shard mesh: pack bit-exact vs off across
-tiers and async on/off, int8 ledger + loss parity).
+tiers and async on/off, int8 ledger + loss parity), ``grid`` (the 2x2 +
+4x1 + 1x4 2D matrices), ``grid1`` (the degenerate 1x1 grid twin, run
+in tier-1 via tests/test_sharded_store.py), ``grid16`` (the 4x4 matrix;
+needs ``--xla_force_host_platform_device_count=16``), ``restore2d``
+(cross-topology checkpoints), ``chaos2d`` (fault injection at every
+hook point on the 2x2 store).
 """
 import os
 import sys
@@ -55,10 +68,10 @@ N_MICRO, BATCH, STEPS = 4, 32, 6
 AXIS = "x"
 
 
-def make_setup(num_shards, seed=0):
+def make_setup(num_shards, seed=0, batch=BATCH):
     """The tiny CTR workload of tests/test_consistency.py, spec'd for S
-    shards. The mega-table pads to the same 224 rows for S in {1, 2, 4},
-    so scrambled key streams are IDENTICAL across shard counts and a
+    shards. The mega-table pads to the same 224 rows for S in {1, 2, 4,
+    16}, so scrambled key streams are IDENTICAL across shard counts and a
     checkpoint from one count restores at another."""
     tables = (
         SparseTableConfig("cat_a", vocab_size=64, dim=8),
@@ -70,7 +83,7 @@ def make_setup(num_shards, seed=0):
         n_layers=2, n_heads=2, d_ff=32, seq_len=1, num_dense_features=4,
     )
     spec = make_mega_table_spec(tables, num_shards=num_shards)
-    stream = SyntheticRecsysStream(cfg, spec, BATCH, seed=seed)
+    stream = SyntheticRecsysStream(cfg, spec, batch, seed=seed)
 
     rng = np.random.default_rng(seed + 10)
     dense_params = {
@@ -108,29 +121,47 @@ def batch_iter(stream, start=0):
 
 class Case:
     """One (shard count, mesh) workload: builds fns/state/driver on demand
-    so every store variant reuses the same jit cache."""
+    so every store variant reuses the same jit cache.
 
-    def __init__(self, num_shards):
+    ``grid=(cols, rows)`` builds the 2D sparse-parallel variant instead: a
+    2-axis ("col", "row") mesh with BOTH axes sparse, so flat shard s sits
+    at grid coordinate (s // rows, s % rows) and the engine's stage-3
+    exchange factors into a col-axis then a row-axis All2All."""
+
+    def __init__(self, num_shards, grid=None, batch=BATCH):
         self.S = num_shards
-        self.mesh = Mesh(np.asarray(jax.devices()[:num_shards]), (AXIS,))
-        cfg, self.spec, self.stream, dense, loss_fn = make_setup(num_shards)
+        self.grid = grid
+        self.batch = batch
+        if grid is None:
+            self.axes = (AXIS,)
+            self.mesh = Mesh(np.asarray(jax.devices()[:num_shards]),
+                             self.axes)
+        else:
+            assert grid[0] * grid[1] == num_shards, (grid, num_shards)
+            self.axes = ("col", "row")
+            self.mesh = Mesh(
+                np.asarray(jax.devices()[:num_shards]).reshape(grid),
+                self.axes)
+        cfg, self.spec, self.stream, dense, loss_fn = make_setup(
+            num_shards, batch=batch)
         # numpy template: a CPU device_put can zero-copy ALIAS jax arrays,
         # and the driver donates the state — reruns need intact templates
         self.dense = jax.tree.map(lambda x: np.array(x, copy=True), dense)
         self.optimizer = make_optimizer(OptimizerConfig(lr=0.05, grad_clip=0.0))
         np_cfg = NestPipeConfig(fwp_microbatches=N_MICRO,
                                 bucket_slack=2.0 * num_shards)
-        self.eng = EmbeddingEngine(self.spec, self.mesh, (AXIS,),
-                                   P(AXIS, None), np_cfg,
+        ba = self.axes if len(self.axes) > 1 else self.axes[0]
+        self.eng = EmbeddingEngine(self.spec, self.mesh, self.axes,
+                                   P(ba, None), np_cfg,
                                    compute_dtype=jnp.float32)
         self.fns = build_step_fns(self.eng, loss_fn, self.optimizer,
                                   constant_lr(0.05), N_MICRO,
-                                  (BATCH // N_MICRO, self.stream.f_total))
+                                  (batch // N_MICRO, self.stream.f_total))
         ns = lambda p: NamedSharding(self.mesh, p)  # noqa: E731
-        self.batch_sh = {"keys": ns(P(None, AXIS, None)),
-                         "dense": ns(P(None, AXIS, None)),
-                         "labels": ns(P(None, AXIS))}
-        t_ps = table_pspecs((AXIS,))
+        self.batch_sh = {"keys": ns(P(None, ba, None)),
+                         "dense": ns(P(None, ba, None)),
+                         "labels": ns(P(None, ba))}
+        t_ps = table_pspecs(self.axes)
         self._state_sh = TrainState(
             dense=jax.tree.map(lambda _: ns(P()), self.dense),
             opt=jax.tree.map(lambda _: ns(P()), self.optimizer.init(self.dense)),
@@ -140,7 +171,7 @@ class Case:
 
     def init_state(self):
         table = init_table_state(jax.random.PRNGKey(0), self.spec, self.mesh,
-                                 (AXIS,))
+                                 self.axes)
         state = TrainState(self.dense, self.optimizer.init(self.dense), table,
                            jnp.zeros((), jnp.int32))
         return jax.device_put(state, self._state_sh)
@@ -149,7 +180,7 @@ class Case:
         if name == "device":
             return DeviceStore(self.fns)
         return build_store(name, self.spec, self.fns, mesh=self.mesh,
-                           sparse_axes=(AXIS,), **kw)
+                           sparse_axes=self.axes, **kw)
 
     def run(self, store_name, *, steps=STEPS, lookahead=1, async_on=False,
             state=None, start=0, on_ckpt=None, ckpt_every=0, **store_kw):
@@ -180,17 +211,22 @@ def tables_equal(a, b, what):
                                   np.asarray(b.table.accum), err_msg=what)
 
 
-def run_matrix(case):
+def run_matrix(case, light=False):
     """Sharded host + cached-slice variants vs the same-mesh device run,
-    over lookahead x async_stages — the tentpole bit-exactness claim."""
+    over lookahead x async_stages — the tentpole bit-exactness claim.
+    Grid cases additionally check the 2D ledger: the shard-grid metric
+    keys and the per-axis off-device wire bytes of the factored owner
+    exchange. ``light`` trims to the deepest combo per tier (the 4x4 /
+    16-device section, where compile time dominates)."""
     S = case.S
+    gtag = f"{case.grid[0]}x{case.grid[1]}" if case.grid else f"S={S}"
     ref_state, ref_stats, _ = case.run("device")
     assert ref_stats.overflow_max == 0
     traffic = {}
     for tier in ("host", "cached"):
-        for lookahead in (1, 3):
-            for async_on in (False, True):
-                tag = f"S={S} {tier} k={lookahead} async={async_on}"
+        for lookahead in ((3,) if light else (1, 3)):
+            for async_on in ((True,) if light else (False, True)):
+                tag = f"{gtag} {tier} k={lookahead} async={async_on}"
                 st, stats, store = case.run(tier, lookahead=lookahead,
                                             async_on=async_on)
                 np.testing.assert_array_equal(stats.losses, ref_stats.losses,
@@ -200,6 +236,20 @@ def run_matrix(case):
                 assert m["shards"] == float(S), tag
                 assert m["commits"] == float(S * STEPS), tag
                 assert stats.store_metrics["h2d_bytes"] == m["h2d_bytes"], tag
+                # 2D ledger: grid shape on the record + one off-device
+                # byte counter per mesh sub-axis of the factored
+                # exchange. A size-1 axis ships nothing; equal-size axes
+                # carry equal fractions of the same payload.
+                nc, nr = case.grid if case.grid else (1, S)
+                assert m["shard_cols"] == float(nc), tag
+                assert m["shard_rows"] == float(nr), tag
+                if case.grid:
+                    ax = (m["wire_bytes_ax0"], m["wire_bytes_ax1"])
+                    for size, b in zip(case.grid, ax):
+                        assert (b > 0) == (size > 1), (tag, case.grid, ax)
+                        assert b <= m["wire_bytes"], (tag, ax)
+                    if nc == nr:
+                        assert ax[0] == ax[1], (tag, ax)
                 traffic[(tier, lookahead, async_on)] = (
                     m["h2d_bytes"], m["d2h_bytes"])
                 if tier == "cached":
@@ -209,7 +259,7 @@ def run_matrix(case):
     # same windows staged / committed with the executor on or off: the
     # modeled transfer accounting replays exactly (host tier; the cached
     # tier's admission-block can legally defer an admission)
-    for lookahead in (1, 3):
+    for lookahead in (() if light else (1, 3)):
         assert traffic[("host", lookahead, False)] == \
             traffic[("host", lookahead, True)], (S, lookahead)
     # device tier still rides lookahead on this mesh
@@ -293,6 +343,78 @@ def run_restore(tmp):
     print("  [restore 2-shard ckpt -> single-process cached] OK")
 
 
+def run_restore_2d(tmp):
+    """Cross-TOPOLOGY checkpoints: save at a 2x2 grid, restore at 4x1,
+    1x4 and the flat 1D sharded tier. The scramble (and therefore the
+    exported global table) is topology invariant, so each continuation
+    must equal the restore-mesh device continuation bit for bit —
+    extends run_restore's cross-shard-count matrix to the 2D grid."""
+    case22 = Case(4, grid=(2, 2))
+    saved = {}
+
+    def on_ckpt(st, n):
+        saved[n] = save_checkpoint(tempfile.mkdtemp(dir=tmp), st, int(st.step))
+
+    case22.run("host", steps=3, on_ckpt=on_ckpt, ckpt_every=3)
+    assert sorted(saved) == [3], saved
+    base = os.path.dirname(saved[3])
+
+    # the 2x2-written manifest equals the same-grid device export
+    d_dev = {}
+
+    def on_ckpt_dev(st, n):
+        d_dev[n] = save_checkpoint(tempfile.mkdtemp(dir=tmp), st, int(st.step))
+
+    case22.run("device", steps=3, on_ckpt=on_ckpt_dev, ckpt_every=3)
+    t_sh = restore_checkpoint(base, case22.init_state())
+    t_dev = restore_checkpoint(os.path.dirname(d_dev[3]), case22.init_state())
+    tables_equal(t_sh, t_dev, "2x2 ckpt: sharded-host vs device")
+
+    for target, name in ((Case(4, grid=(4, 1)), "4x1"),
+                         (Case(4, grid=(1, 4)), "1x4"),
+                         (Case(4), "1D-4shard")):
+        ref_state, ref_stats, _ = target.run(
+            "device", steps=3, start=3, state=target.restore_into(base))
+        for tier in ("host", "cached"):
+            st, stats, _ = target.run(tier, steps=3, start=3,
+                                      state=target.restore_into(base),
+                                      lookahead=3, async_on=True)
+            np.testing.assert_array_equal(
+                stats.losses, ref_stats.losses,
+                err_msg=f"restore 2x2 -> {name} {tier}")
+            tables_equal(st, ref_state, f"restore 2x2 -> {name} {tier}")
+            print(f"  [restore 2x2 -> {name}, {tier}] OK")
+
+
+CHAOS_2D = "plan:step=1;retrieve:step=2;commit:step=3;h2d:step=1"
+
+
+def run_chaos_2d():
+    """Fault at every hook point on the 2x2 store: the bounded stage
+    retries + commit rollback replay the fault-free run bit for bit, and
+    the COORDINATOR owns the injector — schedule steps count whole
+    windows, never per-sub-shard calls (sub-stores keep NULL injectors),
+    so 4 armed sites fire exactly 4 faults on a 4-shard grid."""
+    from repro.dist.inject import NULL_INJECTOR
+
+    case = Case(4, grid=(2, 2))
+    for tier in ("host", "cached"):
+        ref_state, ref_stats, _ = case.run(tier)
+        st, stats, store = case.run(tier, fault_inject=CHAOS_2D,
+                                    async_on=True, lookahead=3)
+        tag = f"2x2 {tier} chaos"
+        np.testing.assert_array_equal(stats.losses, ref_stats.losses,
+                                      err_msg=tag)
+        tables_equal(st, ref_state, tag)
+        m = store.metrics()
+        assert m["faults_injected"] == 4.0, (tag, m)
+        assert m["stage_retries"] >= 3.0, (tag, m)
+        assert m["commit_rollbacks"] >= 1.0, (tag, m)
+        assert store.faults is not NULL_INJECTOR, tag
+        assert all(s.faults is NULL_INJECTOR for s in store.shards), tag
+        print(f"  [{tag}] bit-exact recovery: OK")
+
+
 def run_comm(case):
     """Sparse-comm modes on a real multi-shard mesh: ``pack`` replays the
     same-mesh ``off`` run bit for bit (per-slice owner-exchange packing,
@@ -323,7 +445,8 @@ def run_comm(case):
 
 
 if __name__ == "__main__":
-    sections = sys.argv[1:] or ["core", "restore", "sweep", "comm"]
+    sections = sys.argv[1:] or ["core", "restore", "sweep", "comm",
+                                "grid", "grid1", "restore2d", "chaos2d"]
     if "core" in sections:
         print("[store-multidev] core: 4-shard matrix")
         run_matrix(Case(4))
@@ -338,4 +461,22 @@ if __name__ == "__main__":
     if "comm" in sections:
         print("[store-multidev] comm: sparse-comm modes, 4-shard mesh")
         run_comm(Case(4))
+    if "grid" in sections:
+        for grid in ((2, 2), (4, 1), (1, 4)):
+            print(f"[store-multidev] grid: {grid[0]}x{grid[1]} 2D matrix")
+            run_matrix(Case(4, grid=grid))
+    if "grid1" in sections:
+        print("[store-multidev] grid1: 1x1 degenerate 2D matrix")
+        run_matrix(Case(1, grid=(1, 1)))
+    if "grid16" in sections:
+        # 16 flat shards need >= 16 rows per micro-batch to partition
+        print("[store-multidev] grid16: 4x4 2D matrix (16 devices)")
+        run_matrix(Case(16, grid=(4, 4), batch=64), light=True)
+    if "restore2d" in sections:
+        print("[store-multidev] restore2d: cross-topology checkpoints")
+        with tempfile.TemporaryDirectory() as tmp:
+            run_restore_2d(tmp)
+    if "chaos2d" in sections:
+        print("[store-multidev] chaos2d: fault matrix on the 2x2 store")
+        run_chaos_2d()
     print("STORE MULTIDEV OK")

@@ -263,6 +263,20 @@ def test_chaos_matrix_sharded(tier, async_on, mesh_case):
     assert all(s.faults is NULL_INJECTOR for s in store.shards)
 
 
+def test_chaos_matrix_2d_grid():
+    """The 2D-grid chaos row: a fault at every hook point on the real 2x2
+    store (4 simulated devices, subprocess scenario) recovers bit-exactly,
+    with the coordinator-owned injector counting whole windows — 4 armed
+    sites fire exactly 4 faults on the 4-shard grid, never one per
+    sub-shard call (the section asserts the sub-stores' NULL injectors)."""
+    from test_sharded_store import run_scenario
+
+    out = run_scenario("chaos2d")
+    assert "STORE MULTIDEV OK" in out
+    assert "[2x2 host chaos] bit-exact recovery: OK" in out
+    assert "[2x2 cached chaos] bit-exact recovery: OK" in out
+
+
 def test_exhausted_retries_stay_fatal():
     """NOT survivable by design: a fault that outlives the retry budget
     surfaces as RetryExhausted instead of silently corrupting the run."""

@@ -1,0 +1,137 @@
+"""Property-based laws of the 2D ownership map (routing.owner_of_2d).
+
+The 2D owner is the load-bearing contract of 2D sparse parallelism: the
+engine's buffer layout, the factored stage-3 exchange and ShardedStore's
+per-(col,row) slicing all assume (1) every non-sentinel key has exactly
+one in-range (col, row) coordinate, (2) the per-coordinate key sets
+partition any window (disjoint, union = all valid keys), (3) one column
+degenerates bit for bit to the flat ``owner_of``, and (4) sentinels never
+acquire an owner. Runs under real hypothesis when installed, else the
+deterministic sampling fallback (tests/_hypothesis_compat.py).
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.embedding import SENTINEL, make_mega_table_spec, owner_of
+from repro.core.embedding.routing import owner_of_2d
+from repro.configs.base import SparseTableConfig
+
+_SENT = int(SENTINEL)
+
+
+def _keys(seed, n, rps, num_shards, sentinel_every=5):
+    """A window of scrambled-range keys with sentinels mixed in."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, rps * num_shards, size=n).astype(np.int32)
+    keys[::sentinel_every] = _SENT
+    return keys
+
+
+@settings(max_examples=25)
+@given(num_cols=st.integers(1, 5), num_rows=st.integers(1, 5),
+       rps=st.integers(1, 64), n=st.integers(1, 128),
+       seed=st.integers(0, 9))
+def test_every_valid_key_has_exactly_one_owner(num_cols, num_rows, rps, n,
+                                               seed):
+    keys = _keys(seed, n, rps, num_cols * num_rows)
+    col, row = owner_of_2d(keys, rps, num_cols, num_rows)
+    valid = keys != _SENT
+    # in range on both coordinates — a single well-defined owner
+    assert ((col[valid] >= 0) & (col[valid] < num_cols)).all()
+    assert ((row[valid] >= 0) & (row[valid] < num_rows)).all()
+    # and it is exactly the factored flat owner (axis-0-major), so the
+    # 2D coordinate agrees with the engine's flat shard id everywhere
+    flat = owner_of(keys, rps, num_cols * num_rows)
+    np.testing.assert_array_equal(
+        (col * num_rows + row)[valid], flat[valid])
+
+
+@settings(max_examples=25)
+@given(num_cols=st.integers(1, 4), num_rows=st.integers(1, 4),
+       rps=st.integers(1, 32), n=st.integers(1, 96),
+       seed=st.integers(0, 9))
+def test_shard_unions_partition_the_window(num_cols, num_rows, rps, n, seed):
+    keys = _keys(seed, n, rps, num_cols * num_rows)
+    col, row = owner_of_2d(keys, rps, num_cols, num_rows)
+    valid_idx = set(np.flatnonzero(keys != _SENT).tolist())
+    seen = []
+    for c in range(num_cols):
+        for r in range(num_rows):
+            seen.append(set(np.flatnonzero((col == c) & (row == r)).tolist()))
+    # pairwise disjoint ...
+    total = sum(len(s) for s in seen)
+    union = set().union(*seen) if seen else set()
+    assert total == len(union)
+    # ... and the union is exactly the valid key positions
+    assert union == valid_idx
+
+
+@settings(max_examples=25)
+@given(num_rows=st.integers(1, 8), rps=st.integers(1, 64),
+       n=st.integers(1, 128), seed=st.integers(0, 9))
+def test_one_column_reproduces_owner_of_bit_for_bit(num_rows, rps, n, seed):
+    keys = _keys(seed, n, rps, num_rows)
+    col, row = owner_of_2d(keys, rps, 1, num_rows)
+    flat = owner_of(keys, rps, num_rows)
+    np.testing.assert_array_equal(row, flat)
+    assert row.dtype == flat.dtype
+    # the single column owns every valid key; sentinels fall off its edge
+    valid = keys != _SENT
+    assert (col[valid] == 0).all()
+
+
+@settings(max_examples=25)
+@given(num_cols=st.integers(1, 4), num_rows=st.integers(1, 4),
+       rps=st.integers(1, 32))
+def test_sentinels_never_acquire_an_owner(num_cols, num_rows, rps):
+    keys = np.full((16,), _SENT, np.int32)
+    col, row = owner_of_2d(keys, rps, num_cols, num_rows)
+    # the virtual coordinate just past the grid on BOTH axes
+    assert (col == num_cols).all() and (row == num_rows).all()
+
+
+def test_owner_of_2d_matches_on_device_arrays():
+    """jnp in -> jnp out, same values as the numpy path (the engine's
+    buffer validation runs on host numpy; parity keeps either usable)."""
+    import jax.numpy as jnp
+
+    keys = _keys(3, 64, 16, 6)
+    c_np, r_np = owner_of_2d(keys, 16, 3, 2)
+    c_j, r_j = owner_of_2d(jnp.asarray(keys), 16, 3, 2)
+    np.testing.assert_array_equal(np.asarray(c_j), c_np)
+    np.testing.assert_array_equal(np.asarray(r_j), r_np)
+
+
+def test_table_row_pairs_map_through_the_mega_table():
+    """The (table, row) -> (col, row) helper: scramble + offsets + 2D
+    owner agree with routing the scrambled global key directly, for every
+    key of every logical table."""
+    tables = (SparseTableConfig("a", vocab_size=48, dim=4),
+              SparseTableConfig("b", vocab_size=96, dim=4),
+              SparseTableConfig("c", vocab_size=16, dim=4))
+    spec = make_mega_table_spec(tables, num_shards=4)
+    tids, keys = [], []
+    for t, cfg in enumerate(tables):
+        tids.extend([t] * cfg.vocab_size)
+        keys.extend(range(cfg.vocab_size))
+    tids = np.asarray(tids, np.int32)
+    keys = np.asarray(keys, np.int32)
+    col, row = spec.owner_coords_2d(tids, keys, 2, 2)
+    col, row = np.asarray(col), np.asarray(row)
+    gkeys = np.concatenate([
+        np.asarray(spec.global_keys(t, np.arange(cfg.vocab_size,
+                                                 dtype=np.int32)))
+        for t, cfg in enumerate(tables)])
+    c_ref, r_ref = owner_of_2d(gkeys, spec.rows_per_shard, 2, 2)
+    np.testing.assert_array_equal(col, np.asarray(c_ref))
+    np.testing.assert_array_equal(row, np.asarray(r_ref))
+    # under the affine scramble every table spreads over ALL columns
+    for t in range(len(tables)):
+        assert len(set(col[tids == t].tolist())) == 2, t

@@ -9,6 +9,13 @@ CachedStore over the whole table). Multi-device half: the
 devices and proves the 4-shard matrix (lookahead x async_stages) plus
 checkpoint restore ACROSS shard counts — the 1/2-shard sweep is the
 ``multidev``-marked variant run by CI's dedicated job.
+
+2D sparse parallelism: the degenerate 1x1 grid runs in tier-1 both
+in-process (direct protocol use on a 2-axis mesh) and as the scenario's
+``grid1`` subprocess twin together with the cross-topology ``restore2d``
+checkpoints; the real 2x2 / 4x1 / 1x4 matrices are the ``multidev``-marked
+``grid`` section (CI also runs the 4x4 ``grid16`` section at 16 forced
+devices).
 """
 import os
 import subprocess
@@ -212,6 +219,35 @@ def test_sharded_retrieve_commit_roundtrip(case):
     assert store.commits_applied == [1]
 
 
+def test_sharded_store_2d_grid_s1(case):
+    """The 1x1 2D grid in process: a 2-axis mesh on one device builds a
+    ShardedStore whose grid ledger, 2D owner validation and per-axis wire
+    accounting all run through the same code paths as a real 2x2 — and
+    the degenerate grid must behave exactly like the flat S=1 store."""
+    mesh2 = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("a", "b"))
+    store = build_store("host", case.spec, None, mesh=mesh2,
+                        sparse_axes=("a", "b"))
+    assert store.shard_grid == (1, 1)
+    assert (store.grid_cols, store.grid_rows) == (1, 1)
+    table = init_table_state(jax.random.PRNGKey(2), case.spec, mesh2,
+                             ("a", "b"))
+    rows_before = np.asarray(table.rows)
+    store.ingest(table)
+    sent = np.iinfo(np.int32).max
+    keys = np.full((16,), sent, np.int32)
+    keys[:4] = [2, 9, 11, 30]
+    buf = store.retrieve(store.plan_from_window(
+        type("W", (), {"buffer_keys": jnp.asarray(keys)})()))
+    np.testing.assert_array_equal(np.asarray(buf.rows)[:4],
+                                  rows_before[[2, 9, 11, 30]])
+    m = store.metrics()
+    assert (m["shard_cols"], m["shard_rows"]) == (1.0, 1.0)
+    # both grid axes are size 1: the factored exchange ships nothing
+    # off-device on either hop, but the counters must exist
+    assert m["wire_bytes_ax0"] == 0.0 and m["wire_bytes_ax1"] == 0.0
+    assert m["wire_bytes"] > 0.0
+
+
 def test_save_checkpoint_store_kwarg(case, tmp_path):
     """Direct callers can hand the live store to save_checkpoint: the
     placeholder table is exported through the protocol instead of being
@@ -257,6 +293,27 @@ def test_store_multidev_core_and_restore():
     out = run_scenario("core", "restore")
     assert "STORE MULTIDEV OK" in out
     assert "restore 2->4 shards, cached" in out
+
+
+def test_store_multidev_2d_grid1_and_restore2d():
+    """Tier-1 2D twin: the degenerate 1x1 grid matrix plus the
+    cross-topology checkpoint proof (save at 2x2, continue bit-exactly on
+    the device trajectory at 4x1, 1x4 and the flat 1D tier)."""
+    out = run_scenario("grid1", "restore2d")
+    assert "STORE MULTIDEV OK" in out
+    assert "[1x1 cached k=3 async=True] bit-exact vs device: OK" in out
+    assert "[restore 2x2 -> 1D-4shard, cached] OK" in out
+
+
+@pytest.mark.multidev
+def test_store_multidev_2d_grid():
+    """The real 2D matrices (CI multidev job): 2x2, 4x1 and 1x4 grids
+    replay their same-mesh device runs bit for bit across lookahead x
+    async, with the per-axis wire ledger checked inside the section."""
+    out = run_scenario("grid")
+    assert "STORE MULTIDEV OK" in out
+    assert "[2x2 cached k=3 async=True] bit-exact vs device: OK" in out
+    assert "[1x4 host k=3 async=True] bit-exact vs device: OK" in out
 
 
 @pytest.mark.multidev
